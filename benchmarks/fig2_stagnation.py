@@ -1,0 +1,40 @@
+"""Figure 2: stagnation of GD with RN + binary8 on f(x) = (x-1024)²,
+and its diagnosis via τ_k ≤ u/2 (paper §3.2)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import formats, gd
+
+F8 = formats.BINARY8
+
+
+def run(steps: int = 400, t: float = 0.03):
+    f = lambda x: jnp.sum((x - 1024.0) ** 2)
+    g = lambda x: 2.0 * (x - 1024.0)
+    x0 = jnp.array([512.0], jnp.float32)
+
+    t0 = time.time()
+    cfg_rn = gd.make_config("binary8", "rn", "rn", "rn")
+    fs_rn, x_rn = gd.run_gd(f, g, x0, t, cfg_rn, steps, param_fmt="binary8")
+    cfg_sr = gd.make_config("binary8", "rn", "sr", "sr")
+    sr_runs = [np.asarray(gd.run_gd(f, g, x0, t, cfg_sr, steps,
+                                    key=jax.random.PRNGKey(s),
+                                    param_fmt="binary8")[0])
+               for s in range(10)]
+    wall = time.time() - t0
+
+    tau = float(gd.tau(x_rn, jnp.abs(t * g(x_rn)), F8))
+    rows = [
+        ("fig2/rn_final_f", wall * 1e6 / steps, float(fs_rn[-1])),
+        ("fig2/rn_tau_k", 0.0, tau),
+        ("fig2/rn_stagnated", 0.0, float(tau <= F8.u / 2)),
+        ("fig2/sr_mean_final_f", 0.0, float(np.mean([r[-1] for r in sr_runs]))),
+        ("fig2/sr_over_rn_ratio", 0.0,
+         float(np.mean([r[-1] for r in sr_runs]) / float(fs_rn[-1]))),
+    ]
+    return rows

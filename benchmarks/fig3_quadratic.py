@@ -1,0 +1,73 @@
+"""Figure 3: quadratic optimization, bfloat16 — E[f] for SR(8b)+SR(8c) vs
+SR(8b)+signed-SRε(8c, ε=0.4) against the binary32 baseline and the
+Theorem-2 bound."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import gd, rounding, theory
+from benchmarks import paper_models as pm
+
+
+def _cfgs():
+    cfg_sr = gd.make_config("bfloat16", "rn", "sr", "sr")
+    cfg_signed = gd.GDRounding(
+        grad=rounding.spec("bfloat16", "rn"),
+        mul=rounding.spec("bfloat16", "sr"),
+        sub=rounding.spec("bfloat16", "signed_sr_eps", 0.4),
+        sub_v="grad")
+    return cfg_sr, cfg_signed
+
+
+def run(steps_s1: int = 2000, steps_s2: int = 3000, sims: int = 5):
+    rows = []
+    t0 = time.time()
+    cfg_sr, cfg_signed = _cfgs()
+
+    # ---------------- Setting I
+    diag, x0, xstar, t, L = pm.setting1()
+    exact = pm.run_quadratic_diag(diag, x0, xstar, t, gd.fp32_config(),
+                                  steps_s1)
+    sr = np.mean([pm.run_quadratic_diag(diag, x0, xstar, t, cfg_sr, steps_s1,
+                                        seed=s, param_fmt="bfloat16")
+                  for s in range(sims)], axis=0)
+    sg = np.mean([pm.run_quadratic_diag(diag, x0, xstar, t, cfg_signed,
+                                        steps_s1, seed=s,
+                                        param_fmt="bfloat16")
+                  for s in range(sims)], axis=0)
+    bound = theory.exact_rate_bound(L, t, steps_s1,
+                                    float(np.linalg.norm(x0 - xstar)))
+    rows += [
+        ("fig3a/binary32_final_f", 0.0, float(exact[-1])),
+        ("fig3a/bf16_sr_final_f", 0.0, float(sr[-1])),
+        ("fig3a/bf16_signed_sreps_final_f", 0.0, float(sg[-1])),
+        ("fig3a/thm2_bound_final", 0.0, float(bound)),
+        ("fig3a/sr_within_bound", 0.0, float(sr[-1] <= bound * 1.05)),
+        ("fig3a/signed_speedup_vs_sr", 0.0, float(sr[-1] / max(sg[-1], 1e-30))),
+    ]
+
+    # ---------------- Setting II
+    A, x0, xstar, t, L = pm.setting2()
+    exact2 = pm.run_quadratic_full(A, x0, xstar, t, gd.fp32_config(),
+                                   steps_s2)
+    sr2 = np.mean([pm.run_quadratic_full(A, x0, xstar, t, cfg_sr, steps_s2,
+                                         seed=s, param_fmt="bfloat16")
+                   for s in range(sims)], axis=0)
+    sg2 = np.mean([pm.run_quadratic_full(A, x0, xstar, t, cfg_signed,
+                                         steps_s2, seed=s,
+                                         param_fmt="bfloat16")
+                   for s in range(sims)], axis=0)
+    wall = time.time() - t0
+    rows += [
+        ("fig3b/binary32_final_f", wall * 1e6 / (steps_s1 + steps_s2),
+         float(exact2[-1])),
+        ("fig3b/bf16_sr_final_f", 0.0, float(sr2[-1])),
+        ("fig3b/bf16_signed_sreps_final_f", 0.0, float(sg2[-1])),
+        ("fig3b/signed_speedup_vs_sr", 0.0,
+         float(sr2[-1] / max(sg2[-1], 1e-30))),
+        ("fig3b/signed_beats_binary32", 0.0, float(sg2[-1] < exact2[-1])),
+    ]
+    return rows

@@ -1,0 +1,68 @@
+"""Kernel microbenchmarks.
+
+Wall-times on this CPU container are *not* TPU performance; what we measure
+here is (a) the pure-jnp rounded-update path vs the fp32 baseline (the
+software-emulation overhead a user pays on CPU), (b) interpret-mode kernel
+correctness timing, and (c) the derived HBM-traffic model of the fused
+Pallas update (bytes/element unfused vs fused) that drives the TPU roofline
+argument in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gd, rounding
+from repro.optim import base as optim_base
+
+
+def _time(fn, *args, iters=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def run(n: int = 1 << 20):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (n,), jnp.float32)
+    g = jax.random.normal(jax.random.fold_in(key, 1), (n,), jnp.float32)
+
+    cfg = gd.GDRounding(grad=rounding.spec("binary8", "sr"),
+                        mul=rounding.spec("binary8", "sr"),
+                        sub=rounding.spec("binary8", "signed_sr_eps", 0.1),
+                        sub_v="grad")
+
+    upd_rounded = jax.jit(lambda x_, g_, k_: optim_base.rounded_param_update(
+        x_, g_, 0.01, cfg, k_))
+    upd_fp32 = jax.jit(lambda x_, g_: x_ - 0.01 * g_)
+
+    us_rounded = _time(upd_rounded, x, g, key)
+    us_fp32 = _time(upd_fp32, x, g)
+
+    cast = jax.jit(lambda x_, k_: rounding.round_to_format(
+        x_, "binary8", "sr", key=k_))
+    us_cast = _time(cast, x, key)
+
+    # HBM-traffic model (bytes per element, f32 carrier):
+    #   unfused eq.-8 chain: read g, write ĝ, read ĝ, write upd, read x,
+    #   read upd, write z, read z, write x'  (+3 bits streams)  = 48 B/elt
+    #   fused Pallas kernel: read x, read g, 3 bits streams, write x' = 24
+    #   fused + on-core PRNG (TPU): read x, read g, write x'       = 12
+    rows = [
+        ("kernel/update_rounded_us_per_Melt", us_rounded / (n / 1e6),
+         us_rounded / us_fp32),
+        ("kernel/update_fp32_us_per_Melt", us_fp32 / (n / 1e6), 1.0),
+        ("kernel/sr_cast_us_per_Melt", us_cast / (n / 1e6), 0.0),
+        ("kernel/traffic_unfused_B_per_elt", 0.0, 48.0),
+        ("kernel/traffic_fused_B_per_elt", 0.0, 24.0),
+        ("kernel/traffic_fused_prng_B_per_elt", 0.0, 12.0),
+        ("kernel/fusion_speedup_bound", 0.0, 48.0 / 12.0),
+    ]
+    return rows

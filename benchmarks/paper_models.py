@@ -1,0 +1,220 @@
+"""The paper's §5 experiment models, implemented with rounded arithmetic.
+
+* quadratic objectives (Settings I/II of §5.1 and the Fig.-2 stagnation
+  example);
+* multinomial logistic regression (MLR, §5.2) — gradients evaluated with
+  chunk-rounded matmuls (accumulated σ₁, eq. 9), update via the 3-step
+  rounded path (eq. 8);
+* two-layer NN (§5.3) — 784→100 ReLU → 1 sigmoid, binary cross-entropy.
+
+MNIST is replaced by the deterministic synthetic set (DESIGN.md §3); all
+claims checked here are scheme *orderings*, which are dataset-robust.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gd, qarith, rounding
+from repro.core.rounding import RoundingSpec
+
+
+# ------------------------------------------------------------- quadratics --
+def setting1():
+    """§5.1 Setting I: A = diag(1e-3,…,1e-3, 1), x0 near x* except last."""
+    n = 1000
+    diag = np.full(n, 1e-3, np.float32)
+    diag[-1] = 1.0
+    x0 = np.full(n, 1e-3, np.float32)
+    x0[-1] = 1.0
+    xstar = np.zeros(n, np.float32)
+    t = 1e-5
+    L = 1.0
+    return jnp.asarray(diag), jnp.asarray(x0), jnp.asarray(xstar), t, L
+
+
+def setting2(seed: int = 0):
+    """§5.1 Setting II: dense symmetric A, eigenvalues 1..1000."""
+    n = 1000
+    rng = np.random.default_rng(seed)
+    q, _ = np.linalg.qr(rng.normal(size=(n, n)))
+    eig = np.arange(1, n + 1, dtype=np.float32)
+    A = (q * eig) @ q.T
+    A = ((A + A.T) / 2).astype(np.float32)
+    x0 = np.arange(1000, 0, -1, dtype=np.float32)
+    xstar = np.full(n, 2.0 ** -4, np.float32)
+    t = 1e-3
+    L = 1000.0
+    return jnp.asarray(A), jnp.asarray(x0), jnp.asarray(xstar), t, L
+
+
+def run_quadratic_diag(diag, x0, xstar, t, cfg: gd.GDRounding, steps: int,
+                       seed: int = 0, param_fmt=None):
+    f = lambda x: 0.5 * jnp.sum(diag * (x - xstar) ** 2)
+    g = lambda x: diag * (x - xstar)
+    fs, _ = gd.run_gd(f, g, x0, t, cfg, steps, key=jax.random.PRNGKey(seed),
+                      param_fmt=param_fmt)
+    return np.asarray(fs)
+
+
+def run_quadratic_full(A, x0, xstar, t, cfg: gd.GDRounding, steps: int,
+                       seed: int = 0, param_fmt=None):
+    f = lambda x: 0.5 * (x - xstar) @ (A @ (x - xstar))
+    g = lambda x: A @ (x - xstar)
+    fs, _ = gd.run_gd(f, g, x0, t, cfg, steps, key=jax.random.PRNGKey(seed),
+                      param_fmt=param_fmt)
+    return np.asarray(fs)
+
+
+# -------------------------------------------------------------------- MLR --
+@dataclasses.dataclass
+class MLRTrainer:
+    """Full-batch multinomial logistic regression with rounded arithmetic.
+
+    ``accum="result"`` (default) models σ₁ as a single rounding of each
+    matmul result; ``accum="chunk"`` rounds every partial accumulation
+    (eq.-9's accumulated error — much larger at u=2⁻³ on dense inputs).
+    """
+
+    cfg: gd.GDRounding
+    t: float
+    grad_spec: Optional[RoundingSpec] = None   # matmul rounding grid
+    accum: str = "result"
+    chunk: int = 64
+
+    def init(self, d: int = 784, classes: int = 10):
+        return jnp.zeros((d, classes), jnp.float32)
+
+    def grad(self, W, X, Y1h, key):
+        """∇ = Xᵀ(softmax(XW) − Y)/N with rounded matmuls (σ₁)."""
+        if self.grad_spec is None or self.grad_spec.is_identity:
+            P = jax.nn.softmax(X @ W, axis=-1)
+            return X.T @ (P - Y1h) / X.shape[0]
+        k1, k2 = jax.random.split(key)
+        Z = qarith.qmatmul(X, W, self.grad_spec, key=k1, accum=self.accum,
+                           chunk=self.chunk)
+        P = jax.nn.softmax(Z, axis=-1)
+        G = qarith.qmatmul(X.T, (P - Y1h).astype(jnp.float32) / X.shape[0],
+                           self.grad_spec, key=k2, accum=self.accum,
+                           chunk=self.chunk)
+        return G
+
+    def epoch(self, W, X, Y1h, key):
+        kg, ku = jax.random.split(key)
+        g = self.grad(W, X, Y1h, kg)
+        return gd.gd_step(W, g, self.t, self.cfg, ku).x_new
+
+    def test_error(self, W, Xte, yte):
+        pred = jnp.argmax(Xte @ W, axis=-1)
+        return float((pred != yte).mean())
+
+    def train(self, X, y, Xte, yte, epochs: int, seed: int = 0,
+              eval_every: int = 10, param_fmt=None):
+        W = self.init(X.shape[1], int(y.max()) + 1)
+        if param_fmt is not None:
+            W = rounding.round_to_format(W, param_fmt, "rn")
+        Y1h = jax.nn.one_hot(y, int(y.max()) + 1)
+        key = jax.random.PRNGKey(seed)
+        errs = []
+        step = jax.jit(self.epoch)
+        for e in range(epochs):
+            key, sub = jax.random.split(key)
+            W = step(W, X, Y1h, sub)
+            if (e + 1) % eval_every == 0 or e == epochs - 1:
+                errs.append((e + 1, self.test_error(W, Xte, yte)))
+        return W, errs
+
+
+# ---------------------------------------------------------- two-layer NN --
+@dataclasses.dataclass
+class TwoLayerNNTrainer:
+    """§5.3: 784 → 100 (ReLU) → 1 (sigmoid), BCE loss, rounded GD."""
+
+    cfg: gd.GDRounding
+    t: float
+    grad_spec: Optional[RoundingSpec] = None
+    accum: str = "result"
+    chunk: int = 64
+    hidden: int = 100
+
+    def init(self, key, d: int = 784):
+        k1, _ = jax.random.split(key)
+        # Xavier init (paper §5.3); biases zero
+        w1 = jax.random.normal(k1, (d, self.hidden)) * np.sqrt(
+            2.0 / (d + self.hidden))
+        return {"w1": w1.astype(jnp.float32),
+                "b1": jnp.zeros((self.hidden,), jnp.float32),
+                "w2": jnp.zeros((self.hidden, 1), jnp.float32),
+                "b2": jnp.zeros((1,), jnp.float32)}
+
+    def _forward(self, params, X, key):
+        if self.grad_spec is None or self.grad_spec.is_identity:
+            H = jax.nn.relu(X @ params["w1"] + params["b1"])
+            logits = H @ params["w2"] + params["b2"]
+            return H, logits
+        k1, k2 = jax.random.split(key)
+        Z1 = qarith.qmatmul(X, params["w1"], self.grad_spec, key=k1,
+                            accum=self.accum, chunk=self.chunk) + params["b1"]
+        H = jax.nn.relu(Z1)
+        logits = qarith.qmatmul(H, params["w2"], self.grad_spec, key=k2,
+                                accum=self.accum, chunk=self.chunk) + params["b2"]
+        return H, logits
+
+    def grad(self, params, X, y, key):
+        kf, kb1, kb2 = jax.random.split(key, 3)
+        H, logits = self._forward(params, X, kf)
+        p = jax.nn.sigmoid(logits[:, 0])
+        dlogit = ((p - y) / X.shape[0])[:, None]          # BCE w/ sigmoid
+        spec = self.grad_spec if self.grad_spec is not None else \
+            rounding.IDENTITY
+        if spec.is_identity:
+            gw2 = H.T @ dlogit
+            dh = dlogit @ params["w2"].T
+            dz1 = dh * (H > 0)
+            gw1 = X.T @ dz1
+        else:
+            gw2 = qarith.qmatmul(H.T, dlogit, spec, key=kb2, accum=self.accum,
+                                 chunk=self.chunk)
+            dh = dlogit @ params["w2"].T
+            dz1 = dh * (H > 0)
+            gw1 = qarith.qmatmul(X.T, dz1, spec, key=kb1, accum=self.accum,
+                                 chunk=self.chunk)
+        return {"w1": gw1, "b1": dz1.sum(0), "w2": gw2,
+                "b2": dlogit.sum(0)}
+
+    def epoch(self, params, X, y, key):
+        kg, ku = jax.random.split(key)
+        g = self.grad(params, X, y, kg)
+        ks = jax.random.split(ku, 4)
+        return {
+            name: gd.gd_step(params[name], g[name], self.t, self.cfg,
+                             ks[i]).x_new
+            for i, name in enumerate(("w1", "b1", "w2", "b2"))}
+
+    def test_error(self, params, Xte, yte):
+        # evaluation in full precision (the paper evaluates test error on
+        # the stored low-precision weights)
+        H = jax.nn.relu(Xte @ params["w1"] + params["b1"])
+        p = jax.nn.sigmoid((H @ params["w2"] + params["b2"])[:, 0])
+        pred = (p >= 0.5).astype(jnp.float32)
+        return float((pred != yte).mean())
+
+    def train(self, X, y, Xte, yte, epochs: int, seed: int = 0,
+              eval_every: int = 5, param_fmt=None):
+        params = self.init(jax.random.PRNGKey(seed + 1000))
+        if param_fmt is not None:
+            params = {k: rounding.round_to_format(v, param_fmt, "rn")
+                      for k, v in params.items()}
+        key = jax.random.PRNGKey(seed)
+        errs = []
+        step = jax.jit(self.epoch)
+        for e in range(epochs):
+            key, sub = jax.random.split(key)
+            params = step(params, X, y, sub)
+            if (e + 1) % eval_every == 0 or e == epochs - 1:
+                errs.append((e + 1, self.test_error(params, Xte, yte)))
+        return params, errs

@@ -1,0 +1,36 @@
+"""Roofline table from the dry-run sweep output (results_singlepod.json)."""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results_singlepod.json")
+
+
+def run(path: str = RESULTS):
+    rows = []
+    if not os.path.exists(path):
+        rows.append(("roofline/missing_results_json", 0.0, 0.0))
+        return rows
+    with open(path) as f:
+        data = json.load(f)
+    n_ok = n_skip = n_err = 0
+    for cell in data:
+        tag = f"{cell['arch']}__{cell['shape']}"
+        if "skipped" in cell:
+            n_skip += 1
+            continue
+        if "error" in cell:
+            n_err += 1
+            rows.append((f"roofline/{tag}_ERROR", 0.0, 0.0))
+            continue
+        n_ok += 1
+        rows.append((f"roofline/{tag}_step_s", 0.0,
+                     max(cell["t_compute_s"], cell["t_memory_s"],
+                         cell["t_collective_s"])))
+        rows.append((f"roofline/{tag}_frac", 0.0, cell["roofline_frac"]))
+    rows.insert(0, ("roofline/cells_ok", 0.0, float(n_ok)))
+    rows.insert(1, ("roofline/cells_skipped_documented", 0.0, float(n_skip)))
+    rows.insert(2, ("roofline/cells_error", 0.0, float(n_err)))
+    return rows

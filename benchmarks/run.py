@@ -1,0 +1,72 @@
+"""Benchmark aggregator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``--quick`` shrinks epochs /
+simulation counts for smoke use; the full settings reproduce the paper's
+figures (with the synthetic-MNIST substitution documented in DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def _emit(rows):
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")
+        sys.stdout.flush()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sims/epochs (CI-sized)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args, _ = ap.parse_known_args()
+    q = args.quick
+
+    from benchmarks import (fig2_stagnation, fig3_quadratic, fig4_mlr,
+                            fig5_mlr_lr, fig6_nn, kernel_bench,
+                            roofline_report, table_formats)
+
+    benches = {
+        "table2": lambda: table_formats.run(),
+        "fig2": lambda: fig2_stagnation.run(steps=200 if q else 400),
+        "fig3": lambda: fig3_quadratic.run(
+            steps_s1=400 if q else 2000, steps_s2=600 if q else 3000,
+            sims=2 if q else 5),
+        "fig4": lambda: fig4_mlr.run(
+            epochs=40 if q else 150, sims=1 if q else 2,
+            n_train=1500 if q else 3000, n_test=500 if q else 800),
+        "fig5": lambda: fig5_mlr_lr.run(
+            epochs=40 if q else 150, sims=1 if q else 1,
+            n_train=1500 if q else 3000, n_test=500 if q else 800),
+        "fig6": lambda: fig6_nn.run(
+            epochs=15 if q else 50, sims=1 if q else 2,
+            n_train=1000 if q else 3000, n_test=400 if q else 800),
+        "kernels": lambda: kernel_bench.run(n=(1 << 18) if q else (1 << 20)),
+        "roofline": lambda: roofline_report.run(),
+    }
+    only = set(args.only.split(",")) if args.only else None
+
+    failures = 0
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            rows = fn()
+            _emit(rows)
+            print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name}/FAILED,0,0")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

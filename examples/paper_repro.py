@@ -1,0 +1,23 @@
+"""Reproduce the paper's headline results (quick-sized).
+
+Run:  PYTHONPATH=src python examples/paper_repro.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+from benchmarks import fig2_stagnation, fig3_quadratic
+
+
+def show(rows):
+    for name, _, derived in rows:
+        print(f"  {name:<42} {derived}")
+
+
+print("Figure 2 — stagnation of RN vs SR (binary8):")
+show(fig2_stagnation.run(steps=300))
+
+print("\nFigure 3 — quadratics (bfloat16): SR tracks fp32; "
+      "signed-SRε accelerates:")
+show(fig3_quadratic.run(steps_s1=600, steps_s2=800, sims=2))

@@ -1,0 +1,53 @@
+"""Quickstart: the paper's rounding schemes in 60 seconds.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import formats, gd, rounding
+
+key = jax.random.PRNGKey(0)
+
+# ---------------------------------------------------------------- formats --
+f8 = formats.get_format("binary8")        # E5M2: u = 2^-3
+print(f"binary8: u={f8.u}, xmin={f8.xmin:.2e}, xmax={f8.xmax:.2e}")
+
+# ------------------------------------------------------- rounding schemes --
+x = jnp.float32(1.3)                      # sits between 1.25 and 1.5
+lo, hi = rounding.floor_ceil(x, f8)
+print(f"\nx=1.3 brackets on the binary8 grid: [{float(lo)}, {float(hi)}]")
+
+for mode, kw in [("rn", {}), ("sr", {}), ("sr_eps", dict(eps=0.3)),
+                 ("signed_sr_eps", dict(eps=0.3, v=-1.0))]:
+    keys = jax.random.split(key, 4000)
+    ys = jax.vmap(lambda k: rounding.round_to_format(
+        x, f8, mode, key=k, **kw))(keys)
+    print(f"  {mode:>14}: E[fl(x)] = {float(ys.mean()):.4f}  "
+          f"(bias {float(ys.mean() - x):+.4f})")
+# SR is unbiased; SRε biases away from zero; signed-SRε(v=-1) biases +.
+
+# -------------------------------------------- stagnation and its escape ---
+print("\nGD on f(x)=(x-1024)^2 with binary8, t=0.03, x0=512:")
+f = lambda x: jnp.sum((x - 1024.0) ** 2)
+g = lambda x: 2.0 * (x - 1024.0)
+x0 = jnp.array([512.0], jnp.float32)
+
+for name, cfg in [
+    ("RN  (stagnates)", gd.make_config("binary8", "rn", "rn", "rn")),
+    ("SR  (escapes)", gd.make_config("binary8", "rn", "sr", "sr")),
+    ("signed-SRε(0.1)", gd.GDRounding(
+        grad=rounding.spec("binary8", "rn"),
+        mul=rounding.spec("binary8", "sr"),
+        sub=rounding.spec("binary8", "signed_sr_eps", 0.1),
+        sub_v="grad")),
+]:
+    fs, xf = gd.run_gd(f, g, x0, 0.03, cfg, 300, key=key,
+                       param_fmt="binary8")
+    print(f"  {name:>18}: f after 300 steps = {float(fs[-1]):>10.1f}  "
+          f"(x = {float(xf[0]):.0f})")
+
+tau = gd.tau(x0, jnp.abs(0.03 * g(x0)), f8)
+print(f"\nstagnation diagnostic: tau_k = {float(tau):.4f} "
+      f"(RN freezes when tau <= u/2 = {f8.u / 2})")

@@ -1,0 +1,15 @@
+"""Batched serving example: prefill + cached decode across architecture
+families (dense GQA, MoE, SSM, hybrid).
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import run
+
+for arch in ("tinyllama-1.1b", "qwen3-moe-30b-a3b", "rwkv6-7b",
+             "zamba2-1.2b"):
+    print(f"\n=== {arch} (reduced) ===")
+    run(arch, reduced=True, batch=2, prompt_len=12, gen=8)

@@ -1,0 +1,8 @@
+"""repro — stochastic-rounding low-precision training framework (JAX/TPU).
+
+Reproduction + scale-up of Xia, Massei, Hochstenbach, Koren (2022):
+"On the influence of stochastic roundoff errors and their bias on the
+convergence of the gradient descent method with low-precision
+floating-point computation".
+"""
+__version__ = "0.1.0"

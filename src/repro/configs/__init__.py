@@ -1,0 +1,79 @@
+"""Architecture registry: the 10 assigned configs + paper-experiment configs.
+
+``get_config(name)`` returns the full published config; ``reduced(cfg)``
+shrinks any config to a CPU-smoke-testable size *of the same family* (same
+block plan structure, tiny dims).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs.base import (MLAConfig, ModelConfig, MoEConfig, RWKVConfig,
+                                SSMConfig)
+
+from repro.configs.smollm_360m import CONFIG as SMOLLM_360M
+from repro.configs.gemma_7b import CONFIG as GEMMA_7B
+from repro.configs.tinyllama_1_1b import CONFIG as TINYLLAMA_1_1B
+from repro.configs.phi3_medium_14b import CONFIG as PHI3_MEDIUM_14B
+from repro.configs.rwkv6_7b import CONFIG as RWKV6_7B
+from repro.configs.zamba2_1_2b import CONFIG as ZAMBA2_1_2B
+from repro.configs.deepseek_v2_236b import CONFIG as DEEPSEEK_V2_236B
+from repro.configs.qwen3_moe_30b_a3b import CONFIG as QWEN3_MOE_30B_A3B
+from repro.configs.qwen2_vl_7b import CONFIG as QWEN2_VL_7B
+from repro.configs.seamless_m4t_medium import CONFIG as SEAMLESS_M4T_MEDIUM
+
+REGISTRY: Dict[str, ModelConfig] = {
+    c.name: c for c in [
+        SMOLLM_360M, GEMMA_7B, TINYLLAMA_1_1B, PHI3_MEDIUM_14B, RWKV6_7B,
+        ZAMBA2_1_2B, DEEPSEEK_V2_236B, QWEN3_MOE_30B_A3B, QWEN2_VL_7B,
+        SEAMLESS_M4T_MEDIUM,
+    ]
+}
+
+ARCH_NAMES = sorted(REGISTRY)
+
+
+def get_config(name: str) -> ModelConfig:
+    try:
+        return REGISTRY[name]
+    except KeyError as exc:
+        raise ValueError(f"unknown arch {name!r}; known: {ARCH_NAMES}") from exc
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """Tiny same-family config for CPU smoke tests."""
+    changes = dict(
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads < cfg.n_heads else 4,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=128,
+        layer_plan=None,
+        encoder_layers=2 if cfg.encoder_layers else 0,
+        frontend_len=4 if cfg.frontend else 0,
+        sliding_window=min(cfg.sliding_window, 8) if cfg.sliding_window else 0,
+        remat="none",
+    )
+    if cfg.moe is not None:
+        changes["moe"] = dataclasses.replace(
+            cfg.moe, n_experts=4, top_k=2, d_expert=32,
+            n_shared=min(cfg.moe.n_shared, 1),
+            first_dense=min(cfg.moe.first_dense, 1))
+    if cfg.mla is not None:
+        changes["mla"] = MLAConfig(kv_lora_rank=16, q_lora_rank=24,
+                                   qk_nope_dim=16, qk_rope_dim=8,
+                                   v_head_dim=16)
+    if cfg.ssm is not None:
+        changes["ssm"] = dataclasses.replace(cfg.ssm, state_dim=16,
+                                             head_dim=16, chunk=8)
+    if cfg.rwkv is not None:
+        changes["rwkv"] = dataclasses.replace(cfg.rwkv, head_dim=16,
+                                              decay_lora=8, chunk=8)
+        changes["d_ff"] = 96
+    if cfg.family == "hybrid":
+        changes["n_layers"] = 4
+        changes["shared_attn_period"] = 2
+    return dataclasses.replace(cfg, **changes)

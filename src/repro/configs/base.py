@@ -1,0 +1,179 @@
+"""Model configuration dataclasses.
+
+One ``ModelConfig`` describes any architecture in the assigned pool: dense
+decoder LMs (GQA/MQA), MoE (shared+routed), MLA, SSM (Mamba2 / RWKV6),
+hybrid plans (Zamba2), encoder–decoder (Seamless), and modality-stub
+variants (Qwen2-VL / Seamless audio).  ``layer_plan`` drives the block
+sequence; homogeneous runs are executed with scan-over-layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int              # per-expert FFN width
+    n_shared: int = 0          # always-on shared experts
+    capacity_factor: float = 1.25
+    router_noise: float = 0.0
+    first_dense: int = 0       # leading layers with a dense FFN instead
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 1536
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # absorbed-matmul decode: fold wkv_b into the query/output projections
+    # so attention runs in the compressed (kv_lora) space — no per-step
+    # decompression of the whole context (§Perf optimization)
+    absorb: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 64        # N (per-head state)
+    conv_width: int = 4
+    expand: int = 2            # d_inner = expand * d_model
+    head_dim: int = 64         # Mamba2 P
+    chunk: int = 128           # SSD chunk length
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    head_dim: int = 64
+    decay_lora: int = 64       # rank of the data-dependent decay MLP
+    chunk: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None        # default d_model // n_heads
+    ffn_act: str = "swiglu"               # swiglu | geglu | gelu | relu_sq
+    norm: str = "rmsnorm"
+    pos: str = "rope"                     # rope | mrope | none
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rwkv: Optional[RWKVConfig] = None
+    # layer plan entries: "attn" (attn+ffn), "attn_dense" (attn + dense ffn
+    # in an MoE model), "mamba", "rwkv", "shared_attn" (hybrid shared block)
+    layer_plan: Optional[Tuple[str, ...]] = None
+    shared_attn_period: int = 0           # hybrid: insert shared attn every k
+    # encoder-decoder
+    encoder_layers: int = 0
+    # modality frontend stub: number of precomputed embedding positions
+    frontend: Optional[str] = None        # None | vision | audio
+    frontend_len: int = 0                 # patches/frames in the stub input
+    # serving
+    sliding_window: int = 0               # 0 = full attention
+    # remat policy for the train step: none | dots | full
+    remat: str = "full"
+    # sub-quadratic? (drives long_500k applicability)
+    subquadratic: bool = False
+    # attention implementation for train/prefill: flash (blocked, online
+    # softmax; python-unrolled so dry-run cost analysis sees every FLOP) or
+    # naive (materialized scores; the §Perf baseline)
+    attn_impl: str = "flash"
+    attn_q_block: int = 1024
+    attn_kv_block: int = 1024
+    # scan-over-layers (compile-time O(segments)); analysis probes unroll
+    scan_layers: bool = True
+    # MoE serving layout: experts over `data` + F-TP over `model` (token
+    # all-to-all instead of per-step expert-weight gathers) — set
+    # automatically for decode lowering (§Perf iteration 2C)
+    moe_serve_layout: bool = False
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    def plan(self) -> Tuple[str, ...]:
+        if self.layer_plan is not None:
+            return self.layer_plan
+        if self.family == "ssm" and self.rwkv is not None:
+            return ("rwkv",) * self.n_layers
+        if self.family == "ssm":
+            return ("mamba",) * self.n_layers
+        if self.family == "hybrid":
+            out = []
+            for i in range(self.n_layers):
+                out.append("mamba")
+                if self.shared_attn_period and \
+                   (i + 1) % self.shared_attn_period == 0:
+                    out.append("shared_attn")
+            return tuple(out)
+        if self.moe is not None:
+            return ("attn_dense",) * self.moe.first_dense + \
+                   ("attn",) * (self.n_layers - self.moe.first_dense)
+        return ("attn",) * self.n_layers
+
+    @property
+    def param_count_estimate(self) -> float:
+        """Rough N for roofline MODEL_FLOPS = 6·N·D."""
+        d, f, v, L = self.d_model, self.d_ff, self.vocab_size, self.n_layers
+        hd = self.resolved_head_dim
+        if self.mla is not None:
+            m = self.mla
+            attn = (d * m.q_lora_rank
+                    + m.q_lora_rank * self.n_heads * (m.qk_nope_dim + m.qk_rope_dim)
+                    + d * (m.kv_lora_rank + m.qk_rope_dim)
+                    + m.kv_lora_rank * self.n_heads * (m.qk_nope_dim + m.v_head_dim)
+                    + self.n_heads * m.v_head_dim * d)
+        else:
+            attn = d * hd * (self.n_heads + 2 * self.n_kv_heads) \
+                + self.n_heads * hd * d
+        n_glu = 3 if self.ffn_act in ("swiglu", "geglu") else 2
+        ffn = n_glu * d * f
+        if self.moe is not None:
+            moe_ffn = (self.moe.n_experts + self.moe.n_shared) * 3 * d * self.moe.d_expert
+            dense_layers = self.moe.first_dense
+            core = (L - dense_layers) * (attn + moe_ffn) + dense_layers * (attn + ffn)
+        elif self.family == "ssm" and self.rwkv is None:
+            di = self.ssm.expand * d
+            core = L * (d * 2 * di + di * d + 3 * di * self.ssm.state_dim)
+        elif self.rwkv is not None:
+            core = L * (4 * d * d + d * self.rwkv.decay_lora * 2 + 4 * d * f // 2)
+        else:
+            core = L * (attn + ffn)
+        embed = v * d * (1 if self.tie_embeddings else 2)
+        enc = self.encoder_layers * (attn + ffn)
+        return float(core + embed + enc)
+
+    @property
+    def active_param_count_estimate(self) -> float:
+        """N_active for MoE models (routed top-k + shared only)."""
+        if self.moe is None:
+            return self.param_count_estimate
+        d, L = self.d_model, self.n_layers
+        hd = self.resolved_head_dim
+        if self.mla is not None:
+            m = self.mla
+            attn = (d * m.q_lora_rank
+                    + m.q_lora_rank * self.n_heads * (m.qk_nope_dim + m.qk_rope_dim)
+                    + d * (m.kv_lora_rank + m.qk_rope_dim)
+                    + m.kv_lora_rank * self.n_heads * (m.qk_nope_dim + m.v_head_dim)
+                    + self.n_heads * m.v_head_dim * d)
+        else:
+            attn = d * hd * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * hd * d
+        active_ffn = (self.moe.top_k + self.moe.n_shared) * 3 * d * self.moe.d_expert
+        dense = self.moe.first_dense
+        core = (L - dense) * (attn + active_ffn) + dense * (attn + 3 * d * self.d_ff)
+        embed = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return float(core + embed)

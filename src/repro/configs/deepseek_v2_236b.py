@@ -1,0 +1,22 @@
+"""deepseek-v2-236b — MLA (kv_lora=512) + MoE 160 routed top-6 + 2 shared.
+[arXiv:2405.04434; hf]  60L d_model=5120 128H vocab=102400; expert width
+1536; first layer dense (d_ff=12288)."""
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    n_layers=60,
+    d_model=5120,
+    n_heads=128,
+    n_kv_heads=128,
+    head_dim=128,
+    d_ff=12288,               # the first (dense) layer's FFN width
+    vocab_size=102400,
+    ffn_act="swiglu",
+    pos="rope",
+    mla=MLAConfig(kv_lora_rank=512, q_lora_rank=1536, qk_nope_dim=128,
+                  qk_rope_dim=64, v_head_dim=128),
+    moe=MoEConfig(n_experts=160, top_k=6, d_expert=1536, n_shared=2,
+                  capacity_factor=1.25, first_dense=1),
+)

@@ -1,0 +1,21 @@
+"""qwen2-vl-7b — M-RoPE, dynamic-resolution VLM backbone.
+[arXiv:2409.12191; hf]  28L d_model=3584 28H (GQA kv=4) d_ff=18944
+vocab=152064.  The vision frontend is a STUB: input_specs provides
+precomputed patch embeddings (B, frontend_len, d_model)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b",
+    family="vlm",
+    n_layers=28,
+    d_model=3584,
+    n_heads=28,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=18944,
+    vocab_size=152064,
+    ffn_act="swiglu",
+    pos="mrope",
+    frontend="vision",
+    frontend_len=256,
+)

@@ -1,0 +1,20 @@
+"""rwkv6-7b ("Finch") — attention-free, data-dependent decay.
+[arXiv:2404.05892; hf]  32L d_model=4096 d_ff=14336 vocab=65536.
+Sub-quadratic: runs the long_500k cell."""
+from repro.configs.base import ModelConfig, RWKVConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b",
+    family="ssm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=64,            # 4096 / head_dim 64
+    n_kv_heads=64,
+    head_dim=64,
+    d_ff=14336,
+    vocab_size=65536,
+    ffn_act="relu_sq",
+    pos="none",
+    rwkv=RWKVConfig(head_dim=64, decay_lora=64, chunk=128),
+    subquadratic=True,
+)

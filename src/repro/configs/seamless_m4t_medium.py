@@ -1,0 +1,22 @@
+"""seamless-m4t-medium — encoder-decoder, multimodal (audio frontend stub).
+[arXiv:2308.11596; hf]  12L enc + 12L dec, d_model=1024 16H d_ff=4096
+vocab=256206.  The speech frontend is a STUB: input_specs provides
+precomputed frame embeddings for the encoder.  (The published model uses
+relative position bias; we use RoPE — noted in DESIGN.md.)"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    family="audio",
+    n_layers=12,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=256206,
+    ffn_act="gelu",
+    pos="rope",
+    encoder_layers=12,
+    frontend="audio",
+)

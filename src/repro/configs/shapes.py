@@ -1,0 +1,55 @@
+"""The assigned input-shape grid and per-(arch × shape) applicability.
+
+LM transformer shapes (seq_len × global_batch):
+  train_4k     4,096 × 256   -> train_step
+  prefill_32k  32,768 × 32   -> prefill (forward + cache emission)
+  decode_32k   32,768 × 128  -> serve_step (1 new token, 32k cache)
+  long_500k    524,288 × 1   -> serve_step; sub-quadratic archs only
+
+Skips (documented in DESIGN.md §4): ``long_500k`` is skipped for pure
+full-attention architectures (MLA included — compressed KV but O(L²)
+scores).  Every assigned arch has a decode path, so no decode skips.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str           # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+SHAPE_NAMES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def applicable(cfg, shape_name: str) -> Tuple[bool, Optional[str]]:
+    """(runs?, skip_reason)."""
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return False, ("full-attention architecture: 500k decode needs "
+                       "sub-quadratic sequence mixing (DESIGN.md §4)")
+    return True, None
+
+
+def grid():
+    """All 40 (arch, shape) cells with applicability."""
+    from repro.configs import ARCH_NAMES, get_config
+    cells = []
+    for arch in ARCH_NAMES:
+        cfg = get_config(arch)
+        for shape in SHAPE_NAMES:
+            ok, reason = applicable(cfg, shape)
+            cells.append({"arch": arch, "shape": shape, "runs": ok,
+                          "skip_reason": reason})
+    return cells

@@ -1,0 +1,25 @@
+"""zamba2-1.2b — Mamba2 backbone + shared attention blocks.
+[arXiv:2411.15242; hf]  38L d_model=2048 32H (kv=32) d_ff=8192 ssm_state=64.
+Shared attention block applied every 6 Mamba layers (single param set).
+Sub-quadratic backbone → runs long_500k; the shared attention uses a
+4096-token sliding window so its cache stays bounded at 500k (DESIGN §4)."""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    n_layers=38,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=32000,
+    ffn_act="geglu",
+    pos="rope",
+    ssm=SSMConfig(state_dim=64, conv_width=4, expand=2, head_dim=64,
+                  chunk=128),
+    shared_attn_period=6,
+    sliding_window=4096,
+    subquadratic=True,
+)

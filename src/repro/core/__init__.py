@@ -1,0 +1,22 @@
+"""Core of the paper's contribution: low-precision formats, the SR/SRε/
+signed-SRε rounding schemes, quantized arithmetic, and rounded gradient
+descent with stagnation diagnostics."""
+from repro.core.formats import (BFLOAT16, BINARY8, BINARY16, BINARY32, E4M3,
+                                E5M2, FPFormat, get_format, register_format)
+from repro.core.rounding import (ALL_MODES, DETERMINISTIC_MODES, IDENTITY,
+                                 STOCHASTIC_MODES, RoundingSpec, floor_ceil,
+                                 is_representable, predecessor,
+                                 round_to_format, spec, successor, ulp)
+from repro.core.gd import (GDRounding, GDStepOut, fp32_config, gd_step,
+                           make_config, rn_would_stagnate, run_gd, scenario,
+                           tau)
+
+__all__ = [
+    "BFLOAT16", "BINARY8", "BINARY16", "BINARY32", "E4M3", "E5M2",
+    "FPFormat", "get_format", "register_format",
+    "ALL_MODES", "DETERMINISTIC_MODES", "STOCHASTIC_MODES", "IDENTITY",
+    "RoundingSpec", "floor_ceil", "is_representable", "predecessor",
+    "round_to_format", "spec", "successor", "ulp",
+    "GDRounding", "GDStepOut", "fp32_config", "gd_step", "make_config",
+    "rn_would_stagnate", "run_gd", "scenario", "tau",
+]

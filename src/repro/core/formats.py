@@ -1,0 +1,104 @@
+"""Floating-point format descriptors for software-emulated low precision.
+
+A format is parameterized as in the paper (sec. 2.1): a significand precision
+``p`` (number of significand digits *including* the implicit leading bit, so
+the unit roundoff is ``u = 2**-p``), and an exponent range ``[emin, emax]``
+for the exponent ``E`` of a normal value ``1.m * 2**E``.
+
+All emulated values are *carried* in float32 (the "high precision" working
+type of this framework); a value is representable in the target format iff it
+survives :func:`repro.core.rounding.round_to_format` unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class FPFormat:
+    """Binary floating-point format.
+
+    Attributes:
+      name: canonical name.
+      precision: significand digits incl. implicit bit (paper's ``s``); the
+        unit roundoff is ``u = 2**-precision`` (paper Table 2).
+      emin: minimum normal exponent (value form ``1.m * 2**E``).
+      emax: maximum normal exponent.
+      subnormals: whether gradual underflow is supported.
+    """
+
+    name: str
+    precision: int
+    emin: int
+    emax: int
+    subnormals: bool = True
+
+    @property
+    def u(self) -> float:
+        """Unit roundoff ``2**-precision`` (max rel. error of RN)."""
+        return 2.0 ** (-self.precision)
+
+    @property
+    def xmin(self) -> float:
+        """Smallest positive normal number ``2**emin``."""
+        return 2.0 ** self.emin
+
+    @property
+    def xmin_sub(self) -> float:
+        """Smallest positive (subnormal) number ``2**(emin - precision + 1)``."""
+        if not self.subnormals:
+            return self.xmin
+        return 2.0 ** (self.emin - self.precision + 1)
+
+    @property
+    def xmax(self) -> float:
+        """Largest finite number ``(2 - 2**(1-p)) * 2**emax``."""
+        return (2.0 - 2.0 ** (1 - self.precision)) * 2.0 ** self.emax
+
+    @property
+    def quantum_min_exp(self) -> int:
+        """Exponent of the smallest spacing (subnormal quantum)."""
+        return self.emin - self.precision + 1
+
+    def spacing_exp_bound(self) -> int:
+        """Max |scale exponent| needed to bring any value onto integer grid."""
+        return max(abs(self.quantum_min_exp), abs(self.emax)) + self.precision + 2
+
+
+# ---------------------------------------------------------------------------
+# Registry. binary8 == E5M2 (NVIDIA H100 / paper sec 2.1): u = 2^-3,
+# xmin = 6.10e-5, xmax = 5.73e4.  Values cross-checked against paper Table 2.
+# ---------------------------------------------------------------------------
+BINARY8 = FPFormat("binary8", precision=3, emin=-14, emax=15)       # E5M2
+E5M2 = BINARY8
+E4M3 = FPFormat("e4m3", precision=4, emin=-6, emax=8)               # OCP FP8 (finite-max variant: 448)
+BFLOAT16 = FPFormat("bfloat16", precision=8, emin=-126, emax=127)
+BINARY16 = FPFormat("binary16", precision=11, emin=-14, emax=15)
+BINARY32 = FPFormat("binary32", precision=24, emin=-126, emax=127)
+
+_REGISTRY: Dict[str, FPFormat] = {
+    f.name: f for f in (BINARY8, E4M3, BFLOAT16, BINARY16, BINARY32)
+}
+_REGISTRY["e5m2"] = BINARY8
+_REGISTRY["fp8"] = BINARY8
+_REGISTRY["fp32"] = BINARY32
+_REGISTRY["bf16"] = BFLOAT16
+_REGISTRY["fp16"] = BINARY16
+
+
+def get_format(name_or_fmt) -> FPFormat:
+    """Resolve a format by name (or pass through an FPFormat)."""
+    if isinstance(name_or_fmt, FPFormat):
+        return name_or_fmt
+    try:
+        return _REGISTRY[str(name_or_fmt).lower()]
+    except KeyError as exc:
+        raise ValueError(
+            f"unknown floating-point format {name_or_fmt!r}; "
+            f"known: {sorted(_REGISTRY)}") from exc
+
+
+def register_format(fmt: FPFormat) -> None:
+    """Register a custom format (e.g. for tests/sweeps)."""
+    _REGISTRY[fmt.name] = fmt

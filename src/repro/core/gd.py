@@ -1,0 +1,161 @@
+"""Gradient descent in floating-point arithmetic (paper sec. 3).
+
+The GD update is decomposed into the paper's three rounded steps (eq. 8):
+
+    ĝ      = ∇f(x̂) + σ₁                (8a) gradient evaluation
+    z      = x̂ − fl₂(t · ĝ)            (8b) stepsize multiply
+    x̂⁺     = fl₃(z)                    (8c) subtraction
+
+Each step carries its own :class:`RoundingSpec`; for signed-SRε the bias
+direction ``v`` is wired to the (rounded) gradient, so the expected rounding
+bias of (8c) is ``−sign(ĝ)·ε·ulp`` — a descent direction (Definition 3 /
+Lemma 10).  Also provides the stagnation diagnostics of sec. 3.2 (τ_k and
+the Scenario-1/2 predicates).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rounding
+from repro.core.formats import get_format
+from repro.core.rounding import IDENTITY, RoundingSpec, _float_exponent
+
+
+def _resolve_v(source: str, g, x):
+    if source == "grad":
+        return g
+    if source == "neg_grad":
+        return -g
+    if source == "self":      # degrade signed-SRε to the SRε self-sign rule
+        return None
+    raise ValueError(f"unknown v_source {source!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class GDRounding:
+    """Rounding policy for the three steps of the GD update.
+
+    Attributes:
+      grad: scheme for (8a) — applied to the exactly-computed gradient, OR
+        the gradient may already be low-precision (``grad_prerounded``).
+      mul:  scheme for (8b) — applied to ``t * ĝ``.
+      sub:  scheme for (8c) — applied to ``x − update``.
+      mul_v / sub_v: bias-direction source for signed-SRε at each step:
+        "grad" (paper's choice for 8c), "neg_grad", or "self".
+    """
+
+    grad: RoundingSpec = IDENTITY
+    mul: RoundingSpec = IDENTITY
+    sub: RoundingSpec = IDENTITY
+    grad_v: str = "self"
+    mul_v: str = "grad"
+    sub_v: str = "grad"
+
+    def step_specs(self):
+        return (self.grad, self.mul, self.sub)
+
+
+def fp32_config() -> GDRounding:
+    """Exact-arithmetic baseline (binary32 carrier, no extra rounding)."""
+    return GDRounding()
+
+
+def make_config(fmt, mode_8a="rn", mode_8b="sr", mode_8c="sr",
+                eps_8a=0.0, eps_8b=0.0, eps_8c=0.0) -> GDRounding:
+    """Convenience: same format for all three steps, per-step schemes."""
+    return GDRounding(
+        grad=rounding.spec(fmt, mode_8a, eps_8a),
+        mul=rounding.spec(fmt, mode_8b, eps_8b),
+        sub=rounding.spec(fmt, mode_8c, eps_8c),
+    )
+
+
+class GDStepOut(NamedTuple):
+    x_new: jax.Array
+    g_hat: jax.Array     # rounded gradient (after 8a)
+    update: jax.Array    # fl₂(t·ĝ) (after 8b)
+    z: jax.Array         # x − update (before 8c, exact in fp32)
+
+
+def gd_step(x, g, t, cfg: GDRounding, key: Optional[jax.Array] = None) -> GDStepOut:
+    """One rounded GD step given the (exact or pre-rounded) gradient ``g``."""
+    x = jnp.asarray(x, jnp.float32)
+    g = jnp.asarray(g, jnp.float32)
+    needs_key = any(s.stochastic for s in cfg.step_specs())
+    if needs_key and key is None:
+        raise ValueError("stochastic rounding configured but no key given")
+    k1 = k2 = k3 = None
+    if key is not None:
+        k1, k2, k3 = jax.random.split(key, 3)
+
+    g_hat = cfg.grad(g, key=k1, v=_resolve_v(cfg.grad_v, g, x))
+    prod = jnp.float32(t) * g_hat
+    update = cfg.mul(prod, key=k2, v=_resolve_v(cfg.mul_v, g_hat, x))
+    z = x - update
+    x_new = cfg.sub(z, key=k3, v=_resolve_v(cfg.sub_v, g_hat, x))
+    return GDStepOut(x_new=x_new, g_hat=g_hat, update=update, z=z)
+
+
+def run_gd(
+    f: Callable,
+    grad_f: Callable,
+    x0,
+    t: float,
+    cfg: GDRounding,
+    steps: int,
+    key: Optional[jax.Array] = None,
+    param_fmt=None,
+):
+    """Run ``steps`` rounded-GD iterations; returns (xs trace of f, x_final).
+
+    ``param_fmt``: optionally round the initial iterate onto the storage grid
+    (the paper stores x̂ in the low-precision format).
+    """
+    x0 = jnp.asarray(x0, jnp.float32)
+    if param_fmt is not None:
+        x0 = rounding.round_to_format(x0, param_fmt, "rn")
+    if key is None:
+        key = jax.random.PRNGKey(0)
+
+    def body(carry, k):
+        x = carry
+        out = gd_step(x, grad_f(x), t, cfg, k)
+        return out.x_new, f(out.x_new)
+
+    keys = jax.random.split(key, steps)
+    x_final, fs = jax.lax.scan(body, x0, keys)
+    return fs, x_final
+
+
+# ---------------------------------------------------------------------------
+# Stagnation diagnostics (paper sec. 3.2).
+# ---------------------------------------------------------------------------
+def tau(z, update, fmt):
+    """τ_k = max_i 2^{-e_i}·update_i with z_i = μ·2^{e_i−s}, μ ∈ [2^{s−1}, 2^s).
+
+    ``z`` is the would-be iterate, ``update`` the rounded |t·ĝ|.  RN stagnates
+    when τ_k ≤ u/2 (and the iterate's lsb is even).
+    """
+    fmt = get_format(fmt)
+    z = jnp.asarray(z, jnp.float32)
+    e = _float_exponent(jnp.abs(z)) + 1   # z ∈ [2^{e-1}, 2^e)
+    scale = jnp.exp2(-e.astype(jnp.float32))
+    return jnp.max(jnp.abs(jnp.asarray(update, jnp.float32)) * scale)
+
+
+def rn_would_stagnate(x, update, fmt):
+    """Scenario-2 predicate per coordinate: RN(x − update) == x (eq. 12)."""
+    fmt = get_format(fmt)
+    x = rounding.round_to_format(jnp.asarray(x, jnp.float32), fmt, "rn")
+    stepped = rounding.round_to_format(x - jnp.asarray(update, jnp.float32), fmt, "rn")
+    return stepped == x
+
+
+def scenario(x, update, fmt) -> jax.Array:
+    """1 if no coordinate stagnates under RN (Scenario 1), else 2."""
+    stag = rn_would_stagnate(x, update, fmt)
+    return jnp.where(jnp.any(stag), jnp.int32(2), jnp.int32(1))

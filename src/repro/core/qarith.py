@@ -1,0 +1,108 @@
+"""Quantized arithmetic under the standard rounding model (paper eq. 5/6).
+
+Every op is computed exactly in float32 and then rounded onto the target
+grid: ``fl(a op b) = (a op b)(1 + δ)`` with |δ| ≤ u (RN) or 2u (SR-family).
+
+``qmatmul`` additionally models *accumulated* gradient-evaluation error
+(paper eq. 9) with three fidelity levels:
+
+* ``"result"`` — one rounding of the fp32 product (backward-stable oracle);
+* ``"chunk"``  — K is split into chunks; partial sums are rounded as they
+  accumulate (``s ← fl(s + fl(chunk_dot))``), the realistic low-precision
+  BLAS model used for the paper-reproduction experiments;
+* ``"fma"``    — every multiply and every add rounded (scan over K; small
+  problems only, used to validate "chunk" against the exact error model).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rounding import RoundingSpec
+
+
+def _round(spec: RoundingSpec, x, key, v=None):
+    if spec.is_identity:
+        return jnp.asarray(x, jnp.float32)
+    return spec(x, key=key, v=v)
+
+
+def _split(key, n):
+    if key is None:
+        return (None,) * n
+    return jax.random.split(key, n)
+
+
+def qadd(a, b, spec: RoundingSpec, *, key=None, v=None):
+    return _round(spec, jnp.asarray(a, jnp.float32) + jnp.asarray(b, jnp.float32), key, v)
+
+
+def qsub(a, b, spec: RoundingSpec, *, key=None, v=None):
+    return _round(spec, jnp.asarray(a, jnp.float32) - jnp.asarray(b, jnp.float32), key, v)
+
+
+def qmul(a, b, spec: RoundingSpec, *, key=None, v=None):
+    return _round(spec, jnp.asarray(a, jnp.float32) * jnp.asarray(b, jnp.float32), key, v)
+
+
+def qdiv(a, b, spec: RoundingSpec, *, key=None, v=None):
+    return _round(spec, jnp.asarray(a, jnp.float32) / jnp.asarray(b, jnp.float32), key, v)
+
+
+def qmatmul(
+    a,
+    b,
+    spec: RoundingSpec,
+    *,
+    key=None,
+    accum: str = "result",
+    chunk: int = 32,
+):
+    """Rounded ``a @ b`` with configurable accumulation fidelity.
+
+    a: (..., M, K), b: (..., K, N) float32.
+    """
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    if spec.is_identity:
+        return a @ b
+    if accum == "result":
+        return _round(spec, a @ b, key)
+
+    k_dim = a.shape[-1]
+    if accum == "fma":
+        chunk_size = 1
+    elif accum == "chunk":
+        chunk_size = min(chunk, k_dim)
+    else:
+        raise ValueError(f"unknown accum mode {accum!r}")
+
+    n_chunks = -(-k_dim // chunk_size)
+    pad = n_chunks * chunk_size - k_dim
+    if pad:
+        a = jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, pad)])
+        b = jnp.pad(b, [(0, 0)] * (b.ndim - 2) + [(0, pad), (0, 0)])
+    # (..., M, n_chunks, chunk) x (..., n_chunks, chunk, N)
+    a_c = a.reshape(a.shape[:-1] + (n_chunks, chunk_size))
+    b_c = b.reshape(b.shape[:-2] + (n_chunks, chunk_size) + b.shape[-1:])
+
+    keys = _split(key, 2 * n_chunks)
+
+    # Python loop over chunks: n_chunks is static, and these fidelity levels
+    # are used on small (paper-experiment-sized) problems only.
+    s = None
+    for i in range(n_chunks):
+        part = jnp.einsum("...mk,...kn->...mn", a_c[..., :, i, :], b_c[..., i, :, :])
+        part = _round(spec, part, None if key is None else keys[2 * i])
+        s = part if s is None else _round(
+            spec, s + part, None if key is None else keys[2 * i + 1])
+    return s
+
+
+def qdot(a, b, spec: RoundingSpec, *, key=None, accum: str = "result", chunk: int = 32):
+    """Rounded inner product of two vectors."""
+    a = jnp.asarray(a, jnp.float32).reshape(1, -1)
+    b = jnp.asarray(b, jnp.float32).reshape(-1, 1)
+    return qmatmul(a, b, spec, key=key, accum=accum, chunk=chunk)[0, 0]

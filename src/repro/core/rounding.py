@@ -1,0 +1,330 @@
+"""Bit-exact software emulation of low-precision rounding, in pure JAX.
+
+Implements every rounding scheme studied in the paper:
+
+* deterministic: RN (round-to-nearest, ties-to-even), RZ, RA, RD (floor),
+  RU (ceil);
+* stochastic (paper sec. 2.2): SR (Definition 1, unbiased), SRε
+  (Definition 2, bias ``sign(x)·ε·ulp``), signed-SRε (Definition 3, bias
+  ``-sign(v)·ε·ulp`` — a *descent direction* when ``v`` is the gradient).
+
+Design notes (TPU-native, reused verbatim inside the Pallas kernels):
+
+* Values are carried in float32.  A target-format value is decomposed onto
+  its rounding grid with **integer bit manipulation** (not ``frexp``, which
+  mishandles float32 subnormals) and **exact two-step power-of-two scaling**
+  (each factor is constructed by exponent-field bit assembly, so no
+  transcendental is involved and every step is exact).
+* The fractional position ``frac = (|x| - ⌊|x|⌋_grid)/ulp ∈ [0, 1)`` is exact
+  in float32, because the scaled value ``y = |x|·2^-qe`` lies in ``[0, 2^p)``
+  with ``p ≤ 24``.
+* All schemes reduce to one unified magnitude rule: *round the magnitude away
+  from zero with probability* ``p_up``:
+
+  ======================  =====================================
+  scheme                  ``p_up``
+  ======================  =====================================
+  SR                      ``frac``
+  SRε                     ``min(frac + ε, 1)``
+  signed-SRε              ``clip(frac − sign(x)·sign(v)·ε, 0, 1)``
+  RN (ties-even)          ``1{frac>½} + 1{frac=½}·(fy odd)``
+  ======================  =====================================
+
+  (Equivalence to Definitions 1–3 is proven in tests against eqs. (3)/(4).)
+* Randomness enters as an explicit uint32 operand, so kernels are
+  deterministic given the key (checkpoint-exact restart) and identical code
+  runs inside Pallas (which has no CPU-interpretable PRNG primitive).
+
+Emulation domain (TPU flush-to-zero semantics): XLA on TPU — and the XLA CPU
+backend used here — flush float32 *subnormals* to zero, so carrier values
+below ``2**-126`` are not reliable.  The engine therefore flushes inputs with
+``|x| < 2**-126`` to (signed) zero.  This only affects formats whose
+subnormal range dips below float32's normal range (bfloat16: true subnormals
+span ``2**-133..2**-127``); it exactly matches real TPU bfloat16 behaviour.
+binary8/E4M3/binary16 (the paper's formats) are emulated bit-exactly,
+subnormals included.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.formats import FPFormat, get_format
+
+DETERMINISTIC_MODES = ("rn", "rz", "ra", "rd", "ru")
+STOCHASTIC_MODES = ("sr", "sr_eps", "signed_sr_eps")
+ALL_MODES = DETERMINISTIC_MODES + STOCHASTIC_MODES
+
+_F32_MANT_BITS = 23
+_F32_EXP_BIAS = 127
+
+
+def _pow2(n):
+    """Exact float32 2**n for integer array n with -126 <= n <= 127.
+
+    Built by assembling the exponent field directly; never inexact.
+    """
+    n = n.astype(jnp.int32)
+    bits = (n + _F32_EXP_BIAS) << _F32_MANT_BITS
+    return lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def _exact_scale(x, n):
+    """x * 2**n, exact, for integer array n with |n| <= 252.
+
+    Split into two in-range factors so intermediate powers of two stay normal.
+    """
+    n = n.astype(jnp.int32)
+    n1 = n // 2
+    n2 = n - n1
+    return x * _pow2(n1) * _pow2(n2)
+
+
+def _float_exponent(x):
+    """Floor(log2(|x|)) for normal float32; any value < -126 for subnormals.
+
+    We only need the exact exponent for float32-*normal* inputs: for
+    float32-subnormal inputs the result is clamped below by the target
+    format's ``emin`` anyway (all supported targets have emin >= -126, and
+    for emin == -126 the subnormal grid coincides with float32's own grid).
+    """
+    bits = lax.bitcast_convert_type(x, jnp.uint32).astype(jnp.int32)
+    raw_exp = (bits >> _F32_MANT_BITS) & 0xFF
+    return jnp.where(raw_exp > 0, raw_exp - _F32_EXP_BIAS, -_F32_EXP_BIAS)
+
+
+def magnitude_decompose(x, fmt: FPFormat):
+    """Decompose |x| on the target rounding grid.
+
+    Returns:
+      floor_mag: largest grid magnitude <= |x| (float32, exact).
+      quantum:   grid spacing (ulp) at x (float32, exact power of two).
+      frac:      (|x| - floor_mag)/quantum in [0, 1) (float32, exact).
+      fy:        floor_mag / quantum as float32 integer (< 2**precision).
+    """
+    x = x.astype(jnp.float32)
+    mag = jnp.abs(x)
+    qe = _quantum_exponent(x, fmt)
+    y = _exact_scale(mag, -qe)
+    fy = jnp.floor(y)
+    frac = y - fy
+    floor_mag = _exact_scale(fy, qe)
+    quantum = _pow2(qe // 2) * _pow2(qe - qe // 2)
+    return floor_mag, quantum, frac, fy
+
+
+def _quantum_exponent(x, fmt: FPFormat):
+    """Exponent of the grid spacing at |x| (int32)."""
+    e = _float_exponent(jnp.abs(x))
+    qe = jnp.maximum(e, fmt.emin) - (fmt.precision - 1)
+    if not fmt.subnormals:
+        qe = jnp.where(e < fmt.emin, jnp.int32(fmt.emin), qe)
+    return qe
+
+
+def _ceil_from_decompose(x, fy, fmt: FPFormat):
+    """(fy + 1) * 2**qe, exact, avoiding subnormal intermediates."""
+    qe = _quantum_exponent(x, fmt)
+    return _exact_scale(fy + 1.0, qe)
+
+
+def _p_round_up(mode, frac, fy, sign_x, eps, sign_v):
+    """Probability of rounding the magnitude away from zero (unified rule)."""
+    if mode == "sr":
+        return frac
+    if mode == "sr_eps":
+        return jnp.minimum(frac + eps, 1.0)
+    if mode == "signed_sr_eps":
+        return jnp.clip(frac - sign_x * sign_v * eps, 0.0, 1.0)
+    if mode == "rn":
+        fy_odd = (fy.astype(jnp.int32) & 1).astype(frac.dtype)
+        return jnp.where(frac > 0.5, 1.0,
+                         jnp.where(frac < 0.5, 0.0, fy_odd))
+    if mode == "rz":
+        return jnp.zeros_like(frac)
+    if mode == "ra":
+        return jnp.ones_like(frac)
+    if mode == "rd":   # toward -inf
+        return jnp.where(sign_x < 0, 1.0, 0.0).astype(frac.dtype)
+    if mode == "ru":   # toward +inf
+        return jnp.where(sign_x > 0, 1.0, 0.0).astype(frac.dtype)
+    raise ValueError(f"unknown rounding mode {mode!r}")
+
+
+def _uniform_from_bits(bits):
+    """uint32 bits -> uniform float32 in [0, 1) with 24-bit resolution."""
+    return (bits >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2.0 ** -24)
+
+
+def round_to_format(
+    x,
+    fmt,
+    mode: str = "rn",
+    *,
+    key: Optional[jax.Array] = None,
+    bits: Optional[jax.Array] = None,
+    eps: float = 0.0,
+    v: Optional[jax.Array] = None,
+    overflow: str = "saturate",
+):
+    """Round float32 array ``x`` onto the grid of ``fmt`` using ``mode``.
+
+    Args:
+      x: input array (cast to float32).
+      fmt: FPFormat or name.
+      mode: one of ``ALL_MODES``.
+      key: PRNG key for stochastic modes (ignored if ``bits`` given).
+      bits: uint32 array, same shape as x, of random bits (stochastic modes).
+      eps: the ε of SRε / signed-SRε (paper Definitions 2/3), in (0, 1).
+      v: bias-direction array for signed-SRε (paper's ``v``; e.g. the gradient
+        component matching each x element).  ``sign(v)==0`` degrades to SR.
+      overflow: "saturate" (clamp to ±xmax; default) or "inf".
+
+    Returns:
+      float32 array of values exactly representable in ``fmt``.
+    """
+    fmt = get_format(fmt)
+    if mode not in ALL_MODES:
+        raise ValueError(f"unknown rounding mode {mode!r}; known: {ALL_MODES}")
+    x = jnp.asarray(x, jnp.float32)
+
+    if mode in STOCHASTIC_MODES:
+        if bits is None:
+            if key is None:
+                raise ValueError(f"mode {mode!r} needs `key` or `bits`")
+            bits = jax.random.bits(key, x.shape, jnp.uint32)
+        u = _uniform_from_bits(bits)
+    else:
+        u = jnp.full(x.shape, 0.5, jnp.float32)
+
+    if mode == "signed_sr_eps":
+        if v is None:
+            raise ValueError("signed_sr_eps requires the bias-direction `v`")
+        sign_v = jnp.sign(jnp.broadcast_to(jnp.asarray(v, jnp.float32), x.shape))
+    else:
+        sign_v = jnp.zeros_like(x)
+
+    # TPU/XLA-CPU FTZ: flush float32-subnormal inputs to signed zero.
+    x = jnp.where(jnp.abs(x) < jnp.float32(2.0 ** -126), x * 0.0, x)
+
+    floor_mag, _, frac, fy = magnitude_decompose(x, fmt)
+    # ceil neighbour computed by exact scaling so it stays float32-normal
+    # even where the grid spacing itself would be float32-subnormal.
+    ceil_mag = _ceil_from_decompose(x, fy, fmt)
+    sign_x = jnp.sign(x)
+    p_up = _p_round_up(mode, frac, fy, sign_x, jnp.float32(eps), sign_v)
+
+    go_up = u < p_up
+    mag = jnp.where(go_up, ceil_mag, floor_mag)
+    # Exactly-representable input: both neighbours coincide with x.
+    mag = jnp.where(frac == 0.0, jnp.abs(x), mag)
+
+    xmax = jnp.float32(fmt.xmax)
+    if overflow == "saturate":
+        mag = jnp.minimum(mag, xmax)
+    elif overflow == "inf":
+        mag = jnp.where(mag > xmax, jnp.float32(jnp.inf), mag)
+    else:
+        raise ValueError(f"unknown overflow policy {overflow!r}")
+
+    out = jnp.where(sign_x < 0, -mag, mag)  # preserves +0 for x == +0
+    out = jnp.where(jnp.signbit(x) & (x == 0), -jnp.float32(0.0), out)
+    # NaN / inf pass through.
+    finite = jnp.isfinite(x)
+    return jnp.where(finite, out, x)
+
+
+def floor_ceil(x, fmt) -> Tuple[jax.Array, jax.Array]:
+    """True directed floor/ceil (⌊x⌋, ⌈x⌉) on the format grid (paper §2.2)."""
+    fmt = get_format(fmt)
+    down = round_to_format(x, fmt, "rd")
+    up = round_to_format(x, fmt, "ru")
+    return down, up
+
+
+def ulp(x, fmt):
+    """Grid spacing ⌈x⌉-⌊x⌋ at x (quantum; 0 only for non-finite x)."""
+    fmt = get_format(fmt)
+    _, quantum, _, _ = magnitude_decompose(x, fmt)
+    return quantum
+
+
+def is_representable(x, fmt):
+    """Whether each element of x is exactly representable in fmt."""
+    fmt = get_format(fmt)
+    x = jnp.asarray(x, jnp.float32)
+    _, _, frac, _ = magnitude_decompose(x, fmt)
+    in_range = jnp.abs(x) <= fmt.xmax
+    return ((frac == 0.0) & in_range) | ~jnp.isfinite(x)
+
+
+def successor(x, fmt):
+    """su(x): smallest grid value strictly greater than x (paper eq. 10).
+
+    For grid points the step up is: the local quantum when x >= 0 (the
+    decomposition at ``|x| = 2**E`` already yields the *upper*-side spacing),
+    and the *lower*-side spacing when x < 0 (half the quantum at binade
+    boundaries above the subnormal range).
+    """
+    fmt = get_format(fmt)
+    x = jnp.asarray(x, jnp.float32)
+    _, q, frac, fy = magnitude_decompose(x, fmt)
+    e = _float_exponent(jnp.abs(x))
+    boundary = (fy == 2.0 ** (fmt.precision - 1)) & (e > fmt.emin)
+    q_below = jnp.where(boundary, q * 0.5, q)
+    succ_exact = jnp.where(x >= 0, x + q, x + q_below)
+    out = jnp.where(frac == 0.0, succ_exact, round_to_format(x, fmt, "ru"))
+    return jnp.where(jnp.isfinite(x), out, x)
+
+
+def predecessor(x, fmt):
+    """pr(x): largest grid value strictly smaller than x (paper eq. 10)."""
+    fmt = get_format(fmt)
+    x = jnp.asarray(x, jnp.float32)
+    return -successor(-x, fmt)
+
+
+# ---------------------------------------------------------------------------
+# RoundingSpec: a (format, mode, eps) bundle — the framework's config unit.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class RoundingSpec:
+    """A rounding policy: target format + scheme + ε.
+
+    ``fmt`` may be None meaning "keep full precision" (identity), which is how
+    the fp32 baseline is expressed uniformly in the optimizer/trainer.
+    """
+
+    fmt: Optional[str] = None
+    mode: str = "rn"
+    eps: float = 0.0
+
+    @property
+    def is_identity(self) -> bool:
+        return self.fmt is None
+
+    @property
+    def stochastic(self) -> bool:
+        return (not self.is_identity) and self.mode in STOCHASTIC_MODES
+
+    def format(self) -> Optional[FPFormat]:
+        return None if self.fmt is None else get_format(self.fmt)
+
+    def __call__(self, x, *, key=None, bits=None, v=None):
+        if self.is_identity:
+            return jnp.asarray(x, jnp.float32)
+        return round_to_format(
+            x, self.fmt, self.mode, key=key, bits=bits, eps=self.eps, v=v)
+
+
+IDENTITY = RoundingSpec(None)
+
+
+def spec(fmt=None, mode="rn", eps=0.0) -> RoundingSpec:
+    """Convenience constructor."""
+    return RoundingSpec(None if fmt is None else get_format(fmt).name, mode, eps)

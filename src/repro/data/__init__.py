@@ -1,0 +1,7 @@
+"""Deterministic, checkpointable synthetic data pipelines."""
+from repro.data.synthetic import (SyntheticTokens, make_token_pipeline,
+                                  synthetic_mnist, synthetic_binary_mnist)
+from repro.data.pipeline import ShardedPipeline
+
+__all__ = ["SyntheticTokens", "make_token_pipeline", "synthetic_mnist",
+           "synthetic_binary_mnist", "ShardedPipeline"]

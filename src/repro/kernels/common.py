@@ -1,0 +1,57 @@
+"""Shared rounding math for the Pallas kernels.
+
+The kernel bodies reuse the *identical* jnp bit-manipulation code as the
+pure-JAX engine (`repro.core.rounding`) — every op involved (integer shifts,
+bitcast, floor, where) lowers both to XLA and to Mosaic/TPU, and runs under
+``interpret=True`` on CPU.  This guarantees kernel == oracle bit-for-bit when
+fed the same random bits.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import FPFormat, get_format
+from repro.core.rounding import (RoundingSpec, _ceil_from_decompose,
+                                 _p_round_up, _uniform_from_bits,
+                                 magnitude_decompose)
+
+
+def round_block(x, bits, fmt: FPFormat, mode: str, eps: float, v=None):
+    """Round one block of float32 values; identical math to round_to_format.
+
+    ``bits`` may be None for deterministic modes.  ``v`` is the bias
+    direction for signed-SRε.  Saturating overflow policy.
+    """
+    x = x.astype(jnp.float32)
+    x = jnp.where(jnp.abs(x) < jnp.float32(2.0 ** -126), x * 0.0, x)
+
+    floor_mag, _, frac, fy = magnitude_decompose(x, fmt)
+    ceil_mag = _ceil_from_decompose(x, fy, fmt)
+    sign_x = jnp.sign(x)
+    sign_v = jnp.sign(v.astype(jnp.float32)) if v is not None else jnp.zeros_like(x)
+    p_up = _p_round_up(mode, frac, fy, sign_x, jnp.float32(eps), sign_v)
+
+    if bits is None:
+        u = jnp.full(x.shape, 0.5, jnp.float32)
+    else:
+        u = _uniform_from_bits(bits)
+
+    mag = jnp.where(u < p_up, ceil_mag, floor_mag)
+    mag = jnp.where(frac == 0.0, jnp.abs(x), mag)
+    mag = jnp.minimum(mag, jnp.float32(fmt.xmax))
+    out = jnp.where(sign_x < 0, -mag, mag)
+    return jnp.where(jnp.isfinite(x), out, x)
+
+
+def apply_spec_block(spec: RoundingSpec, x, bits, v=None):
+    """RoundingSpec-dispatched block rounding (identity-aware)."""
+    if spec.is_identity:
+        return x.astype(jnp.float32)
+    return round_block(x, bits if spec.stochastic else None,
+                       get_format(spec.fmt), spec.mode, spec.eps, v=v)
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode: on for CPU (this container), off on real TPU."""
+    return jax.default_backend() != "tpu"

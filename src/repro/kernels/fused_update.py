@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: the fused three-step rounded GD update (paper eq. 8).
+
+Computes, in a single HBM pass over the parameters:
+
+    ĝ   = Q₁(g)            (8a residual rounding of the computed gradient)
+    upd = Q₂(t · ĝ)        (8b)
+    x⁺  = Q₃(x − upd)      (8c, signed-SRε biased by sign(ĝ))
+
+Unfused, this chain is ≥ 5 elementwise XLA ops → ≥ 7 HBM streams over the
+parameter size; fused it is x, g, (3×) bits in + x⁺ out.  This is the hot
+op of the paper's method at framework scale: it touches every parameter on
+every optimizer step and is purely memory-bound, so the fusion ratio is the
+roofline lever (see EXPERIMENTS.md §Perf).
+
+The stepsize arrives via scalar prefetch (SMEM); rounding configs are static.
+
+Numerical note: when a step's RoundingSpec is the *identity* (fp32
+baseline), XLA may contract the ``t·g`` multiply into an FMA with the
+subtraction, giving a result that can differ from the two-op eager
+evaluation by one fp32 ulp (the FMA is the more accurate of the two).  Any
+*quantized* step is immune: the rounding bit-ops materialize the
+intermediate exactly, so kernel == oracle bit-for-bit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.gd import GDRounding
+from repro.kernels import common
+from repro.kernels.sr_cast import LANES, DEFAULT_BLOCK_ROWS, _pad_2d
+
+
+def _resolve_v_static(source: str, g_hat, x):
+    if source == "grad":
+        return g_hat
+    if source == "neg_grad":
+        return -g_hat
+    if source == "self":
+        return None
+    raise ValueError(f"unknown v_source {source!r}")
+
+
+def _fused_update_kernel(t_ref, x_ref, g_ref, b1_ref, b2_ref, b3_ref, o_ref,
+                         *, cfg: GDRounding):
+    x = x_ref[...]
+    g = g_ref[...]
+    t = t_ref[0]
+    g_hat = common.apply_spec_block(
+        cfg.grad, g, b1_ref[...], v=_resolve_v_static(cfg.grad_v, g, x))
+    upd = common.apply_spec_block(
+        cfg.mul, t * g_hat, b2_ref[...],
+        v=_resolve_v_static(cfg.mul_v, g_hat, x))
+    z = x - upd
+    o_ref[...] = common.apply_spec_block(
+        cfg.sub, z, b3_ref[...], v=_resolve_v_static(cfg.sub_v, g_hat, x))
+
+
+def fused_qupdate_p(x, g, t, bits3, cfg: GDRounding,
+                    *, block_rows: int = DEFAULT_BLOCK_ROWS, interpret=None):
+    """Fused rounded GD update.
+
+    Args:
+      x: parameters, float32 (any shape).
+      g: gradient, same shape.
+      t: scalar stepsize.
+      bits3: uint32 (3, *x.shape) random bits for the three rounding steps
+        (rows unused by deterministic/identity steps are simply ignored).
+      cfg: the three-step rounding policy.
+
+    Returns float32 array of updated parameters (on the cfg.sub grid).
+    """
+    if interpret is None:
+        interpret = common.default_interpret()
+    shape = x.shape
+    xf, rows = _pad_2d(x.reshape(-1), block_rows)
+    gf, _ = _pad_2d(g.reshape(-1), block_rows)
+    b1, _ = _pad_2d(bits3[0].reshape(-1), block_rows)
+    b2, _ = _pad_2d(bits3[1].reshape(-1), block_rows)
+    b3, _ = _pad_2d(bits3[2].reshape(-1), block_rows)
+    grid = (rows // block_rows,)
+    bspec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+
+    t_arr = jnp.asarray([t], jnp.float32)
+    kern = functools.partial(_fused_update_kernel, cfg=cfg)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),
+                  bspec, bspec, bspec, bspec, bspec],
+        out_specs=bspec,
+        out_shape=jax.ShapeDtypeStruct(xf.shape, jnp.float32),
+        interpret=interpret,
+    )(t_arr, xf, gf, b1, b2, b3)
+    return out.reshape(-1)[: x.size].reshape(shape)

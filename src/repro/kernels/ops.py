@@ -1,0 +1,51 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+These are the entry points the optimizer / trainer call; they accept PRNG
+keys, generate the explicit random-bits operands, and dispatch to the
+kernels (interpret mode on CPU, compiled Mosaic on TPU).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gd import GDRounding
+from repro.kernels.fused_update import fused_qupdate_p
+from repro.kernels.qmatmul import qmatmul_p
+from repro.kernels.sr_cast import sr_cast_p
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "mode", "eps", "interpret"))
+def sr_cast(x, key, fmt, mode: str = "sr", eps: float = 0.0, v=None,
+            interpret: Optional[bool] = None):
+    """Stochastic-round cast via the Pallas kernel."""
+    x = jnp.asarray(x, jnp.float32)
+    bits = jax.random.bits(key, tuple(x.shape), jnp.uint32)
+    return sr_cast_p(x, bits, fmt, mode, eps=eps, v=v, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
+def fused_qupdate(x, g, t, key, cfg: GDRounding,
+                  interpret: Optional[bool] = None):
+    """Fused three-step rounded GD update (paper eq. 8) via Pallas."""
+    x = jnp.asarray(x, jnp.float32)
+    g = jnp.asarray(g, jnp.float32)
+    bits3 = jax.random.bits(key, (3,) + tuple(x.shape), jnp.uint32)
+    return fused_qupdate_p(x, g, t, bits3, cfg, interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("fmt", "mode", "eps", "bm", "bn", "bk",
+                                    "interpret"))
+def qmatmul_lowp(a, b, key, fmt, mode: str = "sr", eps: float = 0.0,
+                 bm: int = 256, bn: int = 256, bk: int = 256,
+                 interpret: Optional[bool] = None):
+    """Low-precision-output GEMM via the Pallas kernel."""
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    bits = jax.random.bits(key, (a.shape[0], b.shape[1]), jnp.uint32)
+    return qmatmul_p(a, b, bits, fmt, mode, eps,
+                     bm=bm, bn=bn, bk=bk, interpret=interpret)

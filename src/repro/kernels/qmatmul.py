@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: blocked matmul with low-precision rounded output.
+
+Models the paper's (8a): a gradient/activation GEMM whose *result* is stored
+in the low-precision format (rounded by RN or SR).  MXU-shaped tiling:
+(bm, bk) x (bk, bn) blocks accumulate into a float32 VMEM scratch across the
+K grid dimension; on the last K step the accumulator is rounded (consuming
+a (bm, bn) tile of random bits for the stochastic modes) and written out.
+
+Block sizes default to 128/256 multiples so the MXU (128x128) is saturated
+and the working set (bm*bk + bk*bn + 2*bm*bn tiles) stays ≲ 2 MiB in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.formats import get_format
+from repro.kernels import common
+
+
+def _qmatmul_kernel(a_ref, b_ref, bits_ref, o_ref, acc_ref,
+                    *, fmt, mode, eps, k_steps):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _emit():
+        bits = bits_ref[...] if mode in ("sr", "sr_eps") else None
+        o_ref[...] = common.round_block(acc_ref[...], bits, fmt, mode, eps)
+
+
+def qmatmul_p(a, b, bits, fmt, mode: str = "sr", eps: float = 0.0,
+              *, bm: int = 256, bn: int = 256, bk: int = 256,
+              interpret=None):
+    """Rounded ``a @ b`` (result-rounding fidelity) as a Pallas kernel.
+
+    a: (M, K) float32; b: (K, N) float32; bits: (M, N) uint32 (ignored for
+    deterministic modes but must be supplied for a uniform signature).
+    M, N, K are padded up to block multiples.
+    """
+    fmt = get_format(fmt)
+    if interpret is None:
+        interpret = common.default_interpret()
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    bm_, bn_, bk_ = min(bm, M), min(bn, N), min(bk, K)
+
+    def pad_to(x, m0, m1):
+        p0 = -(-x.shape[0] // m0) * m0 - x.shape[0]
+        p1 = -(-x.shape[1] // m1) * m1 - x.shape[1]
+        return jnp.pad(x, ((0, p0), (0, p1)))
+
+    a_p = pad_to(a, bm_, bk_)
+    b_p = pad_to(b, bk_, bn_)
+    bits_p = pad_to(bits, bm_, bn_)
+    Mp, Kp = a_p.shape
+    _, Np = b_p.shape
+    k_steps = Kp // bk_
+    grid = (Mp // bm_, Np // bn_, k_steps)
+
+    kern = functools.partial(_qmatmul_kernel, fmt=fmt, mode=mode, eps=eps,
+                             k_steps=k_steps)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
+        interpret=interpret,
+    )(a_p, b_p, bits_p)
+    return out[:M, :N]

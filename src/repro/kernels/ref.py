@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Each oracle consumes the *same* explicit random bits as the kernel, so
+kernel-vs-oracle comparisons are exact (bit-for-bit), not statistical.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.formats import get_format
+from repro.core.gd import GDRounding, _resolve_v
+from repro.core.rounding import round_to_format
+
+
+def sr_cast_ref(x, bits, fmt, mode: str, eps: float = 0.0, v=None):
+    """Oracle for kernels.sr_cast.sr_cast_p."""
+    return round_to_format(x, fmt, mode, bits=bits, eps=eps, v=v)
+
+
+def fused_qupdate_ref(x, g, t, bits3, cfg: GDRounding):
+    """Oracle for kernels.fused_update.fused_qupdate_p (paper eq. 8)."""
+    x = jnp.asarray(x, jnp.float32)
+    g = jnp.asarray(g, jnp.float32)
+    g_hat = cfg.grad(g, bits=bits3[0], v=_resolve_v(cfg.grad_v, g, x))
+    upd = cfg.mul(jnp.float32(t) * g_hat, bits=bits3[1],
+                  v=_resolve_v(cfg.mul_v, g_hat, x))
+    z = x - upd
+    return cfg.sub(z, bits=bits3[2], v=_resolve_v(cfg.sub_v, g_hat, x))
+
+
+def qmatmul_ref(a, b, bits, fmt, mode: str = "sr", eps: float = 0.0):
+    """Oracle for kernels.qmatmul.qmatmul_p: fp32 GEMM + result rounding."""
+    prod = jnp.asarray(a, jnp.float32) @ jnp.asarray(b, jnp.float32)
+    if mode in ("sr", "sr_eps"):
+        return round_to_format(prod, fmt, mode, bits=bits, eps=eps)
+    return round_to_format(prod, fmt, mode, eps=eps)

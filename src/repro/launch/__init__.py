@@ -1,0 +1,1 @@
+"""Launchers: mesh construction, distributed step builders, dry-run."""

@@ -1,0 +1,191 @@
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape)
+cell against the production meshes, print memory/cost analysis, and emit
+the roofline table.
+
+Two compiles per cell (see roofline/probe.py):
+  1. FULL config, scan-over-layers — proves sharding coherence + memory fit;
+  2. unrolled 1/2-layer probes — trip-count-correct FLOPs/bytes/collectives.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--json out]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init) — see the assignment's MULTI-POD DRY-RUN spec.
+
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.configs.shapes import SHAPES, SHAPE_NAMES, applicable
+from repro.dist.sharding import set_mesh_axes
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_production_mesh, mesh_axes_for
+from repro.models import build_model
+from repro.roofline.analyze import RooflineReport, analyze_compiled, \
+    model_flops_for
+from repro.roofline.probe import measure_cell_costs
+
+
+def _lower_for_cfg(cfg, shape, mesh, ax, optimizer):
+    """Lower the appropriate step for (cfg, shape) on the mesh."""
+    model = build_model(cfg)
+    with set_mesh_axes(ax), mesh:
+        if shape.kind == "train":
+            params_s, opt_s = steps_lib.param_and_opt_specs(
+                cfg, optimizer, mesh, ax)
+            batch_s = steps_lib.batch_specs(cfg, shape, mesh, ax)
+            step = steps_lib.make_train_step(model, optimizer)
+            # donate params + optimizer state: the update is in-place
+            return jax.jit(step, donate_argnums=(0, 1)).lower(
+                params_s, opt_s, batch_s)
+        if shape.kind == "prefill":
+            params_s, _ = steps_lib.param_and_opt_specs(
+                cfg, optimizer, mesh, ax)
+            batch_s = steps_lib.batch_specs(cfg, shape, mesh, ax)
+            step = steps_lib.make_prefill_step(model)
+            return jax.jit(step).lower(params_s, batch_s)
+        # decode — switch MoE archs to the serving layout (experts over
+        # data + F-TP over model; §Perf iteration 2C)
+        import dataclasses as _dc
+        changes = {}
+        if cfg.moe is not None and not cfg.moe_serve_layout:
+            changes["moe_serve_layout"] = True
+        if cfg.mla is not None and not cfg.mla.absorb:
+            changes["mla"] = _dc.replace(cfg.mla, absorb=True)
+        if changes:
+            cfg = _dc.replace(cfg, **changes)
+            model = build_model(cfg)
+        params_s, _ = steps_lib.param_and_opt_specs(
+            cfg, optimizer, mesh, ax, serve=True)
+        caches_s, tokens_s, pos, enc_s = steps_lib.decode_input_specs(
+            cfg, shape, mesh, ax)
+        step = steps_lib.make_serve_step(model)
+        # donate the caches: the KV/state update is in-place
+        if enc_s is not None:
+            return jax.jit(step, donate_argnums=(1,)).lower(
+                params_s, caches_s, tokens_s, pos, enc_s)
+        return jax.jit(step, donate_argnums=(1,)).lower(
+            params_s, caches_s, tokens_s, pos)
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               verbose: bool = True, optimizer=None, probe: bool = True,
+               cfg_override=None):
+    """Lower + compile one cell; returns (compiled, RooflineReport)."""
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = applicable(cfg, shape_name)
+    if not ok:
+        raise ValueError(f"cell ({arch},{shape_name}) skipped: {reason}")
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    ax = mesh_axes_for(mesh, batch_size=shape.global_batch)
+    optimizer = optimizer or steps_lib.paper_optimizer()
+
+    t0 = time.time()
+    lowered = _lower_for_cfg(cfg, shape, mesh, ax, optimizer)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mesh_desc = "x".join(str(s) for s in mesh.devices.shape) + \
+        ("(pod,data,model)" if multi_pod else "(data,model)")
+    report = analyze_compiled(
+        compiled, arch=arch, shape=shape_name, mesh_desc=mesh_desc,
+        n_chips=n_chips, model_flops=model_flops_for(cfg, shape))
+
+    t_probe = 0.0
+    if probe:
+        t1 = time.time()
+        costs = measure_cell_costs(
+            arch, shape_name, multi_pod=multi_pod, cfg=cfg,
+            compile_fn=lambda c: _lower_for_cfg(
+                c, shape, mesh, ax, optimizer).compile())
+        t_probe = time.time() - t1
+        report.flops_per_device = costs.pop("flops", 0.0)
+        report.bytes_per_device = costs.pop("bytes", 0.0)
+        report.collective_bytes = {
+            k[5:]: int(v) for k, v in costs.items() if k.startswith("coll:")}
+
+    if verbose:
+        ma = compiled.memory_analysis()
+        print(f"[{arch} × {shape_name} × {mesh_desc}] "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s "
+              f"probe {t_probe:.1f}s")
+        print(f"  memory_analysis: args={ma.argument_size_in_bytes/2**30:.2f}GiB "
+              f"temp={ma.temp_size_in_bytes/2**30:.2f}GiB "
+              f"out={ma.output_size_in_bytes/2**30:.2f}GiB per device")
+        r = report.row()
+        print(f"  cost({'probe-corrected' if probe else 'raw-scan'}): "
+              f"flops/dev={report.flops_per_device:.3e} "
+              f"bytes/dev={report.bytes_per_device:.3e}")
+        print(f"  roofline: compute={r['t_compute_s']:.4f}s "
+              f"memory={r['t_memory_s']:.4f}s "
+              f"collective={r['t_collective_s']:.4f}s "
+              f"-> dominant={r['dominant']} frac={r['roofline_frac']:.3f} "
+              f"useful={r['useful_ratio']:.2f}")
+        print(f"  collectives: {r['collectives']}")
+    return compiled, report
+
+
+def run_all(multi_pod: bool = False, json_path: Optional[str] = None,
+            archs=None, shapes=None, probe: bool = True):
+    rows, failures = [], []
+    for arch in (archs or ARCH_NAMES):
+        cfg = get_config(arch)
+        for shape_name in (shapes or SHAPE_NAMES):
+            ok, reason = applicable(cfg, shape_name)
+            if not ok:
+                rows.append({"arch": arch, "shape": shape_name,
+                             "skipped": reason})
+                print(f"[{arch} × {shape_name}] SKIP: {reason}", flush=True)
+                continue
+            try:
+                _, report = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                                       probe=probe)
+                rows.append(report.row())
+            except Exception as e:       # noqa: BLE001 — report and continue
+                traceback.print_exc()
+                failures.append((arch, shape_name, str(e)))
+                rows.append({"arch": arch, "shape": shape_name,
+                             "error": str(e)[:500]})
+            if json_path:   # incremental checkpointing of the table
+                with open(json_path, "w") as f:
+                    json.dump(rows, f, indent=1, default=str)
+    print(f"\n{len(failures)} failures")
+    for f_ in failures:
+        print("FAIL:", f_)
+    return rows, failures
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-probe", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    if args.all:
+        _, failures = run_all(
+            multi_pod=args.multi_pod, json_path=args.json,
+            archs=[args.arch] if args.arch else None,
+            shapes=[args.shape] if args.shape else None,
+            probe=not args.no_probe)
+        raise SystemExit(1 if failures else 0)
+    lower_cell(args.arch or "tinyllama-1.1b", args.shape or "train_4k",
+               multi_pod=args.multi_pod, probe=not args.no_probe)
+
+
+if __name__ == "__main__":
+    main()

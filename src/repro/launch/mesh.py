@@ -1,0 +1,49 @@
+"""Mesh construction.
+
+``make_production_mesh`` builds the assignment's target topology:
+  single-pod:  (16, 16)          axes ("data", "model")   = 256 chips
+  multi-pod:   (2, 16, 16)       axes ("pod", "data", "model") = 512 chips
+
+Functions (not module constants) so importing never touches jax device
+state.  ``pod`` is an outer data-parallel axis (hierarchical gradient
+reduction; optionally int8-compressed — dist/collectives.py).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.dist.sharding import MeshAxes
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model_axis: int = 1):
+    """1-device (or tiny) mesh so the distributed code paths run in tests."""
+    n = len(jax.devices())
+    data = max(1, n // model_axis)
+    return jax.make_mesh((data, model_axis), ("data", "model"))
+
+
+def mesh_axes_for(mesh, *, batch_size: Optional[int] = None) -> MeshAxes:
+    """MeshAxes bound to a mesh; batch axes shrink to () for batch=1 cells
+    (long-context decode replicates the single sequence and shards heads)."""
+    names = mesh.axis_names
+    has_pod = "pod" in names
+    batch: Tuple[str, ...] = (("pod", "data") if has_pod else ("data",))
+    if batch_size is not None:
+        # drop batch axes that cannot divide the global batch
+        usable = []
+        remaining = batch_size
+        for ax in batch:
+            size = mesh.shape[ax]
+            if remaining % size == 0 and remaining >= size:
+                usable.append(ax)
+                remaining //= size
+        batch = tuple(usable)
+    return MeshAxes(mesh=mesh, data=("data",), model="model", batch=batch)

@@ -1,0 +1,69 @@
+"""§Perf hillclimbing driver: A/B a config/step variant against the
+baseline on one (arch × shape) cell and print the roofline deltas.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.perf --arch tinyllama-1.1b \
+      --shape train_4k --variant remat=dots
+Variants (comma-separable):
+  remat={full,dots,none}      activation-checkpoint policy
+  attn={flash,naive}          attention implementation
+  qblock=N / kvblock=N        flash attention block sizes
+  mla_absorb={0,1}            absorbed-matmul MLA decode
+  seqshard={0,1}              decode-cache sequence sharding over model
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+import json
+
+from repro.configs import get_config
+
+
+def apply_variant(cfg, variant: str):
+    changes = {}
+    for kv in variant.split(","):
+        if not kv:
+            continue
+        k, v = kv.split("=")
+        if k == "remat":
+            changes["remat"] = v
+        elif k == "attn":
+            changes["attn_impl"] = v
+        elif k == "qblock":
+            changes["attn_q_block"] = int(v)
+        elif k == "kvblock":
+            changes["attn_kv_block"] = int(v)
+        elif k == "mla_absorb":
+            changes["mla_absorb"] = bool(int(v))
+        else:
+            raise ValueError(f"unknown variant key {k}")
+    if "mla_absorb" in changes:
+        mla = dataclasses.replace(cfg.mla, absorb=changes.pop("mla_absorb"))
+        changes["mla"] = mla
+    return dataclasses.replace(cfg, **changes)
+
+
+def main():
+    from repro.launch.dryrun import lower_cell
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", default="")
+    ap.add_argument("--no-probe", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.variant:
+        cfg = apply_variant(cfg, args.variant)
+    _, report = lower_cell(args.arch, args.shape, probe=not args.no_probe,
+                           cfg_override=cfg)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report.row(), f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

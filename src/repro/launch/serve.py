@@ -1,0 +1,84 @@
+"""Serving driver: batched prefill + decode with KV/state caches.
+
+Example:
+  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+      --reduced --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced as reduce_cfg
+from repro.launch import steps as steps_lib
+from repro.models import build_model
+
+
+def run(arch: str, *, reduced: bool, batch: int, prompt_len: int, gen: int,
+        seed: int = 0):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = reduce_cfg(cfg)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+
+    key = jax.random.PRNGKey(seed + 1)
+    prompts = jax.random.randint(key, (batch, prompt_len), 0,
+                                 cfg.vocab_size)
+    enc_out = None
+    batch_in = {"tokens": prompts}
+    if cfg.frontend == "vision":
+        batch_in["vision_embeds"] = jax.random.normal(
+            key, (batch, cfg.frontend_len, cfg.d_model)) * 0.02
+    if cfg.frontend == "audio":
+        batch_in["src_embeds"] = jax.random.normal(
+            key, (batch, prompt_len, cfg.d_model)) * 0.02
+
+    t0 = time.time()
+    # prefill: build caches for the prompt, then pad to the decode budget
+    if cfg.encoder_layers:
+        enc_out = model._encode(params, batch_in, jax.random.PRNGKey(0))
+    max_len = prompt_len + gen
+    caches = model.init_decode_cache(batch, max_len)
+    tok = prompts[:, -1:]
+    # teacher-forced prompt absorption (simple loop; production would
+    # prefill via model.prefill and splice the caches)
+    for t in range(prompt_len):
+        _, caches = model.decode_step(params, caches, prompts[:, t:t + 1], t,
+                                      enc_out=enc_out)
+    t_prefill = time.time() - t0
+
+    serve_step = jax.jit(steps_lib.make_serve_step(model),
+                         static_argnames=())
+    outs = []
+    t1 = time.time()
+    for t in range(gen):
+        tok, logits, caches = serve_step(params, caches, tok,
+                                         jnp.int32(prompt_len + t), enc_out)
+        outs.append(tok)
+    toks = jnp.concatenate(outs, axis=1)
+    t_decode = time.time() - t1
+    print(f"arch={cfg.name} batch={batch} prompt={prompt_len} gen={gen}")
+    print(f"prefill {t_prefill:.2f}s; decode {t_decode:.2f}s "
+          f"({batch * gen / max(t_decode, 1e-9):.1f} tok/s)")
+    print("sample:", toks[0].tolist())
+    return toks
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    run(args.arch, reduced=args.reduced, batch=args.batch,
+        prompt_len=args.prompt_len, gen=args.gen)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,205 @@
+"""Distributed step builders + ShapeDtypeStruct input specs for every
+(arch × shape) cell.
+
+``input_specs(cfg, shape)`` returns sharding-annotated ShapeDtypeStructs —
+the dry-run lowers against these (no allocation), and the real trainer uses
+the same functions to place actual data.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import SHAPES, ShapeConfig
+from repro.core import gd, rounding
+from repro.dist.sharding import MeshAxes, activation_spec, \
+    build_param_shardings, evenly_divisible_spec, set_mesh_axes
+from repro.models import build_model
+from repro.optim import qsgd
+
+
+# ------------------------------------------------------------- optimizers --
+def paper_optimizer(lr: float = 1e-3, fmt: str = "bfloat16"):
+    """The paper's technique as the production update path: SR for the
+    stepsize multiply, signed-SRε (ε=0.1, v=gradient) for the subtraction,
+    momentum kept on an SR-rounded low-precision grid."""
+    cfg = gd.GDRounding(
+        grad=rounding.IDENTITY,              # grads computed in bf16/fp32
+        mul=rounding.spec(fmt, "sr"),
+        sub=rounding.spec(fmt, "signed_sr_eps", 0.1),
+        sub_v="grad")
+    return qsgd(lr=lr, momentum=0.9, cfg=cfg,
+                momentum_spec=rounding.spec(fmt, "sr"))
+
+
+def baseline_optimizer(lr: float = 1e-3):
+    """fp32 SGD+momentum baseline (identity rounding)."""
+    return qsgd(lr=lr, momentum=0.9)
+
+
+# ------------------------------------------------------------ step makers --
+def make_train_step(model, optimizer, *, grad_dtype=jnp.bfloat16):
+    """Mixed-precision train step: the loss is differentiated w.r.t.
+    bf16-cast params so gradients (and their cross-device reductions) are
+    bf16; the optimizer applies them to the fp32/low-precision master
+    params through the paper's rounded update path."""
+    def train_step(params, opt_state, batch):
+        rng = jax.random.fold_in(opt_state.key, opt_state.step)
+
+        def cast(p):
+            return jax.tree.map(
+                lambda x: x.astype(grad_dtype)
+                if x.dtype == jnp.float32 else x, p)
+
+        def loss_fn(p):
+            return model.loss_fn(p, batch, rng=rng)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(cast(params))
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        new_params, new_state = optimizer.apply(params, grads, opt_state)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, rng=jax.random.PRNGKey(0))
+    return prefill_step
+
+
+def make_serve_step(model, *, enc_len: int = 0):
+    def serve_step(params, caches, tokens, pos, enc_out=None):
+        logits, new_caches = model.decode_step(
+            params, caches, tokens, pos, enc_out=enc_out)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
+        return next_tok, logits, new_caches
+    return serve_step
+
+
+# ------------------------------------------------------------ input specs --
+def _sds(shape, dtype, mesh=None, spec=None):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    spec = evenly_divisible_spec(spec or P(), shape, mesh)
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh=None,
+                ax: Optional[MeshAxes] = None) -> Dict[str, Any]:
+    """Training/prefill batch ShapeDtypeStructs for one cell."""
+    B, S = shape.global_batch, shape.seq_len
+    bt = tuple(ax.batch) if (ax and ax.batch) else None
+    tok_spec = P(bt, None) if mesh else None
+    emb_spec = P(bt, None, None) if mesh else None
+    out: Dict[str, Any] = {}
+    s_text = S
+    if cfg.frontend == "vision":
+        s_text = S - cfg.frontend_len
+        out["vision_embeds"] = _sds((B, cfg.frontend_len, cfg.d_model),
+                                    jnp.bfloat16, mesh, emb_spec)
+    if cfg.frontend == "audio":
+        out["src_embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16, mesh,
+                                 emb_spec)
+    out["tokens"] = _sds((B, s_text), jnp.int32, mesh, tok_spec)
+    if shape.kind == "train":
+        out["labels"] = _sds((B, s_text), jnp.int32, mesh, tok_spec)
+    return out
+
+
+def _cache_sharding_tree(model, caches_shape, mesh, ax: MeshAxes):
+    """NamedShardings for a decode-cache spec tree."""
+    dp = tuple(ax.batch) if ax.batch else None
+
+    n_model = mesh.shape[ax.model]
+
+    def spec_for(path_leaf):
+        path, leaf = path_leaf
+        nd = len(leaf.shape)
+        # leading dim is layers; batch dim is index 1; shard model-ish dims
+        if nd == 5:    # (L, B, S, KV, hd) or (L, B, H, P, N)
+            if leaf.shape[3] % n_model != 0 and leaf.shape[2] % n_model == 0:
+                # GQA with few KV heads: shard the *sequence* over model
+                # (context-parallel decode) instead of replicating
+                return P(None, dp, ax.model, None, None)
+            return P(None, dp, None, ax.model, None)
+        if nd == 4:    # (L, B, S, rank) — MLA compressed cache has no head
+            # dim, so shard the *sequence* over the model axis (context-
+            # parallel decode); (L, B, W, conv) conv windows fall back to
+            # replication via the divisibility filter.
+            return P(None, dp, ax.model, None)
+        if nd == 3:    # (L, B, D) shift states
+            return P(None, dp, None)
+        return P(*([None] * nd))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches_shape)
+    shardings = [
+        NamedSharding(mesh, evenly_divisible_spec(spec_for(x), x[1].shape,
+                                                  mesh))
+        for x in flat]
+    return jax.tree_util.tree_unflatten(treedef, shardings)
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh=None,
+                       ax: Optional[MeshAxes] = None):
+    """(cache_specs, token_spec, pos, enc_out_spec) for a decode cell."""
+    model = build_model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    caches_shape = jax.eval_shape(
+        lambda: model.init_decode_cache(B, S, dtype=jnp.bfloat16))
+    if mesh is not None:
+        sh = _cache_sharding_tree(model, caches_shape, mesh, ax)
+        caches_shape = jax.tree.map(
+            lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+            caches_shape, sh)
+    dp = tuple(ax.batch) if (ax and ax.batch) else None
+    tokens = _sds((B, 1), jnp.int32, mesh, P(dp, None) if mesh else None)
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = _sds((B, S, cfg.d_model), jnp.bfloat16, mesh,
+                       P(dp, None, None) if mesh else None)
+    return caches_shape, tokens, jnp.int32(S - 1), enc_out
+
+
+def param_and_opt_specs(cfg: ModelConfig, optimizer, mesh=None,
+                        ax: Optional[MeshAxes] = None, serve: bool = False):
+    """ShapeDtypeStructs (sharded) for params + optimizer state."""
+    model = build_model(cfg)
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    opt_shape = jax.eval_shape(
+        lambda p: optimizer.init(p, jax.random.PRNGKey(1)), params_shape)
+    if mesh is None:
+        return params_shape, opt_shape
+
+    p_sh = build_param_shardings(params_shape, mesh, ax, serve=serve)
+    params_spec = jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        params_shape, p_sh)
+
+    def opt_leaf(path, leaf):
+        return jax.ShapeDtypeStruct(
+            leaf.shape, leaf.dtype, sharding=NamedSharding(mesh, P()))
+
+    # momentum mirrors param shardings; scalars replicated
+    mom = opt_shape.momentum
+    if mom != ():
+        m_sh = build_param_shardings(mom, mesh, ax)
+        mom = jax.tree.map(
+            lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+            mom, m_sh)
+    opt_spec = opt_shape._replace(
+        momentum=mom,
+        step=jax.ShapeDtypeStruct((), jnp.int32,
+                                  sharding=NamedSharding(mesh, P())),
+        key=jax.ShapeDtypeStruct(opt_shape.key.shape, opt_shape.key.dtype,
+                                 sharding=NamedSharding(mesh, P())))
+    return params_spec, opt_spec

@@ -1,0 +1,4 @@
+"""Composable model zoo (pure functional JAX)."""
+from repro.models.model import build_model, Model
+
+__all__ = ["build_model", "Model"]

@@ -1,0 +1,230 @@
+"""GQA/MQA attention with RoPE / M-RoPE, sliding windows, KV caches.
+
+Two entry modes:
+* train/prefill: full-sequence causal (or bidirectional for encoders);
+* decode: one new token against a (B, S_max, n_kv, hd) cache.
+
+TP sharding: head dims are annotated with the "model" axis by the trainer's
+sharding rules (dist/sharding.py); the code itself is mesh-agnostic.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+class KVCache(NamedTuple):
+    k: jax.Array       # (B, S_max, n_kv, hd)
+    v: jax.Array
+    length: jax.Array  # () int32 — tokens already cached
+
+
+def attn_init(key, cfg):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": L.dense_init(k1, d, nh * hd),
+        "wk": L.dense_init(k2, d, nkv * hd),
+        "wv": L.dense_init(k3, d, nkv * hd),
+        "wo": L.dense_init(k4, nh * hd, d, scale=1.0 / (nh * hd) ** 0.5),
+    }
+
+
+def _rotary(q, k, positions, cfg, positions3=None):
+    if cfg.pos == "rope":
+        return (L.apply_rope(q, positions, cfg.rope_theta),
+                L.apply_rope(k, positions, cfg.rope_theta))
+    if cfg.pos == "mrope":
+        hd = q.shape[-1]
+        third = hd // 2 // 3
+        sections = (hd // 2 - 2 * third, third, third)
+        if positions3 is None:
+            positions3 = jnp.broadcast_to(positions[None],
+                                          (3,) + positions.shape)
+        return (L.apply_mrope(q, positions3, cfg.rope_theta, sections),
+                L.apply_mrope(k, positions3, cfg.rope_theta, sections))
+    return q, k
+
+
+def _sdpa(q, k, v, mask, scale):
+    """Naive attention: materializes (B, KV, G, Sq, Skv) scores.  Kept as
+    the §Perf baseline and for decode (Sq == 1).  GQA via head grouping;
+    the value head-dim may differ from the key head-dim (MLA)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    group = H // KV
+    dv = v.shape[-1]
+    q = q.reshape(B, Sq, KV, group, hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskv->bqkgv", probs.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, dv)
+
+
+def flash_attention(q, k, v, scale, *, causal=True, window: int = 0,
+                    q_block: int = 1024, kv_block: int = 1024):
+    """Blocked attention with online softmax (FlashAttention recurrence,
+    TPU-native: plain MXU matmuls over VMEM-sized tiles; blocks are
+    python-unrolled so the dry-run cost analysis sees every FLOP).
+
+    q: (B, Sq, H, dk); k: (B, Skv, KV, dk); v: (B, Skv, KV, dv).
+    Causal blocks strictly above the diagonal (and outside the sliding
+    window) are skipped entirely — the same work-skipping a production
+    kernel does.
+    """
+    B, Sq, H, dk = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    dv = v.shape[-1]
+    qb = min(q_block, Sq)
+    kb = min(kv_block, k.shape[1])
+    n_q = -(-Sq // qb)
+    n_k = -(-k.shape[1] // kb)
+    qf = q.astype(jnp.float32).reshape(B, Sq, KV, G, dk)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    out_blocks = []
+    for i in range(n_q):
+        q_i = qf[:, i * qb:(i + 1) * qb]                    # (B,qb,KV,G,dk)
+        qlen = q_i.shape[1]
+        m = jnp.full((B, KV, G, qlen), -jnp.inf, jnp.float32)
+        l = jnp.zeros((B, KV, G, qlen), jnp.float32)
+        acc = jnp.zeros((B, KV, G, qlen, dv), jnp.float32)
+        q_lo = i * qb
+        q_hi = q_lo + qlen - 1
+        for j in range(n_k):
+            k_lo = j * kb
+            if causal and k_lo > q_hi:
+                continue                                    # above diagonal
+            k_hi = min((j + 1) * kb, k.shape[1]) - 1
+            if window and k_hi < q_lo - window + 1:
+                continue                                    # left of window
+            k_j = kf[:, k_lo:k_hi + 1]
+            v_j = vf[:, k_lo:k_hi + 1]
+            s = jnp.einsum("bqkgh,bskh->bkgqs", q_i, k_j) * scale
+            need_mask = (causal and k_hi > q_lo) or window
+            if need_mask:
+                qpos = jnp.arange(q_lo, q_hi + 1)[:, None]
+                kpos = jnp.arange(k_lo, k_hi + 1)[None, :]
+                mask = kpos <= qpos if causal else jnp.ones_like(
+                    kpos <= qpos)
+                if window:
+                    mask = mask & (kpos > qpos - window)
+                s = jnp.where(mask[None, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # guard fully-masked rows (m_new == -inf)
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(jnp.isfinite(s), p, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskv->bkgqv", p, v_j)
+            m = m_new
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        out_blocks.append(out)                              # (B,KV,G,qb,dv)
+    o = jnp.concatenate(out_blocks, axis=3)                 # (B,KV,G,Sq,dv)
+    return jnp.moveaxis(o, 3, 1).reshape(B, Sq, H, dv).astype(q.dtype)
+
+
+def causal_mask(Sq: int, Skv: int, q_offset=0, window: int = 0):
+    q_pos = jnp.arange(Sq)[:, None] + q_offset
+    k_pos = jnp.arange(Skv)[None, :]
+    m = k_pos <= q_pos
+    if window:
+        m = m & (k_pos > q_pos - window)
+    return m
+
+
+def attn_apply(params, x, positions, cfg, *, causal=True,
+               cache: Optional[KVCache] = None,
+               positions3=None,
+               return_kv: bool = False) -> Tuple[jax.Array, Optional[KVCache]]:
+    """x: (B, S, D). With ``cache`` given, S is the new-token count (decode)."""
+    B, S, D = x.shape
+    hd = cfg.resolved_head_dim
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    dtype = x.dtype
+
+    q = (x @ params["wq"].astype(dtype)).reshape(B, S, nh, hd)
+    k = (x @ params["wk"].astype(dtype)).reshape(B, S, nkv, hd)
+    v = (x @ params["wv"].astype(dtype)).reshape(B, S, nkv, hd)
+    q, k = _rotary(q, k, positions, cfg, positions3)
+
+    if cache is not None:
+        # decode: append new k/v at cache.length, attend to the full prefix
+        start = cache.length
+        k_all = jax.lax.dynamic_update_slice(
+            cache.k, k.astype(cache.k.dtype), (0, start, 0, 0))
+        v_all = jax.lax.dynamic_update_slice(
+            cache.v, v.astype(cache.v.dtype), (0, start, 0, 0))
+        Skv = k_all.shape[1]
+        k_pos = jnp.arange(Skv)
+        valid = k_pos[None, :] < (start + S)
+        if cfg.sliding_window:
+            valid = valid & (k_pos[None, :] > start + S - 1 - cfg.sliding_window)
+        mask = jnp.broadcast_to(valid[:, None, :], (B, S, Skv))
+        out = _sdpa(q, k_all.astype(dtype), v_all.astype(dtype), mask,
+                    1.0 / hd ** 0.5)
+        new_cache = KVCache(k=k_all, v=v_all, length=start + S)
+    else:
+        if getattr(cfg, "attn_impl", "flash") == "flash":
+            out = flash_attention(q, k, v, 1.0 / hd ** 0.5, causal=causal,
+                                  window=cfg.sliding_window,
+                                  q_block=getattr(cfg, "attn_q_block", 1024),
+                                  kv_block=getattr(cfg, "attn_kv_block", 1024))
+        else:
+            if causal:
+                m = causal_mask(S, S, window=cfg.sliding_window)
+            else:
+                m = jnp.ones((S, S), bool)
+            mask = jnp.broadcast_to(m[None], (B, S, S))
+            out = _sdpa(q, k, v, mask, 1.0 / hd ** 0.5)
+        new_cache = None
+        if return_kv:   # prefill: emit the cache this pass produced
+            new_cache = KVCache(k=k.astype(jnp.bfloat16),
+                                v=v.astype(jnp.bfloat16),
+                                length=jnp.full((), S, jnp.int32))
+
+    y = out.reshape(B, S, nh * hd) @ params["wo"].astype(dtype)
+    return y, new_cache
+
+
+def cross_attn_init(key, cfg):
+    return attn_init(key, cfg)
+
+
+def cross_attn_apply(params, x, enc_out, cfg):
+    """Decoder cross-attention (no cache for enc k/v recompute simplicity)."""
+    B, S, D = x.shape
+    hd = cfg.resolved_head_dim
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    dtype = x.dtype
+    enc_out = enc_out.astype(dtype)
+    q = (x @ params["wq"].astype(dtype)).reshape(B, S, nh, hd)
+    k = (enc_out @ params["wk"].astype(dtype)).reshape(
+        B, enc_out.shape[1], nkv, hd)
+    v = (enc_out @ params["wv"].astype(dtype)).reshape(
+        B, enc_out.shape[1], nkv, hd)
+    mask = jnp.ones((B, S, enc_out.shape[1]), bool)
+    out = _sdpa(q, k, v, mask, 1.0 / hd ** 0.5)
+    return out.reshape(B, S, nh * hd) @ params["wo"].astype(dtype)
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16,
+               n_layers: Optional[int] = None) -> KVCache:
+    """Stacked (over layers) KV cache for decode."""
+    nl = n_layers if n_layers is not None else cfg.n_layers
+    hd = cfg.resolved_head_dim
+    shape = (nl, batch, max_len, cfg.n_kv_heads, hd)
+    # length carried per layer so stacked caches slice/scan uniformly
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   length=jnp.zeros((nl,), jnp.int32))

@@ -1,0 +1,30 @@
+"""Dense FFN blocks: SwiGLU / GeGLU / plain-GELU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def ffn_init(key, d_model: int, d_ff: int, act: str):
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {"w_up": L.dense_init(k1, d_model, d_ff),
+              "w_down": L.dense_init(k2, d_ff, d_model)}
+    if act in ("swiglu", "geglu"):
+        params["w_gate"] = L.dense_init(k3, d_model, d_ff)
+    return params
+
+
+def ffn_apply(params, x, act: str):
+    dtype = x.dtype
+    up = x @ params["w_up"].astype(dtype)
+    if act == "swiglu":
+        gate = jax.nn.silu(x @ params["w_gate"].astype(dtype))
+        h = gate * up
+    elif act == "geglu":
+        gate = jax.nn.gelu(x @ params["w_gate"].astype(dtype))
+        h = gate * up
+    else:
+        h = L.ACT[act](up)
+    return h @ params["w_down"].astype(dtype)

@@ -1,0 +1,94 @@
+"""Primitive layers: norms, embeddings, rotary position embeddings (RoPE and
+multimodal M-RoPE), initializers, activations.
+
+Everything is functional: ``*_init(key, ...) -> params`` and pure apply
+functions.  Compute dtype is bfloat16 with fp32 params (the mixed-precision
+baseline); the paper's low-precision machinery acts on the *optimizer* path
+(see repro/optim), so model math stays in the standard TPU dtypes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ACT = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+    "relu_sq": lambda x: jnp.square(jax.nn.relu(x)),
+}
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def dense_init(key, d_in: int, d_out: int, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale)
+
+
+def embed_init(key, vocab: int, d: int):
+    return jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return y.astype(dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps) * (1.0 + scale) + bias
+    return y.astype(dtype)
+
+
+# ------------------------------------------------------------------- RoPE --
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, np.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(hd, theta))          # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float = 10000.0,
+                sections=(16, 24, 24)):
+    """Qwen2-VL multimodal RoPE: the hd/2 frequency slots are split into
+    (temporal, height, width) sections, each rotated by its own position id.
+
+    x: (B, S, H, hd); positions3: (3, B, S) — for text, all three equal the
+    linear position (the stub frontend provides patch positions likewise).
+    sections must sum to hd/2.
+    """
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    freqs = jnp.asarray(rope_frequencies(hd, theta))          # (hd/2,)
+    # per-slot section id: slot j takes the position of axis seg[j]
+    seg = jnp.asarray(
+        np.concatenate([np.full(s, i) for i, s in enumerate(sections)]),
+        jnp.int32)                                            # (hd/2,)
+    pos_sel = jnp.moveaxis(positions3, 0, -1)                 # (B, S, 3)
+    pos_per_slot = pos_sel[..., seg].astype(jnp.float32)      # (B, S, hd/2)
+    angles = pos_per_slot * freqs                             # (B, S, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

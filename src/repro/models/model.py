@@ -1,0 +1,210 @@
+"""Model facade: init / loss / decode for every assigned architecture.
+
+* decoder-only (dense, MoE, MLA, SSM, RWKV, hybrid): next-token CE training,
+  cached single-token decode;
+* encoder–decoder (seamless-m4t): encoder over precomputed frame embeddings
+  (audio frontend is a stub per the assignment), causal decoder with
+  cross-attention;
+* VLM (qwen2-vl): precomputed patch embeddings (vision frontend stub)
+  prepended to the token embeddings, M-RoPE positions.
+
+The CE loss is computed in sequence chunks so the (B, S, V) logits tensor is
+never materialized whole (vocab 256k × 4k seq would not fit); logits carry a
+vocab-TP sharding constraint so the softmax reductions partition.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import shard_act
+from repro.models import attention, layers as L, mla, rwkv, ssm, transformer
+
+LOSS_CHUNK = 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------- params --
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        k_embed, k_blocks, k_enc, k_head = jax.random.split(key, 4)
+        params: Dict[str, Any] = {
+            "embed": L.embed_init(k_embed, cfg.vocab_size, cfg.d_model),
+            "blocks": transformer.init_blocks(k_blocks, cfg, self.decoder_plan()),
+            "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+        if cfg.encoder_layers:
+            params["enc_blocks"] = transformer.init_blocks(
+                k_enc, cfg, ("attn",) * cfg.encoder_layers)
+            params["enc_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = L.dense_init(k_head, cfg.d_model,
+                                             cfg.vocab_size, scale=0.02)
+        return params
+
+    def decoder_plan(self):
+        if self.cfg.encoder_layers:
+            return ("dec_attn",) * self.cfg.n_layers
+        return self.cfg.plan()
+
+    # ------------------------------------------------------------ forward --
+    def _embed_inputs(self, params, batch):
+        """Token (+ stub-frontend) embedding.  Returns (x, positions,
+        positions3, label_offset)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = params["embed"][tokens].astype(L.COMPUTE_DTYPE)
+        B, S_text = tokens.shape
+        offset = 0
+        if cfg.frontend == "vision" and "vision_embeds" in batch:
+            ve = batch["vision_embeds"].astype(L.COMPUTE_DTYPE)
+            x = jnp.concatenate([ve, x], axis=1)
+            offset = ve.shape[1]
+        S = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        positions3 = None
+        if cfg.pos == "mrope":
+            # stub frontend: patches share their (t, h, w) linear ids; text
+            # continues linearly on all three sections
+            positions3 = jnp.broadcast_to(positions[None], (3, B, S))
+        x = shard_act(x, "hidden")
+        return x, positions, positions3, offset
+
+    def _encode(self, params, batch, rng):
+        """Encoder over precomputed frame embeddings (audio stub)."""
+        cfg = self.cfg
+        x = batch["src_embeds"].astype(L.COMPUTE_DTYPE)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x = shard_act(x, "hidden")
+        x, _, _ = transformer.apply_blocks(
+            params["enc_blocks"], x, positions, cfg,
+            ("attn",) * cfg.encoder_layers, rng=rng, causal=False)
+        return L.rms_norm(x, params["enc_norm"])
+
+    def hidden_states(self, params, batch, rng=None):
+        """Full-sequence forward to final hidden states (train/prefill)."""
+        cfg = self.cfg
+        enc_out = None
+        if cfg.encoder_layers:
+            enc_out = self._encode(params, batch, rng)
+        x, positions, positions3, offset = self._embed_inputs(params, batch)
+        x, aux, _ = transformer.apply_blocks(
+            params["blocks"], x, positions, cfg, self.decoder_plan(),
+            positions3=positions3, rng=rng, enc_out=enc_out)
+        x = L.rms_norm(x, params["final_norm"])
+        return x, aux, offset
+
+    def _logits(self, params, h):
+        w = (params["embed"].T if self.cfg.tie_embeddings
+             else params["lm_head"]).astype(h.dtype)
+        return shard_act(h @ w, "logits")
+
+    # --------------------------------------------------------------- loss --
+    def loss_fn(self, params, batch, rng=None) -> Tuple[jax.Array, Dict]:
+        """Chunked next-token cross-entropy (+ MoE aux)."""
+        h, aux, offset = self.hidden_states(params, batch, rng)
+        labels = batch["labels"]
+        if offset:
+            h = h[:, offset:, :]
+        B, S, _ = h.shape
+        n_chunks = max(1, -(-S // LOSS_CHUNK))
+        total, count = jnp.float32(0.0), 0
+        for i in range(n_chunks):
+            sl = slice(i * LOSS_CHUNK, min((i + 1) * LOSS_CHUNK, S))
+            logits = self._logits(params, h[:, sl, :]).astype(jnp.float32)
+            lab = labels[:, sl]
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+            total = total + jnp.sum(logz - gold)
+            count += logits.shape[0] * logits.shape[1]
+        loss = total / count
+        metrics = {"ce": loss, "moe_aux": aux}
+        if self.cfg.moe is not None:
+            loss = loss + 0.01 * aux
+        return loss, metrics
+
+    # ------------------------------------------------------------ prefill --
+    def prefill(self, params, batch, rng=None):
+        """Full-sequence forward that also *emits the caches* (KV /
+        compressed-KV / SSM / RWKV states) plus next-token logits — the
+        inference-prefill step."""
+        cfg = self.cfg
+        enc_out = None
+        if cfg.encoder_layers:
+            enc_out = self._encode(params, batch, rng)
+        x, positions, positions3, _ = self._embed_inputs(params, batch)
+        x, _, caches = transformer.apply_blocks(
+            params["blocks"], x, positions, cfg, self.decoder_plan(),
+            positions3=positions3, rng=rng, enc_out=enc_out,
+            collect_cache=True)
+        x = L.rms_norm(x, params["final_norm"])
+        next_logits = self._logits(params, x[:, -1:, :])
+        return next_logits, caches
+
+    # ------------------------------------------------------------- decode --
+    def init_decode_cache(self, batch: int, max_len: int,
+                          dtype=jnp.bfloat16) -> Dict[str, Any]:
+        cfg = self.cfg
+        plan = self.decoder_plan()
+        counts = transformer.plan_counts(plan)
+        caches: Dict[str, Any] = {}
+        for t, n in counts.items():
+            if t in ("attn", "attn_dense", "dec_attn", "shared_attn"):
+                if cfg.mla is not None:
+                    caches[t] = mla.init_mla_cache(cfg, batch, max_len,
+                                                   dtype, n_layers=n)
+                else:
+                    eff_len = max_len
+                    if cfg.sliding_window:
+                        eff_len = min(max_len, cfg.sliding_window)
+                    caches[t] = attention.init_cache(cfg, batch, eff_len,
+                                                     dtype, n_layers=n)
+            elif t == "mamba":
+                caches[t] = ssm.init_ssm_cache(cfg, batch, n_layers=n)
+            elif t == "rwkv":
+                caches[t] = rwkv.init_rwkv_cache(cfg, batch, n_layers=n)
+        return caches
+
+    def prime_cache_lengths(self, caches, length: int):
+        """Mark `length` tokens as already present (decode-shape dry runs
+        start from a full prefix)."""
+        def bump(t, c):
+            if hasattr(c, "length"):
+                return c._replace(length=jnp.full_like(c.length, length))
+            return c
+        return {t: bump(t, c) for t, c in caches.items()}
+
+    def decode_step(self, params, caches, tokens, pos, enc_out=None,
+                    rng=None):
+        """One-token decode.  tokens: (B, 1); pos: scalar position index."""
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(L.COMPUTE_DTYPE)
+        B = tokens.shape[0]
+        positions = jnp.broadcast_to(
+            jnp.asarray(pos)[None, None], (B, 1)).astype(jnp.int32)
+        positions3 = None
+        if cfg.pos == "mrope":
+            positions3 = jnp.broadcast_to(positions[None], (3, B, 1))
+        x, _, new_caches = transformer.apply_blocks(
+            params["blocks"], x, positions, cfg, self.decoder_plan(),
+            caches=caches, positions3=positions3, rng=rng, enc_out=enc_out)
+        x = L.rms_norm(x, params["final_norm"])
+        logits = self._logits(params, x)
+        return logits, new_caches
+
+    # ------------------------------------------------------- param counts --
+    def param_count(self, params) -> int:
+        return sum(p.size for p in jax.tree_util.tree_leaves(params))
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg=cfg)

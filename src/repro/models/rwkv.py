@@ -1,0 +1,193 @@
+"""RWKV-6 ("Finch") — attention-free token mixing with data-dependent decay.
+
+Time-mix recurrence per head (N = head key dim, V = head value dim):
+
+    out_t = r_t · (diag(u) · k_t v_tᵀ + S_{t-1})
+    S_t   = diag(w_t) · S_{t-1} + k_t v_tᵀ          w_t = exp(-exp(ŵ_t))
+
+where ŵ_t is data-dependent through a low-rank MLP (the Finch novelty).
+Training uses a chunk-parallel form (GLA-style): intra-chunk decay-weighted
+scores via cumulative log-decays, inter-chunk state carried by a short scan
+— all matmuls, TPU-native (no CUDA wkv kernel).  Decode is the O(1) step.
+
+Channel-mix is the squared-ReLU token-shifted FFN of the RWKV papers.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+class RWKVCache(NamedTuple):
+    tm_shift: jax.Array   # (B, D) last token seen by time-mix
+    cm_shift: jax.Array   # (B, D) last token seen by channel-mix
+    state: jax.Array      # (B, H, N, V) wkv state
+
+
+def _dims(cfg):
+    hd = cfg.rwkv.head_dim
+    H = cfg.d_model // hd
+    return H, hd
+
+
+def rwkv_init(key, cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    H, hd = _dims(cfg)
+    r = cfg.rwkv.decay_lora
+    ks = jax.random.split(key, 12)
+    return {
+        # time-mix
+        "mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "mu_v": jnp.full((d,), 0.5, jnp.float32),
+        "mu_w": jnp.full((d,), 0.5, jnp.float32),
+        "mu_g": jnp.full((d,), 0.5, jnp.float32),
+        "w_r": L.dense_init(ks[0], d, d),
+        "w_k": L.dense_init(ks[1], d, d),
+        "w_v": L.dense_init(ks[2], d, d),
+        "w_g": L.dense_init(ks[3], d, d),
+        "w_o": L.dense_init(ks[4], d, d),
+        "decay_w0": jnp.full((d,), -4.0, jnp.float32),   # slow decay default
+        "decay_a": L.dense_init(ks[5], d, r, scale=0.01),
+        "decay_b": L.dense_init(ks[6], r, d, scale=0.01),
+        "u": jnp.zeros((H, hd), jnp.float32),            # first-token bonus
+        "ln_out": jnp.zeros((d,), jnp.float32),
+        # channel-mix
+        "cm_mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "cm_mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "cm_k": L.dense_init(ks[7], d, f),
+        "cm_v": L.dense_init(ks[8], f, d),
+        "cm_r": L.dense_init(ks[9], d, d),
+    }
+
+
+def _shift(x, last=None):
+    """Token shift: previous token's features (zeros / cache at t=0)."""
+    prev = jnp.roll(x, 1, axis=1).at[:, 0, :].set(
+        0.0 if last is None else last)
+    return prev
+
+
+def _lerp(x, prev, mu):
+    return x + (prev - x) * mu
+
+
+def _wkv_chunked(r, k, v, logw, u, chunk: int):
+    """Chunk-parallel wkv.
+
+    r/k: (B, S, H, N); v: (B, S, H, V); logw: (B, S, H, N) (log decay ≤ 0).
+    Returns out (B, S, H, V), final state (B, H, N, V).
+    """
+    B, S, H, N = k.shape
+    V = v.shape[-1]
+    nc = S // chunk
+    ch = lambda t: t.reshape(B, nc, chunk, H, -1)
+    rc, kc, vc, wc = ch(r), ch(k), ch(v), ch(logw)
+    cum = jnp.cumsum(wc, axis=2)                     # (B,nc,Lc,H,N)
+
+    # intra-chunk: score[t,s] = sum_n r_t,n k_s,n exp(cum_{t-1} - cum_s), s<t
+    r_t = rc * jnp.exp(cum - wc)                     # r_t ⊙ exp(cum_{t-1})
+    k_s = kc * jnp.exp(-cum)                         # k_s ⊙ exp(-cum_s)
+    scores = jnp.einsum("bcthn,bcshn->bchts", r_t, k_s)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    scores = jnp.where(mask[None, None, None], scores, 0.0)
+    y_intra = jnp.einsum("bchts,bcshv->bcthv", scores, vc)
+    # diagonal bonus term: (r_t ⊙ u ⊙ k_t)·1 v_t
+    diag = jnp.einsum("bcthn,hn,bcthn->bcth", rc, u, kc)
+    y_intra = y_intra + diag[..., None] * vc
+
+    # inter-chunk state
+    last = cum[:, :, -1:, :, :]
+    k_in = kc * jnp.exp(last - cum)                  # decay to chunk end
+    chunk_state = jnp.einsum("bcshn,bcshv->bchnv", k_in, vc)
+    chunk_decay = jnp.exp(last[:, :, 0])             # (B,nc,H,N)
+
+    def scan_fn(Sstate, inp):
+        cs, cd = inp
+        return Sstate * cd[..., None] + cs, Sstate
+
+    S0 = jnp.zeros((B, H, N, V), r.dtype)
+    S_final, S_prevs = jax.lax.scan(
+        scan_fn, S0, (jnp.moveaxis(chunk_state, 1, 0),
+                      jnp.moveaxis(chunk_decay, 1, 0)))
+    S_prevs = jnp.moveaxis(S_prevs, 0, 1)            # (B,nc,H,N,V)
+    y_inter = jnp.einsum("bcthn,bchnv->bcthv", r_t, S_prevs)
+    return (y_intra + y_inter).reshape(B, S, H, V), S_final
+
+
+def rwkv_time_mix(params, x, cfg, cache: Optional[RWKVCache] = None,
+                  return_state: bool = False):
+    B, S, D = x.shape
+    H, hd = _dims(cfg)
+    dtype = x.dtype
+    prev = _shift(x, None if cache is None else cache.tm_shift.astype(dtype))
+    # NOTE(§Perf, refuted): fusing the five lerped projections into two
+    # concatenated matmuls (x@W_cat + d@V_cat) halves the backward dx
+    # all-reduce count but *doubles* projection FLOPs and triggered XLA
+    # re-sharding permutes — measured net-negative (EXPERIMENTS.md §Perf).
+    xr = _lerp(x, prev, params["mu_r"].astype(dtype))
+    xk = _lerp(x, prev, params["mu_k"].astype(dtype))
+    xv = _lerp(x, prev, params["mu_v"].astype(dtype))
+    xw = _lerp(x, prev, params["mu_w"].astype(dtype))
+    xg = _lerp(x, prev, params["mu_g"].astype(dtype))
+
+    r = (xr @ params["w_r"].astype(dtype)).reshape(B, S, H, hd)
+    k = (xk @ params["w_k"].astype(dtype)).reshape(B, S, H, hd)
+    v = (xv @ params["w_v"].astype(dtype)).reshape(B, S, H, hd)
+    g = jax.nn.silu(xg @ params["w_g"].astype(dtype))
+
+    # data-dependent decay (Finch): ŵ = w0 + tanh(xw A) B
+    w_hat = params["decay_w0"] + (
+        jnp.tanh(xw.astype(jnp.float32) @ params["decay_a"])
+        @ params["decay_b"])
+    logw = -jnp.exp(w_hat).reshape(B, S, H, hd)      # log decay ≤ 0
+
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    if cache is None:
+        out, s_final = _wkv_chunked(rf, kf, vf, logw, params["u"],
+                                    min(cfg.rwkv.chunk, S))
+        new_state = s_final if return_state else None
+    else:
+        # one-step recurrence
+        Sst = cache.state                             # (B,H,N,V)
+        kv = jnp.einsum("bshn,bshv->bhnv", kf, vf)
+        out = jnp.einsum("bshn,bhnv->bshv", rf,
+                         Sst + params["u"][None, :, :, None] * kv)
+        Sst = Sst * jnp.exp(logw[:, 0])[..., None] + kv
+        new_state = Sst
+
+    # Per-head group normalization (RWKV6 uses GroupNorm(n_heads)); also
+    # TP-local: normalizing within each head avoids the cross-model-shard
+    # all-gather a full-width norm would force before w_o (§Perf iteration
+    # on the rwkv6 train cell; see EXPERIMENTS.md).
+    out = L.rms_norm(out.reshape(B, S, H, hd).astype(dtype),
+                     params["ln_out"].reshape(H, hd))
+    out = out.reshape(B, S, D) * g
+    y = out @ params["w_o"].astype(dtype)
+    shift_out = x[:, -1, :]
+    return y, shift_out, new_state
+
+
+def rwkv_channel_mix(params, x, cfg, cache: Optional[RWKVCache] = None):
+    dtype = x.dtype
+    prev = _shift(x, None if cache is None else cache.cm_shift.astype(dtype))
+    xk = _lerp(x, prev, params["cm_mu_k"].astype(dtype))
+    xr = _lerp(x, prev, params["cm_mu_r"].astype(dtype))
+    k = jnp.square(jax.nn.relu(xk @ params["cm_k"].astype(dtype)))
+    kv = k @ params["cm_v"].astype(dtype)
+    y = jax.nn.sigmoid(xr @ params["cm_r"].astype(dtype)) * kv
+    return y, x[:, -1, :]
+
+
+def init_rwkv_cache(cfg, batch: int, dtype=jnp.float32,
+                    n_layers: Optional[int] = None) -> RWKVCache:
+    H, hd = _dims(cfg)
+    nl = n_layers if n_layers is not None else cfg.n_layers
+    return RWKVCache(
+        tm_shift=jnp.zeros((nl, batch, cfg.d_model), dtype),
+        cm_shift=jnp.zeros((nl, batch, cfg.d_model), dtype),
+        state=jnp.zeros((nl, batch, H, hd, hd), dtype))

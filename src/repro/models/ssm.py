@@ -1,0 +1,178 @@
+"""Mamba2 (SSD) block — chunked matmul formulation, TPU-native.
+
+State-space recurrence with scalar-per-head decay (Mamba2's SSD):
+
+    h_t = a_t · h_{t-1} + dt_t · B_t ⊗ x_t          (h: per-head (P, N))
+    y_t = C_t · h_t + D ⊙ x_t
+
+Training uses the chunk-parallel form (Mamba-2 paper §6): within a chunk of
+length ``Lc`` the output is an (Lc × Lc) decay-masked attention-like matmul
+(MXU-friendly); across chunks a short ``lax.scan`` carries the (H, P, N)
+state.  Decode is the O(1) single-step recurrence with a rolling conv state.
+This is the TPU adaptation: no CUDA selective-scan kernel, but the same
+FLOP structure mapped onto dense matmuls.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array    # (B, W-1, conv_dim) rolling conv input window
+    state: jax.Array   # (B, H, P, N) SSD state
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.state_dim   # x + B + C (single group)
+    return d_inner, H, conv_dim
+
+
+def ssm_init(key, cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, H, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        # order: [z (d_inner) | x (d_inner) | B (N) | C (N) | dt (H)]
+        "in_proj": L.dense_init(ks[0], d, 2 * d_inner + 2 * s.state_dim + H),
+        "conv_w": jax.random.normal(ks[1], (s.conv_width, conv_dim),
+                                    jnp.float32) * 0.2,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.zeros((d_inner,), jnp.float32),
+        "out_proj": L.dense_init(ks[2], d_inner, d),
+    }
+
+
+def _split_proj(proj, cfg):
+    s = cfg.ssm
+    d_inner, H, _ = _dims(cfg)
+    z, xs, Bmat, Cmat, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + s.state_dim,
+               2 * d_inner + 2 * s.state_dim], axis=-1)
+    return z, xs, Bmat, Cmat, dt
+
+
+def _causal_conv(u, w, b):
+    """u: (B, S, C); w: (W, C) depthwise causal conv."""
+    W = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + u.shape[1], :] * w[i] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def _ssd_chunked(xh, Bm, Cm, dt, A_log, chunk: int):
+    """Chunk-parallel SSD.
+
+    xh: (B, S, H, P); Bm/Cm: (B, S, N); dt: (B, S, H) (softplus'ed).
+    Returns y: (B, S, H, P) and final state (B, H, P, N).
+    """
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    a = -jnp.exp(A_log)[None, None, :] * dt            # log decay (B, S, H) <= 0
+    # chunked views
+    def ch(t):
+        return t.reshape(Bsz, nc, chunk, *t.shape[2:])
+    xc, bc, cc, dtc, ac = ch(xh), ch(Bm), ch(Cm), ch(dt), ch(a)
+    cum = jnp.cumsum(ac, axis=2)                       # (B, nc, Lc, H)
+
+    # intra-chunk: scores[t,s] = C_t·B_s * exp(cum_t - cum_s) * dt_s, t >= s
+    scores = jnp.einsum("bctn,bcsn->bcts", cc, bc)     # (B,nc,Lc,Lc)
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Lc,Lc,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    gate = jnp.where(mask[None, None, :, :, None], jnp.exp(decay), 0.0)
+    attn = scores[..., None] * gate * dtc[:, :, None, :, :]  # (B,nc,t,s,H)
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", attn, xc)
+
+    # inter-chunk: scan over chunk states
+    # state contribution of chunk: sum_s exp(cum_last - cum_s)*dt_s B_s x_s
+    last = cum[:, :, -1:, :]                           # (B,nc,1,H)
+    w_in = jnp.exp(last - cum) * dtc                   # (B,nc,Lc,H)
+    chunk_state = jnp.einsum("bcsh,bcsn,bcshp->bchpn", w_in, bc, xc)
+    chunk_decay = jnp.exp(last[:, :, 0, :])            # (B,nc,H)
+
+    def scan_fn(h, inp):
+        cs, cd = inp                                   # (B,H,P,N), (B,H)
+        h_new = h * cd[:, :, None, None] + cs
+        return h_new, h                                # emit state *before* chunk
+
+    h0 = jnp.zeros((Bsz, H, P, N), xh.dtype)
+    h_final, h_prevs = jax.lax.scan(
+        scan_fn,
+        h0,
+        (jnp.moveaxis(chunk_state, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)              # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bcth,bctn,bchpn->bcthp",
+                         jnp.exp(cum), cc, h_prevs)
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y, h_final
+
+
+def ssm_apply(params, x, cfg, cache: Optional[SSMCache] = None,
+              return_state: bool = False
+              ) -> Tuple[jax.Array, Optional[SSMCache]]:
+    """x: (B, S, D).  Decode path (cache given) expects S == 1."""
+    s = cfg.ssm
+    d_inner, H, conv_dim = _dims(cfg)
+    B_, S, D = x.shape
+    dtype = x.dtype
+    proj = x @ params["in_proj"].astype(dtype)
+    z, xs, Bm, Cm, dt = _split_proj(proj, cfg)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+
+    if cache is None:
+        conv_out = _causal_conv(conv_in, params["conv_w"], params["conv_b"])
+        xs, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + s.state_dim],
+                               axis=-1)
+        xh = xs.reshape(B_, S, H, s.head_dim).astype(jnp.float32)
+        y, h_final = _ssd_chunked(xh, Bm.astype(jnp.float32),
+                                  Cm.astype(jnp.float32), dt,
+                                  params["A_log"], min(s.chunk, S))
+        new_cache = None
+        if return_state:    # prefill: final state + rolling conv window
+            new_cache = SSMCache(conv=conv_in[:, -(s.conv_width - 1):, :],
+                                 state=h_final)
+    else:
+        # roll the conv window: window = [cache.conv, conv_in]
+        window = jnp.concatenate([cache.conv, conv_in], axis=1)
+        W = s.conv_width
+        conv_out = sum(window[:, i:i + 1, :] * params["conv_w"][i]
+                       for i in range(W))
+        conv_out = jax.nn.silu(conv_out + params["conv_b"])
+        xs, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + s.state_dim],
+                               axis=-1)
+        xh = xs.reshape(B_, 1, H, s.head_dim).astype(jnp.float32)
+        a = jnp.exp(-jnp.exp(params["A_log"])[None, None, :] * dt)  # (B,1,H)
+        dBx = jnp.einsum("bsh,bsn,bshp->bhpn", dt, Bm.astype(jnp.float32), xh)
+        h = cache.state * a[:, 0, :, None, None] + dBx
+        y = jnp.einsum("bsn,bhpn->bshp", Cm.astype(jnp.float32), h)
+        new_cache = SSMCache(conv=window[:, 1:, :], state=h)
+
+    y = y + params["D"][None, None, :, None] * xh
+    y = y.reshape(B_, S, d_inner).astype(dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), params["norm"])
+    return y @ params["out_proj"].astype(dtype), new_cache
+
+
+def init_ssm_cache(cfg, batch: int, dtype=jnp.float32,
+                   n_layers: Optional[int] = None) -> SSMCache:
+    s = cfg.ssm
+    d_inner, H, conv_dim = _dims(cfg)
+    nl = n_layers if n_layers is not None else cfg.n_layers
+    return SSMCache(
+        conv=jnp.zeros((nl, batch, s.conv_width - 1, conv_dim), dtype),
+        state=jnp.zeros((nl, batch, H, s.head_dim, s.state_dim), dtype))

@@ -1,0 +1,13 @@
+"""Low-precision optimizers with paper-faithful rounded update paths."""
+from repro.optim.sgd import QSGD, qsgd
+from repro.optim.adam import QAdam, qadam
+from repro.optim.scale import DynamicLossScale, dynamic_loss_scale
+from repro.optim.compress import (ef_compress_int8, ef_decompress_int8,
+                                  ErrorFeedbackState, init_error_feedback)
+
+__all__ = [
+    "QSGD", "qsgd", "QAdam", "qadam",
+    "DynamicLossScale", "dynamic_loss_scale",
+    "ef_compress_int8", "ef_decompress_int8", "ErrorFeedbackState",
+    "init_error_feedback",
+]

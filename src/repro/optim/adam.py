@@ -1,0 +1,81 @@
+"""QAdam — Adam with low-precision state and the paper's rounded update.
+
+m and v are stored on configurable low-precision grids (stochastic rounding
+keeps the small-update signal alive in the second moment exactly as it does
+for the parameters); the final parameter update goes through the eq.-8
+three-step rounding path, so signed-SRε biases the Adam step in a descent
+direction just as for plain GD.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gd import GDRounding
+from repro.core.rounding import IDENTITY, RoundingSpec
+from repro.optim import base
+
+
+class QAdamState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+    key: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class QAdam:
+    lr: float
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    cfg: GDRounding = GDRounding()
+    m_spec: RoundingSpec = IDENTITY
+    v_spec: RoundingSpec = IDENTITY
+    weight_decay: float = 0.0
+
+    def init(self, params, key: Optional[jax.Array] = None) -> QAdamState:
+        key = jax.random.PRNGKey(0) if key is None else key
+        zeros = lambda: jax.tree.map(jnp.zeros_like, params)
+        return QAdamState(step=jnp.zeros((), jnp.int32), m=zeros(), v=zeros(),
+                          key=key)
+
+    def apply(self, params, grads, state: QAdamState,
+              lr: Optional[Any] = None):
+        t = self.lr if lr is None else lr
+        step = state.step + 1
+        kp = base.leaf_keys(state.key, state.step, params)
+        km = base.leaf_keys(jax.random.fold_in(state.key, 0x6D), state.step, params)
+        kv = base.leaf_keys(jax.random.fold_in(state.key, 0x76), state.step, params)
+
+        def upd_m(m, g, k):
+            return base.round_state(self.m_spec, self.b1 * m + (1 - self.b1) * g, k)
+
+        def upd_v(v, g, k):
+            return base.round_state(self.v_spec, self.b2 * v + (1 - self.b2) * g * g, k)
+
+        new_m = jax.tree.map(upd_m, state.m, grads, km)
+        new_v = jax.tree.map(upd_v, state.v, grads, kv)
+        c1 = 1.0 - self.b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        def upd_p(p, m, v, k):
+            direction = (m / c1) / (jnp.sqrt(v / c2) + self.eps)
+            if self.weight_decay:
+                direction = direction + self.weight_decay * p
+            # the Adam direction plays the role of the gradient in eq. (8)
+            return base.rounded_param_update(p, direction, t, self.cfg, k)
+
+        new_params = jax.tree.map(upd_p, params, new_m, new_v, kp)
+        return new_params, QAdamState(step=step, m=new_m, v=new_v,
+                                      key=state.key)
+
+
+def qadam(lr, b1=0.9, b2=0.999, eps=1e-8, cfg: GDRounding = GDRounding(),
+          m_spec: RoundingSpec = IDENTITY, v_spec: RoundingSpec = IDENTITY,
+          weight_decay=0.0) -> QAdam:
+    return QAdam(lr=lr, b1=b1, b2=b2, eps=eps, cfg=cfg, m_spec=m_spec,
+                 v_spec=v_spec, weight_decay=weight_decay)

@@ -1,0 +1,48 @@
+"""Shared plumbing for the quantized optimizers.
+
+Per-leaf, per-step PRNG derivation: every parameter leaf gets an independent
+key folded from (base_key, step, leaf_index) so that (a) rounding noise is
+i.i.d. across parameters and steps, as the paper's analysis assumes, and
+(b) the whole optimizer step is a deterministic function of the checkpointed
+(key, step) — checkpoint/restart is bit-exact.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gd import GDRounding, _resolve_v
+from repro.core.rounding import RoundingSpec
+
+
+def leaf_keys(base_key, step, tree):
+    """One key per leaf, folded from (base_key, step, leaf_idx)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    stepped = jax.random.fold_in(base_key, step)
+    keys = [jax.random.fold_in(stepped, i) for i in range(len(leaves))]
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(tree), keys)
+
+
+def rounded_param_update(x, g, t, cfg: GDRounding, key):
+    """The paper's eq.-8 parameter update for one leaf (pure-jnp path).
+
+    This is semantically identical to kernels.fused_update (which is the
+    TPU hot path); the jnp form is used under pjit where the elementwise
+    chain shards trivially.
+    """
+    k1, k2, k3 = jax.random.split(key, 3)
+    g_hat = cfg.grad(g, key=k1, v=_resolve_v(cfg.grad_v, g, x))
+    upd = cfg.mul(jnp.float32(t) * g_hat, key=k2,
+                  v=_resolve_v(cfg.mul_v, g_hat, x))
+    z = x - upd
+    return cfg.sub(z, key=k3, v=_resolve_v(cfg.sub_v, g_hat, x))
+
+
+def round_state(spec: RoundingSpec, x, key):
+    """Round an optimizer-state leaf onto its storage grid."""
+    if spec.is_identity:
+        return x
+    return spec(x, key=key)

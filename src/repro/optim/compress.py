@@ -1,0 +1,71 @@
+"""Error-feedback gradient compression for cross-pod reduction.
+
+int8 block-scaled quantization with error feedback (EF-SGD style): the
+quantization residual is added back into the next step's gradient, so the
+compression bias vanishes asymptotically — the same "keep the small stuff
+alive" principle as stochastic rounding, applied to the network hop.  Used
+on the ``pod`` axis only (the slow inter-pod links), while intra-pod
+reduction stays full-precision (see dist/collectives.py).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ErrorFeedbackState(NamedTuple):
+    residual: Any   # pytree like grads
+
+
+def init_error_feedback(grads_like) -> ErrorFeedbackState:
+    return ErrorFeedbackState(
+        residual=jax.tree.map(jnp.zeros_like, grads_like))
+
+
+def _quantize_leaf_int8(g, block: int = 256):
+    """Per-block absmax int8 quantization; returns (q, scales, shape)."""
+    flat = g.reshape(-1)
+    n = flat.shape[0]
+    padded = -(-n // block) * block
+    flat = jnp.pad(flat, (0, padded - n))
+    blocks = flat.reshape(-1, block)
+    scales = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    safe = jnp.where(scales > 0, scales, 1.0)
+    q = jnp.clip(jnp.round(blocks / safe), -127, 127).astype(jnp.int8)
+    return q, scales.astype(jnp.float32)
+
+
+def _dequantize_leaf_int8(q, scales, shape):
+    flat = (q.astype(jnp.float32) * scales).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+def ef_compress_int8(grads, state: ErrorFeedbackState, block: int = 256):
+    """Compress (grads + residual); returns (payload, new_state).
+
+    payload is a pytree of (int8 blocks, float32 scales) per leaf — ~4x
+    smaller on the wire than float32 (int8 + 1 scale / 256 elements).
+    """
+    corrected = jax.tree.map(lambda g, r: g + r, grads, state.residual)
+
+    def comp(g):
+        q, s = _quantize_leaf_int8(g, block)
+        return (q, s, g.shape)
+
+    payload = jax.tree.map(comp, corrected)
+    # When the first tree reaches an array leaf, the matching payload
+    # subtree (the (q, scales, shape) triple) is passed whole.
+    new_residual = jax.tree.map(
+        lambda g, p: g - _dequantize_leaf_int8(*p), corrected, payload)
+    return payload, ErrorFeedbackState(residual=new_residual)
+
+
+def ef_decompress_int8(payload):
+    return jax.tree.map(lambda p: _dequantize_leaf_int8(*p), payload,
+                        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3
+                        and isinstance(x[0], jax.Array))

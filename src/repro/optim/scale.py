@@ -1,0 +1,67 @@
+"""Dynamic loss scaling for low-precision gradient computation.
+
+Standard FP8/FP16-training machinery: scale the loss so gradients land in
+the representable range of the low-precision format (binary8's normal range
+is only [6.1e-5, 5.7e4]); back off on overflow, grow after a clean streak.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class DynamicLossScale(NamedTuple):
+    scale: jax.Array          # float32
+    good_steps: jax.Array     # int32
+    growth_interval: int = 200
+    growth_factor: float = 2.0
+    backoff_factor: float = 0.5
+    max_scale: float = 2.0 ** 15
+
+
+def dynamic_loss_scale(initial: float = 2.0 ** 7, growth_interval: int = 200,
+                       growth_factor: float = 2.0, backoff_factor: float = 0.5,
+                       max_scale: float = 2.0 ** 15) -> DynamicLossScale:
+    return DynamicLossScale(
+        scale=jnp.float32(initial),
+        good_steps=jnp.zeros((), jnp.int32),
+        growth_interval=growth_interval,
+        growth_factor=growth_factor,
+        backoff_factor=backoff_factor,
+        max_scale=max_scale)
+
+
+def scale_loss(state: DynamicLossScale, loss):
+    return loss * state.scale
+
+
+def unscale_grads(state: DynamicLossScale, grads):
+    inv = 1.0 / state.scale
+    return jax.tree.map(lambda g: g * inv, grads)
+
+
+def all_finite(grads) -> jax.Array:
+    leaves = [jnp.all(jnp.isfinite(g)) for g in jax.tree_util.tree_leaves(grads)]
+    return jnp.stack(leaves).all() if leaves else jnp.bool_(True)
+
+
+def update_scale(state: DynamicLossScale, grads_finite) -> DynamicLossScale:
+    good = jnp.where(grads_finite, state.good_steps + 1, 0)
+    grow = good >= state.growth_interval
+    new_scale = jnp.where(
+        grads_finite,
+        jnp.where(grow,
+                  jnp.minimum(state.scale * state.growth_factor,
+                              state.max_scale),
+                  state.scale),
+        jnp.maximum(state.scale * state.backoff_factor, 1.0))
+    return state._replace(scale=new_scale,
+                          good_steps=jnp.where(grow, 0, good))
+
+
+def maybe_skip_update(grads_finite, new_tree, old_tree):
+    """Keep the old values when the gradients overflowed (skip the step)."""
+    return jax.tree.map(
+        lambda n, o: jnp.where(grads_finite, n, o), new_tree, old_tree)

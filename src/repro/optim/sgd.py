@@ -1,0 +1,90 @@
+"""QSGD — SGD (+momentum) with the paper's rounded update path.
+
+The parameter update is exactly eq. (8): gradient rounding (8a residual),
+stepsize-multiply rounding (8b), subtraction rounding (8c), each with its
+own RoundingSpec; momentum (if any) is stored on its own low-precision grid
+and accumulated with stochastic rounding, which is what keeps small
+gradient contributions alive (the paper's central point applied to the
+optimizer state as well).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gd import GDRounding
+from repro.core.rounding import IDENTITY, RoundingSpec
+from repro.optim import base
+
+
+class QSGDState(NamedTuple):
+    step: jax.Array
+    momentum: Any          # pytree like params (or () if momentum == 0)
+    key: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class QSGD:
+    """Functional quantized SGD. Use ``init``/``apply``."""
+
+    lr: float
+    momentum: float = 0.0
+    nesterov: bool = False
+    cfg: GDRounding = GDRounding()
+    momentum_spec: RoundingSpec = IDENTITY
+    param_spec: RoundingSpec = IDENTITY   # storage grid of the params
+
+    def init(self, params, key: Optional[jax.Array] = None) -> QSGDState:
+        key = jax.random.PRNGKey(0) if key is None else key
+        mom = (jax.tree.map(jnp.zeros_like, params)
+               if self.momentum else ())
+        return QSGDState(step=jnp.zeros((), jnp.int32), momentum=mom, key=key)
+
+    def quantize_params(self, params, key: Optional[jax.Array] = None):
+        """Project params onto their storage grid (use once at init)."""
+        if self.param_spec.is_identity:
+            return params
+        if key is None:
+            key = jax.random.PRNGKey(1)
+        keys = base.leaf_keys(key, 0, params)
+        return jax.tree.map(lambda p, k: self.param_spec(p, key=k),
+                            params, keys)
+
+    def apply(self, params, grads, state: QSGDState, lr: Optional[Any] = None):
+        """One optimizer step; returns (new_params, new_state)."""
+        t = self.lr if lr is None else lr
+        keys = base.leaf_keys(state.key, state.step, params)
+
+        if self.momentum:
+            mkeys = base.leaf_keys(jax.random.fold_in(state.key, 0x6D6F6D),
+                                   state.step, params)   # "mom"
+
+            def upd_m(m, g, k):
+                m_new = self.momentum * m + g
+                return base.round_state(self.momentum_spec, m_new, k)
+
+            new_mom = jax.tree.map(upd_m, state.momentum, grads, mkeys)
+            if self.nesterov:
+                eff_grads = jax.tree.map(
+                    lambda g, m: g + self.momentum * m, grads, new_mom)
+            else:
+                eff_grads = new_mom
+        else:
+            new_mom = ()
+            eff_grads = grads
+
+        new_params = jax.tree.map(
+            lambda p, g, k: base.rounded_param_update(p, g, t, self.cfg, k),
+            params, eff_grads, keys)
+        return new_params, QSGDState(step=state.step + 1, momentum=new_mom,
+                                     key=state.key)
+
+
+def qsgd(lr, momentum=0.0, cfg: GDRounding = GDRounding(),
+         momentum_spec: RoundingSpec = IDENTITY,
+         param_spec: RoundingSpec = IDENTITY, nesterov=False) -> QSGD:
+    return QSGD(lr=lr, momentum=momentum, nesterov=nesterov, cfg=cfg,
+                momentum_spec=momentum_spec, param_spec=param_spec)

@@ -1,0 +1,6 @@
+"""Roofline derivation from compiled dry-run artifacts."""
+from repro.roofline.analyze import (HW_V5E, RooflineReport, analyze_compiled,
+                                    collective_bytes_from_hlo)
+
+__all__ = ["HW_V5E", "RooflineReport", "analyze_compiled",
+           "collective_bytes_from_hlo"]

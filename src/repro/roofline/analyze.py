@@ -1,0 +1,183 @@
+"""Roofline terms from a compiled (dry-run) executable.
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = collective_bytes_per_device / link_bw
+
+Sources: ``compiled.cost_analysis()`` supplies per-device FLOPs and bytes
+(the executable is the SPMD-partitioned per-device module).
+collective_bytes is parsed from the optimized HLO text: we sum the *result*
+buffer sizes of every all-gather / all-reduce / reduce-scatter / all-to-all
+/ collective-permute instruction (for reduce-scatter we count the operand
+instead, since the result is the already-reduced shard).  ``-start`` fusion
+variants are counted once (the matching ``-done`` is skipped).
+
+Hardware model: TPU v5e — 197 bf16 TFLOP/s, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e5m2": 1, "f8e4m3fn": 1, "c128": 16,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops: float          # per chip, bf16
+    hbm_bw: float              # bytes/s per chip
+    ici_bw: float              # bytes/s per link
+
+
+HW_V5E = Hardware(name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9,
+                  ici_bw=50e9)
+
+
+def _shape_bytes(type_str: str) -> int:
+    """'bf16[256,1024]{1,0}' -> byte size (tuples handled by the caller)."""
+    m = re.match(r"([a-z0-9]+)\[([0-9,]*)\]", type_str.strip())
+    if not m:
+        return 0
+    dtype, dims = m.group(1), m.group(2)
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|([a-z0-9]+\[[0-9,]*\][^ ]*))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Per-kind result-buffer bytes of collective ops in optimized HLO."""
+    out: Dict[str, int] = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        tuple_types, single_type, kind, startdone = (
+            m.group(1), m.group(2), m.group(3), m.group(4))
+        if startdone == "-done":
+            continue   # counted at -start
+        if tuple_types is not None:
+            size = sum(_shape_bytes(t) for t in
+                       re.findall(r"[a-z0-9]+\[[0-9,]*\]", tuple_types))
+        else:
+            size = _shape_bytes(single_type)
+        out[kind] = out.get(kind, 0) + size
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes: Dict[str, int]
+    memory_per_device: float          # bytes (args+temps+outputs)
+    model_flops: float                # 6·N·D global (N_active for MoE)
+    hw: Hardware = HW_V5E
+
+    @property
+    def collective_total(self) -> int:
+        return sum(self.collective_bytes.values())
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / self.hw.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / self.hw.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_total / self.hw.ici_bw
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Ideal-overlap model: step ≥ max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs × chips): how much compiled compute is
+        'useful' (catches remat/dispatch waste; >1 ⇒ HLO under-counts e.g.
+        because convs/attention aren't in 6·N·D)."""
+        total = self.flops_per_device * self.n_chips
+        return self.model_flops / total if total else float("nan")
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable MFU under the ideal-overlap step-time model:
+        useful FLOPs / (step_time × chips × peak)."""
+        denom = self.step_time * self.n_chips * self.hw.peak_flops
+        return self.model_flops / denom if denom else float("nan")
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.n_chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "hbm_gb_per_dev": self.memory_per_device / 2 ** 30,
+            "model_gflops": self.model_flops / 1e9,
+            "useful_ratio": self.useful_flops_ratio,
+            "roofline_frac": self.roofline_fraction,
+            "collectives": {k: v for k, v in self.collective_bytes.items()},
+        }
+
+
+def analyze_compiled(compiled, *, arch: str, shape: str, mesh_desc: str,
+                     n_chips: int, model_flops: float,
+                     hw: Hardware = HW_V5E) -> RooflineReport:
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo)
+    mem_total = (getattr(mem, "argument_size_in_bytes", 0)
+                 + getattr(mem, "output_size_in_bytes", 0)
+                 + getattr(mem, "temp_size_in_bytes", 0))
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_desc, n_chips=n_chips,
+        flops_per_device=float(cost.get("flops", 0.0)),
+        bytes_per_device=float(cost.get("bytes accessed", 0.0)),
+        collective_bytes=coll,
+        memory_per_device=float(mem_total),
+        model_flops=model_flops,
+        hw=hw)
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N·D training; 2·N·D forward-only (prefill/decode)."""
+    n = cfg.active_param_count_estimate
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch

@@ -1,0 +1,107 @@
+"""HLO-text profiler: per-instruction FLOP/byte attribution.
+
+``cost_analysis()`` is a flat total; to *localize* cost (the §Perf loop
+needs to know which matmul dominates) we parse the optimized HLO:
+
+* pass 1 maps every instruction name to its result shape;
+* pass 2 scores each ``dot`` as ``2 × numel(result) × K`` with K taken
+  from the lhs contracting dims (resolved through the name map);
+* dots are grouped by their ``op_name`` metadata (the JAX source scope),
+  so the report reads as "attention qk", "moe expert ffn", "lm head", …
+
+Also provides result-buffer bytes per opcode (an HBM-traffic proxy).
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DEF_RE = re.compile(r"^\s*(%[\w.-]+|[\w.-]+) = ([a-z0-9]+)\[([0-9,]*)\]")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8, "u64": 8,
+    "f8e5m2": 1, "f8e4m3fn": 1,
+}
+
+
+def _numel(dims: str) -> int:
+    if not dims:
+        return 1
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    return n
+
+
+def _shape_map(hlo_text: str) -> Dict[str, List[int]]:
+    out: Dict[str, List[int]] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            name = m.group(1).lstrip("%")
+            dims = [int(d) for d in m.group(3).split(",") if d]
+            out[name] = dims
+    return out
+
+
+def dot_records(hlo_text: str) -> List[Tuple[float, str, str]]:
+    """[(flops, op_name_label, line_prefix)] for every dot instruction."""
+    shapes = _shape_map(hlo_text)
+    recs = []
+    for line in hlo_text.splitlines():
+        if " dot(" not in line:
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        out_numel = _numel(m.group(3))
+        args = re.search(r"dot\(([^)]*)\)", line)
+        if not args:
+            continue
+        operand_names = [a.strip().lstrip("%")
+                         for a in args.group(1).split(",")]
+        lhs_dims = shapes.get(operand_names[0], [])
+        dn = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+        k = 1
+        if dn and lhs_dims:
+            for c in dn.group(1).split(","):
+                if c and int(c) < len(lhs_dims):
+                    k *= lhs_dims[int(c)]
+        flops = 2.0 * out_numel * k
+        nm = re.search(r'op_name="([^"]*)"', line)
+        label = nm.group(1) if nm else "unnamed"
+        label = "/".join(label.split("/")[-4:])
+        recs.append((flops, label, line.strip()[:120]))
+    return recs
+
+
+def dot_flops_by_opname(hlo_text: str, top: int = 25) -> List[Tuple[str, float]]:
+    totals: Dict[str, float] = defaultdict(float)
+    for flops, label, _ in dot_records(hlo_text):
+        totals[label] += flops
+    return sorted(totals.items(), key=lambda kv: -kv[1])[:top]
+
+
+def top_dots(hlo_text: str, top: int = 15) -> List[Tuple[float, str]]:
+    recs = dot_records(hlo_text)
+    recs.sort(key=lambda r: -r[0])
+    return [(f, f"{lbl} :: {line}") for f, lbl, line in recs[:top]]
+
+
+def bytes_by_opcode(hlo_text: str, top: int = 15) -> List[Tuple[str, float]]:
+    """Result-buffer bytes per opcode (a proxy for HBM traffic shares)."""
+    totals: Dict[str, float] = defaultdict(float)
+    for line in hlo_text.splitlines():
+        m = re.match(
+            r"^\s*(?:%[\w.-]+|[\w.-]+) = ([a-z0-9]+)\[([0-9,]*)\][^ ]* "
+            r"([a-z0-9-]+)\(", line)
+        if not m:
+            continue
+        dtype, dims, opcode = m.group(1), m.group(2), m.group(3)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        totals[opcode] += _numel(dims) * _DTYPE_BYTES[dtype]
+    return sorted(totals.items(), key=lambda kv: -kv[1])[:top]

@@ -1,0 +1,109 @@
+"""Trip-count-correct cost measurement via unrolled probe compiles.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE, so the full
+(scan-over-layers) dry-run compile under-reports FLOPs/bytes by ~L×.  We
+therefore measure costs from *unrolled* probe compiles:
+
+  probe₁  = the same cell with ONE layer of each block type (unrolled)
+  probe₂ₜ = probe₁ plus one extra layer of type t (unrolled)
+
+  per-type delta  Δₜ = cost(probe₂ₜ) − cost(probe₁)
+  whole-model     cost = cost(probe₁) + Σₜ (nₜ − 1)·Δₜ
+
+Everything (attention blocks included — flash attention is python-unrolled)
+is visible to the cost analysis in the probes; the only remaining loops are
+the O(1)-state chunk scans of SSD/RWKV, whose bodies are tiny elementwise
+state updates (heavy chunk matmuls sit outside the scan by construction).
+Collective bytes extrapolate the same way.  The *full* scanned compile is
+still produced by the dry-run — it proves sharding coherence and supplies
+the per-device memory analysis (buffer assignment handles loops correctly).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+
+from repro.configs.shapes import SHAPES
+from repro.roofline.analyze import collective_bytes_from_hlo
+
+
+def _probe_config(cfg, type_counts: Dict[str, int], enc_layers: int):
+    """Config with an explicit tiny unrolled plan."""
+    plan = []
+    for t, k in type_counts.items():
+        plan.extend([t] * k)
+    n_layers = len(plan) if plan else cfg.n_layers
+    if cfg.encoder_layers:
+        # enc-dec decoder plan is derived from n_layers
+        return dataclasses.replace(
+            cfg, n_layers=type_counts.get("dec_attn", 1),
+            encoder_layers=enc_layers, layer_plan=None, scan_layers=False,
+            shared_attn_period=0)
+    return dataclasses.replace(cfg, layer_plan=tuple(plan),
+                               n_layers=n_layers, scan_layers=False,
+                               shared_attn_period=0)
+
+
+def _base_counts(cfg) -> Tuple[Dict[str, int], int]:
+    """Actual per-type layer counts + encoder layer count."""
+    if cfg.encoder_layers:
+        return {"dec_attn": cfg.n_layers}, cfg.encoder_layers
+    counts: Dict[str, int] = {}
+    for t in cfg.plan():
+        counts[t] = counts.get(t, 0) + 1
+    return counts, 0
+
+
+def _cost_vector(compiled) -> Dict[str, float]:
+    cost = compiled.cost_analysis() or {}
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    vec = {"flops": float(cost.get("flops", 0.0)),
+           "bytes": float(cost.get("bytes accessed", 0.0))}
+    for k, v in coll.items():
+        vec[f"coll:{k}"] = float(v)
+    return vec
+
+
+def _vec_sub(a, b):
+    keys = set(a) | set(b)
+    return {k: a.get(k, 0.0) - b.get(k, 0.0) for k in keys}
+
+
+def _vec_addmul(a, b, s):
+    keys = set(a) | set(b)
+    return {k: a.get(k, 0.0) + s * b.get(k, 0.0) for k in keys}
+
+
+def measure_cell_costs(arch: str, shape_name: str, *, multi_pod: bool,
+                       compile_fn, cfg=None) -> Dict[str, float]:
+    """Trip-count-corrected per-device cost vector for one cell.
+
+    ``compile_fn(cfg) -> compiled`` lowers+compiles the given config for
+    this cell on the target mesh (supplied by launch.dryrun to avoid an
+    import cycle).  ``cfg`` overrides the registry config (hillclimbing).
+    """
+    if cfg is None:
+        from repro.configs import get_config
+        cfg = get_config(arch)
+    counts, enc = _base_counts(cfg)
+
+    ones = {t: 1 for t in counts}
+    c1 = compile_fn(_probe_config(cfg, ones, min(1, enc)))
+    v1 = _cost_vector(c1)
+
+    total = dict(v1)
+    for t, n in counts.items():
+        if n <= 1:
+            continue
+        two = dict(ones)
+        two[t] = 2
+        c2 = compile_fn(_probe_config(cfg, two, min(1, enc)))
+        delta = _vec_sub(_cost_vector(c2), v1)
+        total = _vec_addmul(total, delta, n - 1)
+    if enc > 1:
+        c2e = compile_fn(_probe_config(cfg, ones, 2))
+        delta = _vec_sub(_cost_vector(c2e), v1)
+        total = _vec_addmul(total, delta, enc - 1)
+    return total

@@ -1,0 +1,4 @@
+"""Training loop with fault tolerance."""
+from repro.train.loop import TrainLoop, TrainLoopConfig
+
+__all__ = ["TrainLoop", "TrainLoopConfig"]

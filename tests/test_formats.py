@@ -1,0 +1,42 @@
+"""Format-parameter checks against the paper's Table 2."""
+import numpy as np
+import pytest
+
+from repro.core import formats
+
+
+@pytest.mark.parametrize("name,u,xmin,xmax", [
+    ("binary8", 2.0 ** -3, 6.10e-5, 5.73e4),
+    ("bfloat16", 2.0 ** -8, 1.18e-38, 3.39e38),
+    ("binary16", 2.0 ** -11, 6.10e-5, 6.55e4),
+    ("binary32", 2.0 ** -24, 1.18e-38, 3.40e38),
+])
+def test_table2(name, u, xmin, xmax):
+    fmt = formats.get_format(name)
+    assert fmt.u == u
+    assert np.isclose(fmt.xmin, xmin, rtol=5e-3)
+    assert np.isclose(fmt.xmax, xmax, rtol=5e-3)
+
+
+def test_binary8_is_e5m2():
+    fmt = formats.get_format("e5m2")
+    assert fmt is formats.BINARY8
+    assert fmt.precision == 3 and fmt.emin == -14 and fmt.emax == 15
+    # smallest subnormal of E5M2
+    assert fmt.xmin_sub == 2.0 ** -16
+
+
+def test_registry_aliases():
+    assert formats.get_format("fp8") is formats.BINARY8
+    assert formats.get_format("bf16") is formats.BFLOAT16
+    assert formats.get_format(formats.BFLOAT16) is formats.BFLOAT16
+    with pytest.raises(ValueError):
+        formats.get_format("binary7")
+
+
+def test_register_custom():
+    f = formats.FPFormat("tiny4", precision=2, emin=-2, emax=1)
+    formats.register_format(f)
+    assert formats.get_format("tiny4") is f
+    assert f.xmax == (2 - 2.0 ** -1) * 2.0    # 3.0
+    assert f.xmin_sub == 2.0 ** -3

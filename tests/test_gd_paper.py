@@ -1,0 +1,168 @@
+"""System-behaviour tests of rounded GD against the paper's claims:
+
+* Figure 2: GD on f(x) = (x-1024)² with binary8 + RN stagnates (τ_k ≤ u/2)
+  while SR keeps moving and signed-SRε converges fastest.
+* Theorem 6 / Corollary 7 (qualitative): SR tracks the exact-arithmetic
+  trajectory in expectation; SRε/signed-SRε do not diverge and respect the
+  Theorem-2-style envelope.
+* Monotonicity (Lemma 4 / Prop. 9/11) under the stated gradient floors.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import formats, gd, rounding, theory
+
+F8 = formats.BINARY8
+BF16 = formats.BFLOAT16
+
+
+def quad1d(center=1024.0):
+    f = lambda x: jnp.sum((x - center) ** 2)
+    g = lambda x: 2.0 * (x - center)
+    return f, g
+
+
+def test_fig2_rn_stagnates():
+    """Paper Fig. 2: minimizing (x-1024)² with binary8 + RN stagnates."""
+    f, g = quad1d()
+    cfg = gd.make_config("binary8", "rn", "rn", "rn")
+    x0 = jnp.array([600.0], jnp.float32)
+    fs, x_fin = gd.run_gd(f, g, x0, t=1e-4, cfg=cfg, steps=60,
+                          param_fmt="binary8")
+    fs = np.asarray(fs)
+    # stagnates: the last many iterates are all identical and far from 0
+    assert fs[-1] == fs[-20]
+    assert fs[-1] > 100.0   # nowhere near the optimum
+    # the diagnostic agrees: RN would freeze this step
+    upd = 1e-4 * g(x_fin)
+    assert bool(jnp.all(gd.rn_would_stagnate(x_fin, upd, F8)))
+    # and tau is below the u/2 threshold of sec. 3.2
+    assert float(gd.tau(x_fin, jnp.abs(upd), F8)) <= F8.u / 2
+
+
+def test_fig2_sr_does_not_stagnate():
+    """SR keeps updating where RN froze, reaching a much better objective.
+
+    Setup: x0 = 512 is a binary8 grid point with spacing 128 above; with
+    t = 0.03 the update t·|g| ≈ 30.7 < 64 = half-spacing, so RN freezes at
+    512 forever, while SR escapes with probability ≈ update/ulp per step.
+    """
+    f, g = quad1d()
+    x0 = jnp.array([512.0], jnp.float32)
+    t = 0.03
+    cfg_rn = gd.make_config("binary8", "rn", "rn", "rn")
+    cfg_sr = gd.make_config("binary8", "rn", "sr", "sr")
+    fs_rn, x_rn = gd.run_gd(f, g, x0, t, cfg_rn, 400, param_fmt="binary8")
+    assert float(x_rn[0]) == 512.0          # provably frozen
+    finals = []
+    for seed in range(4):
+        fs_sr, _ = gd.run_gd(f, g, x0, t, cfg_sr, 400, param_fmt="binary8",
+                             key=jax.random.PRNGKey(seed))
+        finals.append(float(fs_sr[-1]))
+    assert np.mean(finals) < 0.15 * float(fs_rn[-1])
+
+
+def test_signed_sr_eps_faster_than_sr_under_stagnation():
+    """Scenario 2 (Prop. 11 / Fig. 3): signed-SRε with v=gradient converges
+    faster than SR when updates are sub-ulp."""
+    f, g = quad1d()
+    x0 = jnp.array([600.0], jnp.float32)
+    # tiny stepsize so that t*g is far below ulp(x): deep Scenario 2
+    t = 1e-6
+    cfg_sr = gd.make_config("binary8", "rn", "sr", "sr")
+    cfg_signed = gd.GDRounding(
+        grad=rounding.spec("binary8", "rn"),
+        mul=rounding.spec("binary8", "sr"),
+        sub=rounding.spec("binary8", "signed_sr_eps", 0.25),
+        sub_v="grad")
+    losses_sr, losses_sg = [], []
+    for seed in range(4):
+        fs_sr, _ = gd.run_gd(f, g, x0, t, cfg_sr, 500, param_fmt="binary8",
+                             key=jax.random.PRNGKey(seed))
+        fs_sg, _ = gd.run_gd(f, g, x0, t, cfg_signed, 500, param_fmt="binary8",
+                             key=jax.random.PRNGKey(100 + seed))
+        losses_sr.append(float(fs_sr[-1]))
+        losses_sg.append(float(fs_sg[-1]))
+    assert np.mean(losses_sg) < 0.5 * np.mean(losses_sr)
+
+
+def test_sr_tracks_exact_trajectory_quadratic():
+    """Thm 6: with SR, E[f(x_k)] stays close to the exact-GD trajectory."""
+    n = 64
+    rng = np.random.default_rng(0)
+    diag = np.linspace(0.2, 1.0, n).astype(np.float32)
+    xstar = rng.normal(size=n).astype(np.float32)
+    f = lambda x: 0.5 * jnp.sum(diag * (x - xstar) ** 2)
+    g = lambda x: diag * (x - xstar)
+    x0 = jnp.asarray(xstar + rng.normal(size=n).astype(np.float32) * 4)
+    L = float(diag.max())
+    t = 0.5 / L
+    cfg = gd.make_config("bfloat16", "rn", "sr", "sr")
+    fs_exact, _ = gd.run_gd(f, g, x0, t, gd.fp32_config(), 200)
+    runs = []
+    for seed in range(6):
+        fs, _ = gd.run_gd(f, g, x0, t, cfg, 200, param_fmt="bfloat16",
+                          key=jax.random.PRNGKey(seed))
+        runs.append(np.asarray(fs))
+    mean_sr = np.mean(runs, 0)
+    exact = np.asarray(fs_exact)
+    # expected objective within 20% of exact trajectory through the descent
+    mid = slice(10, 150)
+    assert np.all(mean_sr[mid] <= exact[mid] * 1.3 + 1e-3)
+    # and the Theorem-2 envelope bounds both
+    bound = theory.exact_rate_bound(
+        L, t, np.arange(1, 201), float(jnp.linalg.norm(x0 - xstar)))
+    assert np.all(mean_sr[5:] <= bound[5:] * 1.05 + 1e-3)
+
+
+def test_monotonicity_lemma4():
+    """With u ≤ a/(c+4a+4) and the gradient floor (24), rounded GD descends
+    (here: bfloat16, well-conditioned quadratic, gradient far from floor)."""
+    n = 16
+    rng = np.random.default_rng(1)
+    xstar = np.zeros(n, np.float32)
+    f = lambda x: 0.5 * jnp.sum((x - xstar) ** 2)
+    g = lambda x: (x - xstar)
+    x0 = jnp.asarray(rng.normal(size=n).astype(np.float32) * 10)
+    L, c, a = 1.0, 2.0, 0.25
+    assert BF16.u <= theory.u_upper_bound(a, c)
+    t = theory.stepsize_bound(L, BF16)
+    floor = theory.gradient_floor_general(a, c, BF16, n)
+    cfg = gd.make_config("bfloat16", "sr", "sr", "sr")
+    key = jax.random.PRNGKey(0)
+    x = x0
+    for k in range(50):
+        if float(jnp.linalg.norm(g(x))) < floor:
+            break
+        key, sub = jax.random.split(key)
+        out = gd.gd_step(x, g(x), t, cfg, sub)
+        assert float(f(out.x_new)) <= float(f(x)) * (1 + 1e-5)
+        x = out.x_new
+
+
+def test_scenario_classifier():
+    f, g = quad1d()
+    x = jnp.array([640.0], jnp.float32)   # grid point; spacing 128 around it
+    # update > half-spacing: scenario 1; update < half-spacing: scenario 2
+    assert int(gd.scenario(x, 100.0 * jnp.ones(1), F8)) == 1
+    assert int(gd.scenario(x, 10.0 * jnp.ones(1), F8)) == 2
+
+
+def test_tau_matches_paper_example():
+    """Paper sec. 3.2 example: x near 1024, t·g = 0.046·2^e ⇒ stagnation
+    for u/2 = 0.0625."""
+    # x in [2^9, 2^10) → e = 10; pick update = 0.046 * 2^10
+    x = jnp.array([1000.0], jnp.float32)
+    upd = jnp.array([0.046 * 2.0 ** 10], jnp.float32)
+    tau = float(gd.tau(x, upd, F8))
+    assert np.isclose(tau, 0.046, rtol=1e-5)
+    assert tau <= F8.u / 2
+
+
+def test_run_gd_requires_key_for_stochastic():
+    f, g = quad1d()
+    cfg = gd.make_config("binary8", "rn", "sr", "sr")
+    with pytest.raises(ValueError):
+        gd.gd_step(jnp.ones(1), jnp.ones(1), 0.1, cfg, None)

@@ -1,0 +1,179 @@
+"""Per-kernel validation: shape/dtype/format sweeps asserting bit-exact
+agreement with the pure-jnp oracles (same explicit random bits), run in
+Pallas interpret mode on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import formats, gd, rounding
+from repro.kernels import ops, ref
+from repro.kernels.fused_update import fused_qupdate_p
+from repro.kernels.qmatmul import qmatmul_p
+from repro.kernels.sr_cast import sr_cast_p
+
+KEY = jax.random.PRNGKey(7)
+FORMATS = ["binary8", "e4m3", "bfloat16", "binary16"]
+SHAPES = [(8,), (100,), (33, 7), (256, 128), (4, 5, 6), (1, 1025)]
+
+
+def _data(shape, seed=0, scale_exp=6):
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=shape) *
+         10.0 ** rng.integers(-scale_exp, scale_exp, size=shape))
+    return jnp.asarray(x, jnp.float32)
+
+
+# ---------------------------------------------------------------- sr_cast --
+@pytest.mark.parametrize("fmt", FORMATS)
+@pytest.mark.parametrize("shape", SHAPES)
+def test_sr_cast_matches_oracle(fmt, shape):
+    x = _data(shape)
+    bits = jax.random.bits(KEY, shape, jnp.uint32)
+    got = sr_cast_p(x, bits, fmt, "sr", interpret=True)
+    want = ref.sr_cast_ref(x, bits, fmt, "sr")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("mode,eps", [("rn", 0.0), ("sr", 0.0),
+                                      ("sr_eps", 0.3), ("rz", 0.0)])
+def test_sr_cast_modes(mode, eps):
+    x = _data((257, 19), seed=1)
+    bits = jax.random.bits(KEY, x.shape, jnp.uint32)
+    got = sr_cast_p(x, bits, "binary8", mode, eps=eps, interpret=True)
+    want = ref.sr_cast_ref(x, bits, "binary8", mode, eps=eps)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_sr_cast_signed_mode():
+    x = _data((64, 64), seed=2)
+    v = _data((64, 64), seed=3)
+    bits = jax.random.bits(KEY, x.shape, jnp.uint32)
+    got = sr_cast_p(x, bits, "binary8", "signed_sr_eps", eps=0.2, v=v,
+                    interpret=True)
+    want = ref.sr_cast_ref(x, bits, "binary8", "signed_sr_eps", eps=0.2, v=v)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_sr_cast_jit_wrapper():
+    x = _data((1000,), seed=4)
+    y = ops.sr_cast(x, KEY, "bfloat16", "sr", interpret=True)
+    assert bool(jnp.all(rounding.is_representable(y, "bfloat16")))
+
+
+def test_sr_cast_block_rows_sweep():
+    x = _data((3000,), seed=5)
+    bits = jax.random.bits(KEY, x.shape, jnp.uint32)
+    outs = [np.asarray(sr_cast_p(x, bits, "binary8", "sr",
+                                 block_rows=br, interpret=True))
+            for br in (8, 32, 512)]
+    np.testing.assert_array_equal(outs[0], outs[1])
+    np.testing.assert_array_equal(outs[0], outs[2])
+
+
+# ---------------------------------------------------------- fused_qupdate --
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_fused_update_matches_oracle(fmt):
+    cfg = gd.GDRounding(
+        grad=rounding.spec(fmt, "sr"),
+        mul=rounding.spec(fmt, "sr_eps", 0.1),
+        sub=rounding.spec(fmt, "signed_sr_eps", 0.1),
+        sub_v="grad")
+    x = _data((511,), seed=6, scale_exp=2)
+    g = _data((511,), seed=7, scale_exp=2)
+    bits3 = jax.random.bits(KEY, (3,) + x.shape, jnp.uint32)
+    got = fused_qupdate_p(x, g, 0.05, bits3, cfg, interpret=True)
+    want = ref.fused_qupdate_ref(x, g, 0.05, bits3, cfg)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("shape", [(64,), (129, 3), (16, 16, 5)])
+def test_fused_update_shapes(shape):
+    cfg = gd.make_config("binary8", "rn", "sr", "sr")
+    x = _data(shape, seed=8, scale_exp=1)
+    g = _data(shape, seed=9, scale_exp=1)
+    bits3 = jax.random.bits(KEY, (3,) + shape, jnp.uint32)
+    got = fused_qupdate_p(x, g, 0.1, bits3, cfg, interpret=True)
+    want = ref.fused_qupdate_ref(x, g, 0.1, bits3, cfg)
+    assert got.shape == shape
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fused_update_identity_cfg_is_plain_sgd():
+    """Identity config == plain SGD step, up to 1 fp32 ulp (XLA may contract
+    t·g into an FMA with the subtraction inside the fused kernel — see
+    kernels/fused_update.py docstring)."""
+    cfg = gd.fp32_config()
+    x = _data((100,), seed=10, scale_exp=1)
+    g = _data((100,), seed=11, scale_exp=1)
+    bits3 = jax.random.bits(KEY, (3, 100), jnp.uint32)
+    got = fused_qupdate_p(x, g, 0.3, bits3, cfg, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x - 0.3 * g),
+                               rtol=1e-6, atol=1e-12)
+
+
+def test_fused_update_jit_wrapper_and_determinism():
+    cfg = gd.make_config("binary8", "sr", "sr", "sr")
+    x = _data((2048,), seed=12, scale_exp=1)
+    g = _data((2048,), seed=13, scale_exp=1)
+    y1 = ops.fused_qupdate(x, g, 0.05, KEY, cfg, interpret=True)
+    y2 = ops.fused_qupdate(x, g, 0.05, KEY, cfg, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    assert bool(jnp.all(rounding.is_representable(y1, "binary8")))
+
+
+# --------------------------------------------------------------- qmatmul --
+def _assert_within_one_grid_step(got, want, fmt):
+    """Blocked fp32 accumulation reorders adds vs the oracle's single GEMM,
+    so products that land exactly on a rounding boundary may step to the
+    adjacent grid point.  Contract: ≤ 1 grid step everywhere, ≥ 99% equal."""
+    got, want = np.asarray(got), np.asarray(want)
+    q = np.asarray(rounding.ulp(jnp.asarray(want), fmt))
+    assert np.all(np.abs(got - want) <= q * (1 + 1e-6))
+    assert (got == want).mean() >= 0.99
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+@pytest.mark.parametrize("dims", [(32, 48, 16), (128, 128, 128),
+                                  (100, 70, 30), (257, 130, 65)])
+def test_qmatmul_matches_oracle(fmt, dims):
+    M, K, N = dims
+    a = _data((M, K), seed=20, scale_exp=1) * 0.1
+    b = _data((K, N), seed=21, scale_exp=1) * 0.1
+    bits = jax.random.bits(KEY, (M, N), jnp.uint32)
+    got = qmatmul_p(a, b, bits, fmt, "sr", bm=64, bn=64, bk=32,
+                    interpret=True)
+    want = ref.qmatmul_ref(a, b, bits, fmt, "sr")
+    _assert_within_one_grid_step(got, want, fmt)
+
+
+def test_qmatmul_rn_mode():
+    a = _data((64, 64), seed=22, scale_exp=1) * 0.1
+    b = _data((64, 64), seed=23, scale_exp=1) * 0.1
+    bits = jnp.zeros((64, 64), jnp.uint32)
+    got = qmatmul_p(a, b, bits, "bfloat16", "rn", bm=32, bn=32, bk=32,
+                    interpret=True)
+    want = ref.qmatmul_ref(a, b, bits, "bfloat16", "rn")
+    _assert_within_one_grid_step(got, want, "bfloat16")
+
+
+def test_qmatmul_block_sweep_bitexact():
+    """Accumulation order is K-major regardless of block size, so results
+    must be identical across block shapes (fp32 adds in a fixed order)."""
+    a = _data((96, 64), seed=24, scale_exp=1) * 0.1
+    b = _data((64, 80), seed=25, scale_exp=1) * 0.1
+    bits = jax.random.bits(KEY, (96, 80), jnp.uint32)
+    o1 = np.asarray(qmatmul_p(a, b, bits, "binary8", "sr",
+                              bm=32, bn=16, bk=64, interpret=True))
+    o2 = np.asarray(qmatmul_p(a, b, bits, "binary8", "sr",
+                              bm=96, bn=80, bk=64, interpret=True))
+    np.testing.assert_array_equal(o1, o2)
+
+
+def test_qmatmul_jit_wrapper():
+    a = _data((130, 60), seed=26, scale_exp=1) * 0.1
+    b = _data((60, 94), seed=27, scale_exp=1) * 0.1
+    y = ops.qmatmul_lowp(a, b, KEY, "binary8", "sr", bm=64, bn=64, bk=32,
+                         interpret=True)
+    assert y.shape == (130, 94)
+    assert bool(jnp.all(rounding.is_representable(y, "binary8")))

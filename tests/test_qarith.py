@@ -1,0 +1,111 @@
+"""Tests for quantized arithmetic (standard model, eq. 5/6) and the
+accumulated-error model of eq. (9)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import formats, rounding
+from repro.core import qarith
+
+F8 = formats.BINARY8
+KEY = jax.random.PRNGKey(99)
+SR8 = rounding.spec("binary8", "sr")
+RN8 = rounding.spec("binary8", "rn")
+ID = rounding.IDENTITY
+
+
+def test_identity_spec_is_exact():
+    a = jnp.float32(1.37)
+    b = jnp.float32(2.22)
+    assert float(qarith.qadd(a, b, ID)) == float(a + b)
+    assert float(qarith.qmul(a, b, ID)) == float(a * b)
+
+
+@pytest.mark.parametrize("op,ref", [
+    (qarith.qadd, np.add), (qarith.qsub, np.subtract),
+    (qarith.qmul, np.multiply), (qarith.qdiv, np.divide),
+])
+def test_standard_model_rn(op, ref):
+    """fl(a op b) = (a op b)(1+δ), |δ| ≤ u for RN (paper eq. 5)."""
+    rng = np.random.default_rng(0)
+    a = rng.uniform(0.5, 4.0, 128).astype(np.float32)
+    b = rng.uniform(0.5, 4.0, 128).astype(np.float32)
+    got = np.asarray(op(a, b, RN8))
+    exact = ref(a, b)
+    delta = np.abs(got - exact) / np.abs(exact)
+    assert np.all(delta <= F8.u * (1 + 1e-6))
+
+
+def test_standard_model_sr_2u():
+    """SR: |δ| ≤ 2u (paper after eq. 5)."""
+    rng = np.random.default_rng(1)
+    a = rng.uniform(0.5, 4.0, 256).astype(np.float32)
+    b = rng.uniform(0.5, 4.0, 256).astype(np.float32)
+    got = np.asarray(qarith.qmul(a, b, SR8, key=KEY))
+    exact = a * b
+    delta = np.abs(got - exact) / np.abs(exact)
+    assert np.all(delta <= 2 * F8.u * (1 + 1e-6))
+
+
+def test_qmatmul_result_mode_equals_round_of_exact():
+    rng = np.random.default_rng(2)
+    a = rng.normal(size=(8, 16)).astype(np.float32)
+    b = rng.normal(size=(16, 4)).astype(np.float32)
+    got = np.asarray(qarith.qmatmul(a, b, RN8, accum="result"))
+    want = np.asarray(rounding.round_to_format(a @ b, F8, "rn"))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_qmatmul_chunk_outputs_representable():
+    rng = np.random.default_rng(3)
+    a = rng.normal(size=(4, 40)).astype(np.float32)
+    b = rng.normal(size=(40, 4)).astype(np.float32)
+    for accum, chunk in [("chunk", 8), ("chunk", 16), ("fma", 1)]:
+        got = qarith.qmatmul(a, b, SR8, key=KEY, accum=accum, chunk=chunk)
+        assert bool(jnp.all(rounding.is_representable(got, F8)))
+
+
+def test_qmatmul_chunk_error_grows_with_fidelity():
+    """Per-op rounding accumulates more error than result-rounding —
+    the σ₁ of eq. (8a) is larger the more ops are rounded (eq. 9)."""
+    rng = np.random.default_rng(4)
+    a = rng.uniform(0.1, 1.0, size=(16, 64)).astype(np.float32)
+    b = rng.uniform(0.1, 1.0, size=(64, 16)).astype(np.float32)
+    exact = a @ b
+    keys = jax.random.split(KEY, 64)
+
+    def err(accum):
+        es = []
+        for k in keys[:16]:
+            got = np.asarray(qarith.qmatmul(a, b, SR8, key=k, accum=accum, chunk=8))
+            es.append(np.abs(got - exact).mean())
+        return np.mean(es)
+
+    e_result = err("result")
+    e_chunk = err("chunk")
+    assert e_chunk > e_result * 1.2
+
+
+def test_qmatmul_sr_unbiased():
+    """E[qmatmul_SR] ≈ exact product (unbiasedness survives composition
+    in result mode)."""
+    rng = np.random.default_rng(5)
+    a = rng.uniform(0.5, 1.0, size=(4, 8)).astype(np.float32)
+    b = rng.uniform(0.5, 1.0, size=(8, 4)).astype(np.float32)
+    exact = a @ b
+    keys = jax.random.split(KEY, 2000)
+    acc = np.zeros_like(exact)
+    for k in keys:
+        acc += np.asarray(qarith.qmatmul(a, b, SR8, key=k, accum="result"))
+    mean = acc / len(keys)
+    q = np.asarray(rounding.ulp(exact, F8))
+    assert np.all(np.abs(mean - exact) < 0.12 * q)
+
+
+def test_qdot():
+    a = np.array([1.0, 2.0, 3.0], np.float32)
+    b = np.array([0.5, 0.25, 1.0], np.float32)
+    got = float(qarith.qdot(a, b, RN8))
+    want = float(rounding.round_to_format(np.float32(4.0), F8, "rn"))
+    assert got == want

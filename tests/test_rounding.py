@@ -1,0 +1,201 @@
+"""Unit tests for the rounding engine: exactness of the grid decomposition,
+deterministic modes against numpy oracles, stochastic modes against their
+defining probabilities, and edge cases (subnormals, binade boundaries,
+overflow, negative zero, non-finite)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import formats, rounding
+
+F8 = formats.BINARY8
+BF16 = formats.BFLOAT16
+F16 = formats.BINARY16
+
+KEY = jax.random.PRNGKey(1234)
+
+
+def _np_grid_round_nearest(x, fmt):
+    """Numpy oracle: round-to-nearest-even onto the fmt grid via exact
+    rational arithmetic on the (significand, exponent) decomposition."""
+    out = np.empty_like(x, dtype=np.float64)
+    for i, xi in np.ndenumerate(x):
+        if not np.isfinite(xi):
+            out[i] = xi
+            continue
+        m = abs(float(xi))
+        if m < 2.0 ** -126:   # engine's documented FTZ boundary
+            m = 0.0
+        if m == 0.0:
+            out[i] = np.copysign(0.0, xi)
+            continue
+        e = int(np.floor(np.log2(m))) if m > 0 else 0
+        # guard against log2 boundary error
+        while 2.0 ** e > m:
+            e -= 1
+        while 2.0 ** (e + 1) <= m:
+            e += 1
+        e = max(e, fmt.emin)
+        q = 2.0 ** (e - fmt.precision + 1)
+        y = m / q
+        fy = np.floor(y)
+        frac = y - fy
+        if frac > 0.5 or (frac == 0.5 and int(fy) % 2 == 1):
+            fy += 1
+        r = min(fy * q, fmt.xmax)
+        out[i] = np.copysign(r, xi)
+    return out
+
+
+@pytest.mark.parametrize("fmt", [F8, BF16, F16])
+def test_rn_matches_numpy_oracle(fmt):
+    rng = np.random.default_rng(0)
+    x = np.concatenate([
+        rng.normal(size=200) * 10.0 ** rng.integers(-6, 6, size=200),
+        [0.0, -0.0, 1.0, -1.0, fmt.xmin, fmt.xmax, -fmt.xmax,
+         fmt.xmin_sub, fmt.xmin_sub / 2, 3 * fmt.xmin_sub / 2],
+    ]).astype(np.float32)
+    got = np.asarray(rounding.round_to_format(x, fmt, "rn"))
+    want = _np_grid_round_nearest(x.astype(np.float64), fmt).astype(np.float32)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_bfloat16_rn_matches_hardware_cast():
+    """Our bfloat16 emulation under RN must agree with XLA's native cast
+    (over the normal range; bfloat16 subnormals are FTZ'd — see module doc)."""
+    rng = np.random.default_rng(1)
+    z = rng.normal(size=4096)
+    z = np.where(np.abs(z) < 0.1, 0.5, z)   # keep |x| well inside normal range
+    x = (z * 10.0 ** rng.integers(-30, 30, size=4096)).astype(np.float32)
+    ours = np.asarray(rounding.round_to_format(x, BF16, "rn", overflow="inf"))
+    native = np.asarray(jnp.asarray(x).astype(jnp.bfloat16).astype(jnp.float32))
+    np.testing.assert_array_equal(ours, native)
+
+
+@pytest.mark.parametrize("fmt", [F8, BF16, F16])
+@pytest.mark.parametrize("mode", rounding.ALL_MODES)
+def test_output_always_representable(fmt, mode):
+    rng = np.random.default_rng(2)
+    x = (rng.normal(size=512) * 10.0 ** rng.integers(-8, 8, size=512)
+         ).astype(np.float32)
+    kw = dict(eps=0.25) if "eps" in mode else {}
+    if mode == "signed_sr_eps":
+        kw["v"] = rng.normal(size=512).astype(np.float32)
+    y = rounding.round_to_format(x, fmt, mode, key=KEY, **kw)
+    assert bool(jnp.all(rounding.is_representable(y, fmt)))
+
+
+@pytest.mark.parametrize("fmt", [F8, BF16, F16])
+def test_representable_fixed_points(fmt):
+    """Every rounding mode must leave representable values unchanged."""
+    vals = np.array([0.0, 1.0, -1.5, fmt.xmin, -fmt.xmin, fmt.xmax,
+                     fmt.xmin_sub, 2.0 ** fmt.emin * 1.5, 2.0, 0.25],
+                    np.float32)
+    # values under the engine's FTZ boundary are flushed, not fixed points
+    vals = vals[(vals == 0.0) | (np.abs(vals) >= 2.0 ** -126)]
+    for mode in rounding.ALL_MODES:
+        kw = dict(eps=0.4) if "eps" in mode else {}
+        if mode == "signed_sr_eps":
+            kw["v"] = np.ones_like(vals)
+        y = np.asarray(rounding.round_to_format(vals, fmt, mode, key=KEY, **kw))
+        np.testing.assert_array_equal(y, vals, err_msg=f"mode={mode}")
+
+
+def test_floor_ceil_bracket():
+    rng = np.random.default_rng(3)
+    x = (rng.normal(size=300) * 10.0 ** rng.integers(-6, 5, size=300)
+         ).astype(np.float32)
+    lo, hi = rounding.floor_ceil(x, F8)
+    lo, hi = np.asarray(lo), np.asarray(hi)
+    assert np.all(lo <= x) and np.all(x <= hi)
+    q = np.asarray(rounding.ulp(x, F8))
+    inexact = ~np.asarray(rounding.is_representable(x, F8))
+    np.testing.assert_allclose((hi - lo)[inexact], q[inexact], rtol=0)
+
+
+def test_sr_samples_only_neighbours():
+    x = np.float32(1.3)   # between 1.25 and 1.5 in binary8 (q = 0.25)
+    keys = jax.random.split(KEY, 512)
+    ys = np.asarray(jax.vmap(
+        lambda k: rounding.round_to_format(x, F8, "sr", key=k))(keys))
+    assert set(np.unique(ys)) == {np.float32(1.25), np.float32(1.5)}
+    # P(up) = (1.3-1.25)/0.25 = 0.2 → mean ≈ 1.3
+    assert abs(ys.mean() - 1.3) < 0.01
+
+
+def test_sr_negative_symmetry():
+    """SR(-x) should be distributed as -SR(x)."""
+    keys = jax.random.split(KEY, 2048)
+    xp = np.float32(0.3)
+    up_pos = np.asarray(jax.vmap(
+        lambda k: rounding.round_to_format(xp, F8, "sr", key=k))(keys)).mean()
+    up_neg = np.asarray(jax.vmap(
+        lambda k: rounding.round_to_format(-xp, F8, "sr", key=k))(keys)).mean()
+    assert abs(up_pos + up_neg) < 0.005
+
+
+def test_overflow_policies():
+    big = np.float32(1e5)   # > binary8 xmax = 57344
+    assert float(rounding.round_to_format(big, F8, "rn")) == F8.xmax
+    assert float(rounding.round_to_format(-big, F8, "rn")) == -F8.xmax
+    assert np.isinf(float(rounding.round_to_format(big, F8, "rn", overflow="inf")))
+
+
+def test_subnormal_grid_binary8():
+    # binary8 subnormal quantum = 2^-16; values below q/2 round to 0 under RN
+    q = 2.0 ** -16
+    x = np.array([q * 0.49, q * 0.51, q, 2.2 * q, 0.75 * q], np.float32)
+    y = np.asarray(rounding.round_to_format(x, F8, "rn"))
+    np.testing.assert_array_equal(y, np.array([0, q, q, 2 * q, q], np.float32))
+
+
+def test_nonfinite_and_zero_passthrough():
+    x = np.array([np.nan, np.inf, -np.inf, 0.0, -0.0], np.float32)
+    y = np.asarray(rounding.round_to_format(x, F8, "sr", key=KEY))
+    assert np.isnan(y[0]) and y[1] == np.inf and y[2] == -np.inf
+    assert y[3] == 0.0 and not np.signbit(y[3])
+    assert y[4] == 0.0 and np.signbit(y[4])
+
+
+def test_successor_predecessor():
+    # binary8: grid around 1.0 is ... 0.875, 1.0, 1.25, 1.5 ...
+    assert float(rounding.successor(np.float32(1.0), F8)) == 1.25
+    assert float(rounding.predecessor(np.float32(1.0), F8)) == 0.875
+    assert float(rounding.successor(np.float32(1.1), F8)) == 1.25
+    assert float(rounding.predecessor(np.float32(1.1), F8)) == 1.0
+    assert float(rounding.successor(np.float32(-1.0), F8)) == -0.875
+    assert float(rounding.predecessor(np.float32(-1.0), F8)) == -1.25
+    assert float(rounding.successor(np.float32(0.0), F8)) == F8.xmin_sub
+    assert float(rounding.predecessor(np.float32(0.0), F8)) == -F8.xmin_sub
+
+
+def test_directed_modes():
+    x = np.array([1.3, -1.3, 0.26, -0.26], np.float32)
+    rd = np.asarray(rounding.round_to_format(x, F8, "rd"))
+    ru = np.asarray(rounding.round_to_format(x, F8, "ru"))
+    rz = np.asarray(rounding.round_to_format(x, F8, "rz"))
+    ra = np.asarray(rounding.round_to_format(x, F8, "ra"))
+    assert np.all(rd <= x) and np.all(ru >= x)
+    assert np.all(np.abs(rz) <= np.abs(x)) and np.all(np.abs(ra) >= np.abs(x))
+
+
+def test_rn_ties_to_even():
+    # binary8 grid: 1.0, 1.25(fy odd), 1.5, 1.75(odd), 2.0 — q=0.25
+    ties = np.array([1.125, 1.375, 1.625, 1.875], np.float32)
+    y = np.asarray(rounding.round_to_format(ties, F8, "rn"))
+    np.testing.assert_array_equal(y, np.array([1.0, 1.5, 1.5, 2.0], np.float32))
+
+
+def test_spec_bundle():
+    s = rounding.spec("binary8", "sr", 0.0)
+    assert s.stochastic
+    y = s(jnp.float32(1.3), key=KEY)
+    assert float(y) in (1.25, 1.5)
+    ident = rounding.spec(None)
+    assert ident.is_identity
+    assert float(ident(jnp.float32(1.3))) == np.float32(1.3)
+    with pytest.raises(ValueError):
+        rounding.round_to_format(1.3, F8, "sr")   # no key
+    with pytest.raises(ValueError):
+        rounding.round_to_format(1.3, F8, "signed_sr_eps", key=KEY, eps=0.1)

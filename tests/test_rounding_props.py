@@ -1,0 +1,166 @@
+"""Property-based tests (hypothesis) for the rounding schemes' defining
+invariants, including the paper's expectation formulas eq. (3), eq. (4) and
+Lemma 1."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import formats, rounding
+
+F8 = formats.BINARY8
+BF16 = formats.BFLOAT16
+
+finite_f32 = st.floats(
+    min_value=-5e4, max_value=5e4, allow_nan=False, allow_infinity=False,
+    width=32).filter(lambda v: v == 0.0 or abs(v) > 1e-30)
+
+fmt_strategy = st.sampled_from([F8, BF16, formats.BINARY16, formats.E4M3])
+
+# Expectation of a scheme, computed in closed form from the exact up-probability.
+def _expected_value(x, fmt, mode, eps=0.0, v=1.0):
+    lo, hi = rounding.floor_ceil(np.float32(x), fmt)
+    lo, hi = float(lo), float(hi)
+    if lo == hi:
+        return float(x)
+    # magnitude formulation
+    floor_mag, q, frac, _ = (float(a) for a in
+                             rounding.magnitude_decompose(jnp.float32(x), fmt))
+    if mode == "sr":
+        p_up = frac
+    elif mode == "sr_eps":
+        p_up = min(frac + eps, 1.0)
+    else:
+        p_up = float(np.clip(frac - np.sign(x) * np.sign(v) * eps, 0.0, 1.0))
+    mag = floor_mag + q * p_up
+    return float(np.copysign(mag, x) if x != 0 else 0.0)
+
+
+@settings(max_examples=60, deadline=None)
+@given(x=finite_f32, fmt=fmt_strategy)
+def test_sr_bracketed_and_unbiased_formula(x, fmt):
+    """SR output ∈ {⌊x⌋,⌈x⌉} and E[SR(x)] == x (Definition 1)."""
+    lo, hi = (float(a) for a in rounding.floor_ceil(np.float32(x), fmt))
+    y = float(rounding.round_to_format(np.float32(x), fmt, "sr",
+                                       key=jax.random.PRNGKey(0)))
+    assert y in (lo, hi)
+    # closed-form expectation equals x (zero bias) up to fp32 eval error
+    ev = _expected_value(x, fmt, "sr")
+    assert abs(ev - np.float32(x)) <= 2e-6 * max(1.0, abs(x))
+
+
+@settings(max_examples=60, deadline=None)
+@given(x=finite_f32, fmt=fmt_strategy,
+       eps=st.floats(min_value=0.01, max_value=0.99))
+def test_sr_eps_bias_eq3(x, fmt, eps):
+    """eq. (3): E[σ^{SRε}(x)] == sign(x)·ε·(⌈x⌉−⌊x⌋) in the unclipped regime,
+    and equals the directed error at the clipped ends."""
+    x = np.float32(x)
+    lo, hi = (float(a) for a in rounding.floor_ceil(x, fmt))
+    if lo == hi:
+        return
+    q = hi - lo
+    frac_signed = (float(x) - lo) / q
+    ev = _expected_value(float(x), fmt, "sr_eps", eps=eps)
+    bias = ev - float(x)
+    # unclipped regime: 0 <= eta <= 1
+    eta = 1.0 - frac_signed - np.sign(x) * eps
+    if 0.0 <= eta <= 1.0:
+        np.testing.assert_allclose(bias, np.sign(x) * eps * q,
+                                   rtol=1e-4, atol=1e-30)
+    elif eta < 0:
+        np.testing.assert_allclose(bias, hi - float(x), rtol=1e-4, atol=1e-30)
+    else:
+        np.testing.assert_allclose(bias, lo - float(x), rtol=1e-4, atol=1e-30)
+
+
+@settings(max_examples=60, deadline=None)
+@given(x=finite_f32, fmt=fmt_strategy,
+       eps=st.floats(min_value=0.01, max_value=0.99),
+       v=st.sampled_from([-3.0, -1.0, 1.0, 7.5]))
+def test_signed_sr_eps_bias_eq4(x, fmt, eps, v):
+    """eq. (4): E[σ^{signed-SRε}(x)] == sign(−v)·ε·(⌈x⌉−⌊x⌋) unclipped."""
+    x = np.float32(x)
+    lo, hi = (float(a) for a in rounding.floor_ceil(x, fmt))
+    if lo == hi:
+        return
+    q = hi - lo
+    frac_signed = (float(x) - lo) / q
+    eta_hat = 1.0 - frac_signed + np.sign(v) * eps
+    ev = _expected_value(float(x), fmt, "signed_sr_eps", eps=eps, v=v)
+    bias = ev - float(x)
+    if 0.0 <= eta_hat <= 1.0:
+        np.testing.assert_allclose(bias, np.sign(-v) * eps * q,
+                                   rtol=1e-4, atol=1e-30)
+    elif eta_hat < 0:
+        np.testing.assert_allclose(bias, hi - float(x), rtol=1e-4, atol=1e-30)
+    else:
+        np.testing.assert_allclose(bias, lo - float(x), rtol=1e-4, atol=1e-30)
+
+
+@settings(max_examples=40, deadline=None)
+@given(x=finite_f32.filter(lambda v: v != 0.0), fmt=fmt_strategy,
+       eps=st.floats(min_value=0.01, max_value=0.99))
+def test_lemma1_relative_error_bound(x, fmt, eps):
+    """Lemma 1: 0 <= E[δ^{SRε}(x)] <= 2εu for all nonzero x in range."""
+    x = np.float32(x)
+    if abs(float(x)) > fmt.xmax or abs(float(x)) < fmt.xmin:
+        return   # Lemma assumes the normal range
+    ev = _expected_value(float(x), fmt, "sr_eps", eps=eps)
+    delta = (ev - float(x)) / float(x)
+    assert -1e-6 <= delta <= 2 * eps * fmt.u * (1 + 1e-4)
+
+
+@settings(max_examples=40, deadline=None)
+@given(x=finite_f32, fmt=fmt_strategy, mode=st.sampled_from(["rn", "sr"]))
+def test_relative_error_standard_model(x, fmt, mode):
+    """Standard model eq. (5): |δ| <= u for RN, <= 2u for SR (normal range)."""
+    x = np.float32(x)
+    if x == 0 or abs(float(x)) > fmt.xmax * (1 - fmt.u) or abs(float(x)) < fmt.xmin:
+        return
+    y = float(rounding.round_to_format(x, fmt, mode, key=jax.random.PRNGKey(7)))
+    delta = abs(y - float(x)) / abs(float(x))
+    bound = fmt.u if mode == "rn" else 2 * fmt.u
+    assert delta <= bound * (1 + 1e-6)
+
+
+@settings(max_examples=50, deadline=None)
+@given(x=finite_f32, fmt=fmt_strategy)
+def test_idempotent(x, fmt):
+    """Rounding is a projection: round(round(x)) == round(x)."""
+    y = rounding.round_to_format(np.float32(x), fmt, "rn")
+    z = rounding.round_to_format(y, fmt, "rn")
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(z))
+
+
+@settings(max_examples=50, deadline=None)
+@given(x=finite_f32, fmt=fmt_strategy)
+def test_rn_is_nearest(x, fmt):
+    """RN picks the closer neighbour (either at ties)."""
+    x = np.float32(x)
+    lo, hi = (float(a) for a in rounding.floor_ceil(x, fmt))
+    y = float(rounding.round_to_format(x, fmt, "rn"))
+    if lo == hi:
+        assert y == lo
+        return
+    d = abs(y - float(x))
+    other = hi if y == lo else lo
+    assert d <= abs(other - float(x)) * (1 + 1e-7)
+
+
+@settings(max_examples=30, deadline=None)
+@given(fmt=fmt_strategy, eps=st.floats(min_value=0.05, max_value=0.45),
+       sign_v=st.sampled_from([-1.0, 1.0]),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_signed_sr_eps_empirical_bias_direction(fmt, eps, sign_v, seed):
+    """Monte-Carlo check: the empirical bias of signed-SRε has sign −sign(v)."""
+    key = jax.random.PRNGKey(seed)
+    xk, rk = jax.random.split(key)
+    # strictly interior magnitudes (not near grid points)
+    x = jax.random.uniform(xk, (4096,), jnp.float32, 1.05, 1.20)
+    v = jnp.full_like(x, sign_v)
+    y = rounding.round_to_format(x, fmt, "signed_sr_eps", key=rk, eps=eps, v=v)
+    bias = float(jnp.mean(y - x))
+    q = float(rounding.ulp(jnp.float32(1.1), fmt))
+    expected = -sign_v * eps * q
+    assert abs(bias - expected) < 0.25 * abs(expected) + 3e-4 * q

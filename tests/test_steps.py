@@ -1,0 +1,100 @@
+"""Input-spec and step-builder units (no mesh / no lowering — fast)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.configs.shapes import SHAPES, applicable, grid
+from repro.launch import steps as steps_lib
+from repro.models import build_model
+from repro.optim import qsgd
+
+
+def test_batch_specs_shapes():
+    cfg = get_config("tinyllama-1.1b")
+    s = steps_lib.batch_specs(cfg, SHAPES["train_4k"])
+    assert s["tokens"].shape == (256, 4096)
+    assert s["labels"].shape == (256, 4096)
+
+    vlm = get_config("qwen2-vl-7b")
+    s = steps_lib.batch_specs(vlm, SHAPES["train_4k"])
+    # patches + text = seq_len
+    assert s["vision_embeds"].shape == (256, 256, 3584)
+    assert s["tokens"].shape == (256, 4096 - 256)
+
+    enc = get_config("seamless-m4t-medium")
+    s = steps_lib.batch_specs(enc, SHAPES["prefill_32k"])
+    assert s["src_embeds"].shape == (32, 32768, 1024)
+    assert "labels" not in s
+
+
+def test_decode_input_specs_eval_shape():
+    cfg = get_config("smollm-360m")
+    caches, tokens, pos, enc = steps_lib.decode_input_specs(
+        cfg, SHAPES["decode_32k"])
+    assert tokens.shape == (128, 1)
+    assert enc is None
+    k = caches["attn"].k
+    assert k.shape == (32, 128, 32768, 5, 64)   # (L, B, S, KV, hd)
+    assert int(pos) == 32767
+
+
+def test_decode_specs_mla():
+    cfg = get_config("deepseek-v2-236b")
+    caches, *_ = steps_lib.decode_input_specs(cfg, SHAPES["decode_32k"])
+    c = caches["attn"]
+    assert c.c_kv.shape == (59, 128, 32768, 512)
+    assert c.k_rope.shape == (59, 128, 32768, 64)
+    assert caches["attn_dense"].c_kv.shape == (1, 128, 32768, 512)
+
+
+def test_decode_specs_hybrid_zamba():
+    cfg = get_config("zamba2-1.2b")
+    caches, *_ = steps_lib.decode_input_specs(cfg, SHAPES["long_500k"])
+    # mamba states for 38 layers; shared-attn KV bounded by sliding window
+    assert caches["mamba"].state.shape[0] == 38
+    assert caches["shared_attn"].k.shape[2] == cfg.sliding_window
+
+
+def test_grid_cells_and_skips():
+    cells = grid()
+    assert len(cells) == 40
+    skips = [c for c in cells if not c["runs"]]
+    # long_500k runs only for rwkv6 + zamba2
+    assert len(skips) == 8
+    assert all(c["shape"] == "long_500k" for c in skips)
+    runnable_long = [c for c in cells
+                     if c["shape"] == "long_500k" and c["runs"]]
+    assert sorted(c["arch"] for c in runnable_long) == \
+        ["rwkv6-7b", "zamba2-1.2b"]
+
+
+def test_train_step_runs_reduced():
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    model = build_model(cfg)
+    opt = steps_lib.paper_optimizer(lr=0.01)
+    params = model.init(jax.random.PRNGKey(0))
+    state = opt.init(params, jax.random.PRNGKey(1))
+    step = jax.jit(steps_lib.make_train_step(model, opt))
+    batch = {"tokens": jnp.zeros((2, 8), jnp.int32),
+             "labels": jnp.zeros((2, 8), jnp.int32)}
+    params2, state2, metrics = step(params, state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(state2.step) == 1
+    # params changed and stay on the bfloat16 grid (paper optimizer)
+    from repro.core import rounding
+    leaf = params2["embed"]
+    assert bool(jnp.all(rounding.is_representable(leaf, "bfloat16")))
+
+
+def test_serve_step_runs_reduced():
+    cfg = reduced(get_config("smollm-360m"))
+    model = build_model(cfg)
+    step = jax.jit(steps_lib.make_serve_step(model))
+    params = model.init(jax.random.PRNGKey(0))
+    caches = model.init_decode_cache(2, 16)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    next_tok, logits, caches = step(params, caches, tok, jnp.int32(0), None)
+    assert next_tok.shape == (2, 1)
+    assert logits.shape == (2, 1, cfg.vocab_size)

@@ -1,0 +1,76 @@
+"""Units for the theory-bound evaluators and the HLO profiler."""
+import numpy as np
+import pytest
+
+from repro.core import theory
+from repro.roofline import hloprof
+
+
+def test_exact_rate_bound_monotone():
+    ks = np.arange(1, 100)
+    b = theory.exact_rate_bound(L=2.0, t=0.25, k=ks, x0_dist=3.0)
+    assert np.all(np.diff(b) < 0)
+    assert np.isclose(b[0], 2 * 2 * 9 / (4 + 2 * 0.25 * 1))
+
+
+def test_u_bound_and_stepsize():
+    # Prop. 3: u <= a/(c+4a+4)
+    assert theory.u_upper_bound(0.25, 2.0) == 0.25 / (2 + 1 + 4)
+    # binary8 with c=2 requires a >= ...: u=1/8 <= a/(6+4a) → a >= 0.75/0.5
+    t = theory.stepsize_bound(L=1.0, fmt="bfloat16")
+    u = 2.0 ** -8
+    assert np.isclose(t, 1.0 / (1 + 2 * u) ** 2)
+
+
+def test_rate_bounds_ordering():
+    """Cor. 7's (1+2b-2a) bound is tighter than Thm 6's (1-2a) which is
+    looser than Thm 2 (exact) — for equal χ/L/t."""
+    L, t, k, chi, a = 1.0, 0.5, 1000, 2.0, 0.1
+    exact = theory.exact_rate_bound(L, t, k, chi)
+    sr = theory.sr_rate_bound(L, t, k, chi, a)
+    b = theory.b_upper_bound(0.4, "binary8")
+    sr_eps = theory.sr_eps_rate_bound(L, t, k, chi, a, b)
+    assert exact < sr            # rounding can only loosen the bound
+    assert sr_eps < sr           # the SRε bias tightens it back
+    assert b == 2 * 0.4 * 2 ** -3
+
+
+def test_gradient_floors_scale_with_u():
+    f8 = theory.gradient_floor_sr(0.25, 2.0, "binary8", 100)
+    bf = theory.gradient_floor_sr(0.25, 2.0, "bfloat16", 100)
+    assert f8 / bf == pytest.approx(2.0 ** -3 / 2.0 ** -8)
+
+
+def test_stagnation_floors():
+    f_sr = theory.stagnation_monotonicity_floor_sr(
+        2.0, "binary8", 10, t=0.1, x_norm=5.0)
+    f_sg = theory.stagnation_monotonicity_floor_signed(
+        2.0, "binary8", 10, t=0.1, x_norm=5.0, eps=0.5)
+    assert f_sg > f_sr > 0      # signed needs sqrt(1+2eps) more headroom
+
+
+# ----------------------------------------------------------- hloprof -----
+_HLO = """
+ENTRY main {
+  %p0 = f32[128,256]{1,0} parameter(0)
+  %p1 = f32[256,64]{1,0} parameter(1)
+  %dot.1 = f32[128,64]{1,0} dot(%p0, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}, metadata={op_name="jit(f)/proj/dot_general"}
+  %exp.2 = f32[128,64]{1,0} exponential(%dot.1)
+  %dot.2 = f32[128,256]{1,0} dot(%exp.2, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={1}, metadata={op_name="jit(f)/out/dot_general"}
+}
+"""
+
+
+def test_hloprof_dot_flops():
+    recs = hloprof.dot_records(_HLO)
+    assert len(recs) == 2
+    flops = {lbl.split("/")[-2]: f for f, lbl, _ in recs}
+    assert flops["proj"] == 2 * 128 * 64 * 256
+    assert flops["out"] == 2 * 128 * 256 * 64
+
+
+def test_hloprof_bytes_by_opcode():
+    out = dict(hloprof.bytes_by_opcode(_HLO))
+    assert out["dot"] == (128 * 64 + 128 * 256) * 4
+    assert out["exponential"] == 128 * 64 * 4
+    assert out["parameter"] == (128 * 256 + 256 * 64) * 4
