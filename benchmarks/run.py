@@ -3,10 +3,16 @@
 Prints ``name,us_per_call,derived`` CSV rows.  ``--quick`` shrinks epochs /
 simulation counts for smoke use; the full settings reproduce the paper's
 figures (with the synthetic-MNIST substitution documented in DESIGN.md §3).
+
+The ``kernels`` benchmark additionally writes ``BENCH_kernels.json``
+(us/Melt for the fp32, rounded-jnp, fused-kernel, and fused+PRNG update
+paths, plus the HBM-traffic model) so the perf trajectory of the hot path
+is tracked across PRs — see EXPERIMENTS.md §Perf.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -18,12 +24,28 @@ def _emit(rows):
         sys.stdout.flush()
 
 
+def _write_kernels_json(rows, path: str) -> None:
+    payload = {
+        "schema": "bench_kernels_v1",
+        "unit": "us_per_Melt (us column) / ratio-or-bytes (derived column)",
+        "rows": {name: {"us": us, "derived": derived}
+                 for name, us, derived in rows},
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path}", file=sys.stderr)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller sims/epochs (CI-sized)")
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names")
+    ap.add_argument("--kernels-json", default="BENCH_kernels.json",
+                    help="where the kernels benchmark writes its JSON "
+                         "(empty string disables)")
     args, _ = ap.parse_known_args()
     q = args.quick
 
@@ -59,6 +81,8 @@ def main() -> None:
         try:
             rows = fn()
             _emit(rows)
+            if name == "kernels" and args.kernels_json:
+                _write_kernels_json(rows, args.kernels_json)
             print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
         except Exception:
             failures += 1

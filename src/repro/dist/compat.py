@@ -1,0 +1,19 @@
+"""Version-compat shims for jax APIs that moved between releases.
+
+``shard_map`` lived in ``jax.experimental.shard_map`` (with a ``check_rep``
+flag) before being promoted to ``jax.shard_map`` (flag renamed
+``check_vma``).  Model and test code call this wrapper so both jax
+generations run.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)

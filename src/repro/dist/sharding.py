@@ -1,0 +1,203 @@
+"""Declarative GSPMD sharding rules + the ambient mesh-axes context.
+
+Two ideas keep the model code mesh-agnostic:
+
+* **Path-based parameter rules** — ``param_spec_for_path`` maps a parameter's
+  tree path + rank onto a PartitionSpec (megatron-style TP on projection
+  output dims, FSDP over ``data`` on the other matrix dim, expert-parallel
+  on stacked MoE weights, norms replicated).  ``build_param_shardings``
+  applies the rules over a whole pytree and filters every spec through the
+  divisibility check, so odd reduced-config shapes silently fall back to
+  replication instead of crashing GSPMD.
+* **Ambient MeshAxes** — model code never receives a mesh; it calls
+  ``shard_act(x, kind)`` which consults the context installed by
+  ``set_mesh_axes`` (a no-op when no mesh is active, so single-device tests
+  and eager init run unchanged).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, List, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    """Logical axis roles of the active mesh.
+
+    ``data``: FSDP/weight-sharding axes;  ``model``: tensor-parallel axis;
+    ``batch``: axes the *batch* dimension is split over (may be () for
+    batch-1 decode cells, where the sequence/heads shard instead).
+    """
+
+    mesh: Optional[Any] = None
+    data: Tuple[str, ...] = ("data",)
+    model: str = "model"
+    batch: Tuple[str, ...] = ("data",)
+
+    @property
+    def active(self) -> bool:
+        return self.mesh is not None
+
+
+_STACK: List[MeshAxes] = [MeshAxes()]
+
+
+def _axes() -> MeshAxes:
+    """The innermost MeshAxes installed by set_mesh_axes (inactive default)."""
+    return _STACK[-1]
+
+
+@contextlib.contextmanager
+def set_mesh_axes(ax: MeshAxes):
+    """Install ``ax`` as the ambient mesh-axes for the dynamic extent."""
+    _STACK.append(ax)
+    try:
+        yield ax
+    finally:
+        _STACK.pop()
+
+
+# --------------------------------------------------------------------------
+# Divisibility filter: GSPMD requires sharded dims to divide evenly; reduced
+# test configs routinely violate that, so every rule passes through here.
+# --------------------------------------------------------------------------
+def evenly_divisible_spec(spec: P, shape: Tuple[int, ...], mesh) -> P:
+    """Drop spec entries whose mesh-axis product does not divide the dim."""
+    entries = tuple(spec) + (None,) * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        if not axes or n == 0 or dim % n != 0:
+            out.append(None)
+        elif isinstance(entry, tuple):
+            out.append(axes)
+        else:
+            out.append(axes[0])
+    return P(*out)
+
+
+# --------------------------------------------------------------------------
+# Parameter rules.
+# --------------------------------------------------------------------------
+# Projections whose *input* dim is TP-sharded (they consume a TP-sharded
+# activation and their output re-enters the replicated residual stream).
+_OUT_PROJ = {"wo", "w_out", "o_proj", "out_proj", "proj_out", "down_proj"}
+_REPLICATED_TOKENS = ("norm", "scale", "bias", "gamma", "beta", "ln_")
+
+
+def param_spec_for_path(path: str, ndim: int, ax: MeshAxes, *,
+                        serve: bool = False) -> P:
+    """PartitionSpec for one parameter, keyed by its tree path and rank.
+
+    Rank conventions (stacked-over-layers layout):
+      2: (in, out) single matrices — embed (V, D), lm_head (D, V), router;
+      3: (L, in, out) per-layer projections;
+      4: (L, E, ·, ·) stacked MoE expert weights.
+    ``serve`` switches MoE experts to the serving layout (experts over
+    ``data``, F-TP over ``model``) matching models/moe.py's serve path.
+    """
+    data = tuple(ax.data)
+    model = ax.model
+    name = path.split("/")[-1].lower()
+
+    if ndim <= 1 or any(tok in name for tok in _REPLICATED_TOKENS):
+        return P(*([None] * ndim))
+
+    if ndim == 2:
+        if "embed" in name:            # (V, D): vocab-TP, FSDP on D
+            return P(model, data)
+        return P(data, model)          # lm_head / generic (in, out)
+
+    if ndim == 3:                      # (L, in, out)
+        if name in _OUT_PROJ:
+            return P(None, model, data)
+        return P(None, data, model)
+
+    if ndim == 4:                      # (L, E, ·, ·) stacked experts
+        is_down = "down" in name
+        if serve:                      # experts over data, F-TP over model
+            if is_down:                # (L, E, F, D)
+                return P(None, data, model, None)
+            return P(None, data, None, model)
+        if is_down:                    # EP over model, FSDP on D (last)
+            return P(None, model, None, data)
+        return P(None, model, data, None)
+
+    return P(*([None] * ndim))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        for attr in ("key", "idx", "name"):
+            if hasattr(k, attr):
+                parts.append(str(getattr(k, attr)))
+                break
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def build_param_shardings(tree, mesh, ax: Optional[MeshAxes] = None, *,
+                          serve: bool = False):
+    """NamedSharding pytree for a parameter pytree (divisibility-filtered)."""
+    if ax is None:
+        ax = MeshAxes(mesh=mesh)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    shardings = []
+    for path, leaf in flat:
+        spec = param_spec_for_path(_path_str(path), leaf.ndim, ax,
+                                   serve=serve)
+        spec = evenly_divisible_spec(spec, leaf.shape, mesh)
+        shardings.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, shardings)
+
+
+# --------------------------------------------------------------------------
+# Activation rules.
+# --------------------------------------------------------------------------
+def activation_spec(kind: str, ax: MeshAxes) -> P:
+    """PartitionSpec for a named activation kind.
+
+    hidden:     (B, S, D)        batch-sharded, D replicated (TP is per-op);
+    logits:     (B, S, V)        vocab-TP so the softmax reductions partition;
+    kv_cache:   (L, B, S, H, hd) heads over model;
+    mla_scores: (B, H, Q, S)     context dim over model (context-parallel
+                                 decode — see models/mla.py).
+    """
+    bt = tuple(ax.batch) if ax.batch else None
+    m = ax.model
+    if kind == "hidden":
+        return P(bt, None, None)
+    if kind == "logits":
+        return P(bt, None, m)
+    if kind == "kv_cache":
+        return P(None, bt, None, m, None)
+    if kind == "mla_scores":
+        return P(bt, None, None, m)
+    raise ValueError(f"unknown activation kind {kind!r}")
+
+
+def shard_act(x, kind: str):
+    """Sharding-constrain an activation per the ambient MeshAxes (no-op when
+    no mesh is active — single-device tests and eager init run unchanged)."""
+    ax = _axes()
+    if not ax.active:
+        return x
+    spec = activation_spec(kind, ax)
+    if len(tuple(spec)) > x.ndim:
+        return x
+    spec = evenly_divisible_spec(spec, x.shape, ax.mesh)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ax.mesh, spec))

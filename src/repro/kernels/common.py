@@ -1,15 +1,34 @@
-"""Shared rounding math for the Pallas kernels.
+"""Shared rounding math + in-kernel randomness for the Pallas kernels.
 
 The kernel bodies reuse the *identical* jnp bit-manipulation code as the
 pure-JAX engine (`repro.core.rounding`) — every op involved (integer shifts,
 bitcast, floor, where) lowers both to XLA and to Mosaic/TPU, and runs under
 ``interpret=True`` on CPU.  This guarantees kernel == oracle bit-for-bit when
 fed the same random bits.
+
+Randomness comes in two flavours:
+
+* **explicit-bits mode** — random bits are a uint32 HBM operand generated
+  with ``jax.random.bits`` outside the kernel.  Bit-exact against the jnp
+  oracle, used as the reference/checkpoint-exact mode, but costs one extra
+  HBM stream per rounding step (the roofline killer; EXPERIMENTS.md §Perf).
+* **in-kernel PRNG mode** — bits are generated *inside* the kernel, so the
+  bits streams vanish from HBM.  On real TPU this is the hardware per-core
+  PRNG (``pltpu.prng_seed`` / ``pltpu.prng_random_bits``), seeded per block
+  from ``(seed words, block index)`` delivered via SMEM scalar prefetch.
+  Under ``interpret=True`` (CPU CI) the same kernel body calls a
+  counter-based Threefry-2x32 hash in plain jnp keyed by the same seed and
+  the element's *global* (row, lane) coordinates — so CPU runs exercise the
+  identical code path and the bits are independent of the block partition.
+  The two backends draw different bits; PRNG-mode correctness is therefore
+  statistical (mean/variance of the roundoff error vs the paper's eqs. 3-5,
+  tests/test_kernel_prng.py), not bit-exact.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.formats import FPFormat, get_format
 from repro.core.rounding import (RoundingSpec, _ceil_from_decompose,
@@ -55,3 +74,119 @@ def apply_spec_block(spec: RoundingSpec, x, bits, v=None):
 def default_interpret() -> bool:
     """Pallas interpret mode: on for CPU (this container), off on real TPU."""
     return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# In-kernel randomness (no bits operands in HBM).
+# ---------------------------------------------------------------------------
+_GOLDEN = 0x9E3779B9          # stream offsets fold into the Threefry key
+
+
+def _rotl32(x, r: int):
+    return (x << jnp.uint32(r)) | (x >> jnp.uint32(32 - r))
+
+
+def threefry2x32(k0, k1, c0, c1):
+    """Threefry-2x32, 20 rounds — the PRF behind jax.random, in plain jnp.
+
+    Only 32-bit adds/xors/rotates, so it lowers to XLA-CPU, Mosaic, and the
+    Pallas interpreter alike.  Inputs broadcast; returns the two output
+    words (uint32).
+    """
+    k0, k1 = jnp.uint32(k0), jnp.uint32(k1)
+    ks = (k0, k1, k0 ^ k1 ^ jnp.uint32(0x1BD11BDA))
+    x0 = jnp.uint32(c0) + ks[0]
+    x1 = jnp.uint32(c1) + ks[1]
+    rots = ((13, 15, 26, 6), (17, 29, 16, 24))
+    for g in range(5):
+        for r in rots[g % 2]:
+            x0 = x0 + x1
+            x1 = _rotl32(x1, r) ^ x0
+        x0 = x0 + ks[(g + 1) % 3]
+        x1 = x1 + ks[(g + 2) % 3] + jnp.uint32(g + 1)
+    return x0, x1
+
+
+def counter_bits_pair(k0, k1, shape, row0=0, col0=0, stream: int = 0):
+    """TWO independent uint32 bit-planes for one 2-D block, pure jnp.
+
+    Key = (k0, k1 + GOLDEN·stream); counter = the element's *global*
+    (row, col) coordinates — so the bits are a deterministic function of
+    (seed, coordinates, stream) and independent of how the array was cut
+    into blocks.  This is the interpret-mode stand-in for the TPU hardware
+    PRNG: same call sites, same independence structure.  Threefry emits two
+    output words per counter; callers needing several streams should
+    consume both (halves the PRF cost of the fused three-round kernel).
+    """
+    r = (jax.lax.broadcasted_iota(jnp.uint32, shape, 0)
+         + jnp.uint32(row0))
+    c = (jax.lax.broadcasted_iota(jnp.uint32, shape, 1)
+         + jnp.uint32(col0))
+    return threefry2x32(
+        k0, jnp.uint32(k1) + jnp.uint32(_GOLDEN) * jnp.uint32(stream), r, c)
+
+
+def counter_bits(k0, k1, shape, row0=0, col0=0, stream: int = 0):
+    """Single bit-plane convenience over counter_bits_pair."""
+    return counter_bits_pair(k0, k1, shape, row0=row0, col0=col0,
+                             stream=stream)[0]
+
+
+def seed_kernel_prng(seed_ref, block_id, *, interpret: bool) -> None:
+    """Seed the TPU per-core PRNG for this block (no-op under interpret,
+    where kernel_bits re-derives everything from coordinates instead)."""
+    if not interpret:
+        pltpu.prng_seed(seed_ref[0], seed_ref[1], block_id)
+
+
+def kernel_bits(seed_ref, shape, row0=0, col0=0, stream: int = 0,
+                *, interpret: bool):
+    """Draw a block of uint32 random bits inside a kernel body.
+
+    ``interpret=True``: counter-based Threefry in plain jnp (CPU CI path).
+    ``interpret=False`` (real TPU): the in-core hardware PRNG — the caller
+    must have run seed_kernel_prng for this block first; successive draws
+    advance the hardware stream, so ``stream`` is only used by the
+    interpret path (where draws are stateless).
+    """
+    if interpret:
+        return counter_bits(seed_ref[0], seed_ref[1], shape,
+                            row0=row0, col0=col0, stream=stream)
+    return pltpu.prng_random_bits(shape)
+
+
+def kernel_bits3(seed_ref, shape, row0, need, *, interpret: bool):
+    """Up to three bit-planes for the fused eq.-8 kernel, ``None`` where the
+    corresponding rounding step is deterministic (``need`` is a static bool
+    triple).  The interpret path consumes both Threefry output words per
+    call, so three stochastic steps cost two PRF evaluations, not three."""
+    if not interpret:
+        return [pltpu.prng_random_bits(shape) if n else None for n in need]
+    out = [None, None, None]
+    pair, drawn = None, 0
+    for i, n in enumerate(need):
+        if not n:
+            continue
+        if pair is None:
+            pair = counter_bits_pair(seed_ref[0], seed_ref[1], shape,
+                                     row0=row0, stream=drawn)
+            drawn += 1
+            out[i] = pair[0]
+        else:
+            out[i] = pair[1]
+            pair = None
+    return out
+
+
+def derive_seed(key, step=None):
+    """(base_key[, step]) -> (2,) uint32 seed words for the kernel PRNG.
+
+    The per-block seed inside the kernel is (words, block_index); folding
+    ``step`` here keeps the whole optimizer step a deterministic function
+    of the checkpointed (key, step) — restart stays bit-exact.
+    """
+    if step is not None:
+        key = jax.random.fold_in(key, step)
+    if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        key = jax.random.key_data(key)
+    return key.reshape(-1)[:2].astype(jnp.uint32)

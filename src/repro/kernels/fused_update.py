@@ -7,8 +7,10 @@ Computes, in a single HBM pass over the parameters:
     x⁺  = Q₃(x − upd)      (8c, signed-SRε biased by sign(ĝ))
 
 Unfused, this chain is ≥ 5 elementwise XLA ops → ≥ 7 HBM streams over the
-parameter size; fused it is x, g, (3×) bits in + x⁺ out.  This is the hot
-op of the paper's method at framework scale: it touches every parameter on
+parameter size; fused it is x, g, (3×) bits in + x⁺ out (24 B/elt); with
+the in-kernel PRNG (``fused_qupdate_prng_p``) the bits streams vanish and
+it is x, g in + x⁺ out — 12 B/elt, the roofline bound.  This is the hot op
+of the paper's method at framework scale: it touches every parameter on
 every optimizer step and is purely memory-bound, so the fusion ratio is the
 roofline lever (see EXPERIMENTS.md §Perf).
 
@@ -32,7 +34,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.gd import GDRounding
 from repro.kernels import common
-from repro.kernels.sr_cast import LANES, DEFAULT_BLOCK_ROWS, _pad_2d
+from repro.kernels.sr_cast import LANES, _pad_2d, pick_block_rows
 
 
 def _resolve_v_static(source: str, g_hat, x):
@@ -45,23 +47,26 @@ def _resolve_v_static(source: str, g_hat, x):
     raise ValueError(f"unknown v_source {source!r}")
 
 
+def _update_chain(cfg: GDRounding, x, g, t, b1, b2, b3):
+    """The eq.-8 three-step rounded chain on one block — shared by the
+    explicit-bits and PRNG kernel bodies so the two paths cannot diverge."""
+    g_hat = common.apply_spec_block(
+        cfg.grad, g, b1, v=_resolve_v_static(cfg.grad_v, g, x))
+    upd = common.apply_spec_block(
+        cfg.mul, t * g_hat, b2, v=_resolve_v_static(cfg.mul_v, g_hat, x))
+    z = x - upd
+    return common.apply_spec_block(
+        cfg.sub, z, b3, v=_resolve_v_static(cfg.sub_v, g_hat, x))
+
+
 def _fused_update_kernel(t_ref, x_ref, g_ref, b1_ref, b2_ref, b3_ref, o_ref,
                          *, cfg: GDRounding):
-    x = x_ref[...]
-    g = g_ref[...]
-    t = t_ref[0]
-    g_hat = common.apply_spec_block(
-        cfg.grad, g, b1_ref[...], v=_resolve_v_static(cfg.grad_v, g, x))
-    upd = common.apply_spec_block(
-        cfg.mul, t * g_hat, b2_ref[...],
-        v=_resolve_v_static(cfg.mul_v, g_hat, x))
-    z = x - upd
-    o_ref[...] = common.apply_spec_block(
-        cfg.sub, z, b3_ref[...], v=_resolve_v_static(cfg.sub_v, g_hat, x))
+    o_ref[...] = _update_chain(cfg, x_ref[...], g_ref[...], t_ref[0],
+                               b1_ref[...], b2_ref[...], b3_ref[...])
 
 
 def fused_qupdate_p(x, g, t, bits3, cfg: GDRounding,
-                    *, block_rows: int = DEFAULT_BLOCK_ROWS, interpret=None):
+                    *, block_rows=None, interpret=None):
     """Fused rounded GD update.
 
     Args:
@@ -76,6 +81,7 @@ def fused_qupdate_p(x, g, t, bits3, cfg: GDRounding,
     """
     if interpret is None:
         interpret = common.default_interpret()
+    block_rows = pick_block_rows(x.size, interpret, block_rows)
     shape = x.shape
     xf, rows = _pad_2d(x.reshape(-1), block_rows)
     gf, _ = _pad_2d(g.reshape(-1), block_rows)
@@ -96,4 +102,57 @@ def fused_qupdate_p(x, g, t, bits3, cfg: GDRounding,
         out_shape=jax.ShapeDtypeStruct(xf.shape, jnp.float32),
         interpret=interpret,
     )(t_arr, xf, gf, b1, b2, b3)
+    return out.reshape(-1)[: x.size].reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# In-kernel PRNG variant: x, g in + x⁺ out — 12 B/elt, the roofline bound.
+# ---------------------------------------------------------------------------
+def _fused_update_prng_kernel(seed_ref, t_ref, x_ref, g_ref, o_ref,
+                              *, cfg: GDRounding, block_rows, interpret):
+    i = pl.program_id(0)
+    common.seed_kernel_prng(seed_ref, i, interpret=interpret)
+    b1, b2, b3 = common.kernel_bits3(
+        seed_ref, x_ref.shape, i * block_rows,
+        (cfg.grad.stochastic, cfg.mul.stochastic, cfg.sub.stochastic),
+        interpret=interpret)
+    o_ref[...] = _update_chain(cfg, x_ref[...], g_ref[...], t_ref[0],
+                               b1, b2, b3)
+
+
+def fused_qupdate_prng_p(x, g, t, seed, cfg: GDRounding,
+                         *, block_rows=None, interpret=None):
+    """Fused rounded GD update with in-kernel randomness.
+
+    Same math as ``fused_qupdate_p`` but the three bits streams are
+    generated inside the kernel (hardware PRNG on TPU, counter-hash under
+    interpret), so HBM traffic drops from 24 to 12 B/elt.  ``seed``: (2,)
+    uint32 words (common.derive_seed), delivered via SMEM scalar prefetch;
+    the per-block seed is (words, block index).
+    """
+    if interpret is None:
+        interpret = common.default_interpret()
+    block_rows = pick_block_rows(x.size, interpret, block_rows)
+    shape = x.shape
+    xf, rows = _pad_2d(x.reshape(-1), block_rows)
+    gf, _ = _pad_2d(g.reshape(-1), block_rows)
+    grid = (rows // block_rows,)
+    bspec = pl.BlockSpec((block_rows, LANES), lambda i, s: (i, 0))
+    seed = jnp.asarray(seed, jnp.uint32).reshape(2)
+
+    t_arr = jnp.asarray([t], jnp.float32)
+    kern = functools.partial(_fused_update_prng_kernel, cfg=cfg,
+                             block_rows=block_rows, interpret=interpret)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),
+                      bspec, bspec],
+            out_specs=bspec,
+        ),
+        out_shape=jax.ShapeDtypeStruct(xf.shape, jnp.float32),
+        interpret=interpret,
+    )(seed, t_arr, xf, gf)
     return out.reshape(-1)[: x.size].reshape(shape)

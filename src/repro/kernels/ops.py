@@ -13,9 +13,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.gd import GDRounding
-from repro.kernels.fused_update import fused_qupdate_p
-from repro.kernels.qmatmul import qmatmul_p
-from repro.kernels.sr_cast import sr_cast_p
+from repro.kernels import common
+from repro.kernels.fused_update import fused_qupdate_p, fused_qupdate_prng_p
+from repro.kernels.qmatmul import qmatmul_p, qmatmul_prng_p
+from repro.kernels.sr_cast import sr_cast_p, sr_cast_prng_p
 
 
 @functools.partial(jax.jit, static_argnames=("fmt", "mode", "eps", "interpret"))
@@ -37,6 +38,26 @@ def fused_qupdate(x, g, t, key, cfg: GDRounding,
     return fused_qupdate_p(x, g, t, bits3, cfg, interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("fmt", "mode", "eps", "interpret"))
+def sr_cast_prng(x, key, fmt, mode: str = "sr", eps: float = 0.0, v=None,
+                 interpret: Optional[bool] = None):
+    """Stochastic-round cast with in-kernel randomness (no bits operand)."""
+    x = jnp.asarray(x, jnp.float32)
+    return sr_cast_prng_p(x, common.derive_seed(key), fmt, mode, eps=eps,
+                          v=v, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
+def fused_qupdate_prng(x, g, t, key, cfg: GDRounding,
+                       interpret: Optional[bool] = None):
+    """Fused eq.-8 update with in-kernel randomness — 12 B/elt HBM traffic
+    (the hot path; see EXPERIMENTS.md §Perf)."""
+    x = jnp.asarray(x, jnp.float32)
+    g = jnp.asarray(g, jnp.float32)
+    return fused_qupdate_prng_p(x, g, t, common.derive_seed(key), cfg,
+                                interpret=interpret)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("fmt", "mode", "eps", "bm", "bn", "bk",
                                     "interpret"))
@@ -49,3 +70,16 @@ def qmatmul_lowp(a, b, key, fmt, mode: str = "sr", eps: float = 0.0,
     bits = jax.random.bits(key, (a.shape[0], b.shape[1]), jnp.uint32)
     return qmatmul_p(a, b, bits, fmt, mode, eps,
                      bm=bm, bn=bn, bk=bk, interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("fmt", "mode", "eps", "bm", "bn", "bk",
+                                    "interpret"))
+def qmatmul_lowp_prng(a, b, key, fmt, mode: str = "sr", eps: float = 0.0,
+                      bm: int = 256, bn: int = 256, bk: int = 256,
+                      interpret: Optional[bool] = None):
+    """Low-precision-output GEMM with in-kernel randomness."""
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    return qmatmul_prng_p(a, b, common.derive_seed(key), fmt, mode, eps,
+                          bm=bm, bn=bn, bk=bk, interpret=interpret)

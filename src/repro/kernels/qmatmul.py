@@ -3,8 +3,12 @@
 Models the paper's (8a): a gradient/activation GEMM whose *result* is stored
 in the low-precision format (rounded by RN or SR).  MXU-shaped tiling:
 (bm, bk) x (bk, bn) blocks accumulate into a float32 VMEM scratch across the
-K grid dimension; on the last K step the accumulator is rounded (consuming
-a (bm, bn) tile of random bits for the stochastic modes) and written out.
+K grid dimension; on the last K step the accumulator is rounded and written
+out.  Two flavours share all scaffolding (mode check, padding, geometry,
+accumulate) and differ only in where the (bm, bn) bits tile for the
+stochastic modes comes from: ``qmatmul_p`` reads an explicit uint32 HBM
+operand (bit-exact oracle mode), ``qmatmul_prng_p`` generates it in-kernel
+at emit time (the operand — 4 B per *output* element — vanishes from HBM).
 
 Block sizes default to 128/256 multiples so the MXU (128x128) is saturated
 and the working set (bm*bk + bk*bn + 2*bm*bn tiles) stays ≲ 2 MiB in VMEM.
@@ -22,14 +26,47 @@ from repro.core.formats import get_format
 from repro.kernels import common
 
 
-def _qmatmul_kernel(a_ref, b_ref, bits_ref, o_ref, acc_ref,
-                    *, fmt, mode, eps, k_steps):
+def _check_mode(mode: str) -> None:
+    if mode == "signed_sr_eps":
+        raise ValueError("signed_sr_eps is not supported for GEMM result "
+                         "rounding (no bias-direction operand); use "
+                         "'sr'/'sr_eps' or a deterministic mode")
+
+
+def _pad_to(x, m0, m1):
+    p0 = -(-x.shape[0] // m0) * m0 - x.shape[0]
+    p1 = -(-x.shape[1] // m1) * m1 - x.shape[1]
+    return jnp.pad(x, ((0, p0), (0, p1)))
+
+
+def _geometry(a, b, bm, bn, bk):
+    """Clamp block sizes, pad operands, derive the (i, j, k) grid."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    bm_, bn_, bk_ = min(bm, M), min(bn, N), min(bk, K)
+    a_p = _pad_to(a, bm_, bk_)
+    b_p = _pad_to(b, bk_, bn_)
+    Mp, Kp = a_p.shape
+    _, Np = b_p.shape
+    k_steps = Kp // bk_
+    grid = (Mp // bm_, Np // bn_, k_steps)
+    return a_p, b_p, (M, N, Mp, Np), (bm_, bn_, bk_), k_steps, grid
+
+
+def _accumulate(a_ref, b_ref, acc_ref):
+    """Init-on-first-k + one (bm, bk) x (bk, bn) MXU step into the scratch."""
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
                             preferred_element_type=jnp.float32)
+
+
+def _qmatmul_kernel(a_ref, b_ref, bits_ref, o_ref, acc_ref,
+                    *, fmt, mode, eps, k_steps):
+    _accumulate(a_ref, b_ref, acc_ref)
 
     @pl.when(pl.program_id(2) == k_steps - 1)
     def _emit():
@@ -44,28 +81,16 @@ def qmatmul_p(a, b, bits, fmt, mode: str = "sr", eps: float = 0.0,
 
     a: (M, K) float32; b: (K, N) float32; bits: (M, N) uint32 (ignored for
     deterministic modes but must be supplied for a uniform signature).
-    M, N, K are padded up to block multiples.
+    M, N, K are padded up to block multiples.  ``signed_sr_eps`` is
+    rejected: result-rounding a GEMM has no bias-direction operand.
     """
+    _check_mode(mode)
     fmt = get_format(fmt)
     if interpret is None:
         interpret = common.default_interpret()
-    M, K = a.shape
-    K2, N = b.shape
-    assert K == K2, (a.shape, b.shape)
-    bm_, bn_, bk_ = min(bm, M), min(bn, N), min(bk, K)
-
-    def pad_to(x, m0, m1):
-        p0 = -(-x.shape[0] // m0) * m0 - x.shape[0]
-        p1 = -(-x.shape[1] // m1) * m1 - x.shape[1]
-        return jnp.pad(x, ((0, p0), (0, p1)))
-
-    a_p = pad_to(a, bm_, bk_)
-    b_p = pad_to(b, bk_, bn_)
-    bits_p = pad_to(bits, bm_, bn_)
-    Mp, Kp = a_p.shape
-    _, Np = b_p.shape
-    k_steps = Kp // bk_
-    grid = (Mp // bm_, Np // bn_, k_steps)
+    a_p, b_p, (M, N, Mp, Np), (bm_, bn_, bk_), k_steps, grid = \
+        _geometry(a, b, bm, bn, bk)
+    bits_p = _pad_to(bits, bm_, bn_)
 
     kern = functools.partial(_qmatmul_kernel, fmt=fmt, mode=mode, eps=eps,
                              k_steps=k_steps)
@@ -82,4 +107,64 @@ def qmatmul_p(a, b, bits, fmt, mode: str = "sr", eps: float = 0.0,
         scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
         interpret=interpret,
     )(a_p, b_p, bits_p)
+    return out[:M, :N]
+
+
+def _qmatmul_prng_kernel(seed_ref, a_ref, b_ref, o_ref, acc_ref,
+                         *, fmt, mode, eps, k_steps, bm, bn, interpret):
+    # program ids must be read at kernel top level: under interpret they are
+    # not substituted inside pl.when sub-jaxprs (jax 0.4.x limitation)
+    i, j = pl.program_id(0), pl.program_id(1)
+    n_j = pl.num_programs(1)
+
+    _accumulate(a_ref, b_ref, acc_ref)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _emit():
+        if mode in ("sr", "sr_eps"):
+            common.seed_kernel_prng(seed_ref, i * n_j + j,
+                                    interpret=interpret)
+            bits = common.kernel_bits(seed_ref, acc_ref.shape,
+                                      row0=i * bm, col0=j * bn,
+                                      interpret=interpret)
+        else:
+            bits = None
+        o_ref[...] = common.round_block(acc_ref[...], bits, fmt, mode, eps)
+
+
+def qmatmul_prng_p(a, b, seed, fmt, mode: str = "sr", eps: float = 0.0,
+                   *, bm: int = 256, bn: int = 256, bk: int = 256,
+                   interpret=None):
+    """Rounded ``a @ b`` with in-kernel randomness (no bits operand).
+
+    ``seed``: (2,) uint32 words (common.derive_seed) via SMEM scalar
+    prefetch; the per-tile seed is (words, linearized (i, j) tile index).
+    ``signed_sr_eps`` is rejected as in ``qmatmul_p``.
+    """
+    _check_mode(mode)
+    fmt = get_format(fmt)
+    if interpret is None:
+        interpret = common.default_interpret()
+    a_p, b_p, (M, N, Mp, Np), (bm_, bn_, bk_), k_steps, grid = \
+        _geometry(a, b, bm, bn, bk)
+    seed = jnp.asarray(seed, jnp.uint32).reshape(2)
+
+    kern = functools.partial(_qmatmul_prng_kernel, fmt=fmt, mode=mode,
+                             eps=eps, k_steps=k_steps, bm=bm_, bn=bn_,
+                             interpret=interpret)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm_, bk_), lambda i, j, k, s: (i, k)),
+                pl.BlockSpec((bk_, bn_), lambda i, j, k, s: (k, j)),
+            ],
+            out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, k, s: (i, j)),
+            scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        interpret=interpret,
+    )(seed, a_p, b_p)
     return out[:M, :N]

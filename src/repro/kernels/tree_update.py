@@ -1,0 +1,95 @@
+"""Whole-tree fused optimizer step: ONE ``pallas_call`` per parameter pytree.
+
+The per-leaf update loop pays, for every leaf, a kernel-launch plus padding
+up to the (block_rows, 128) tile — ruinous for models with many small
+leaves (norm scales, biases, per-layer stacks).  Here the whole pytree is
+flattened into ONE padded (rows, 128) float32 buffer, the fused eq.-8
+kernel runs once over the concatenation, and the result is split back.
+Padding waste collapses from per-leaf to a single sub-tile tail, and launch
+overhead is O(1) in the leaf count.
+
+Randomness:
+
+* ``prng`` mode (default hot path): in-kernel bits — no bits operands at
+  all, 12 B/elt of HBM traffic (EXPERIMENTS.md §Perf).  Leaf values see
+  bits keyed by their position in the flat buffer.
+* ``bits`` mode: explicit uint32 operands generated from the key outside
+  the kernel — the bit-exact oracle/checkpoint mode (24 B/elt), identical
+  to ``ref.fused_qupdate_ref`` on the concatenated vector.
+
+Both modes are deterministic functions of ``(key, step)`` — plus, for
+``prng`` mode on real TPU, the block partition and backend (the hardware
+PRNG is seeded per block index) — so checkpoint/restart stays bit-exact
+within a mode as long as ``block_rows`` and the backend are unchanged;
+``bits`` mode is unconditionally partition-invariant.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gd import GDRounding
+from repro.kernels import common
+from repro.kernels.fused_update import fused_qupdate_p, fused_qupdate_prng_p
+
+
+def tree_ravel(tree) -> Tuple[jax.Array, Any]:
+    """Concatenate all leaves into one float32 vector; returns (flat, spec)
+    where ``spec`` carries everything needed to unravel."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if not leaves:
+        return jnp.zeros((0,), jnp.float32), (treedef, (), ())
+    shapes = tuple(l.shape for l in leaves)
+    sizes = tuple(l.size for l in leaves)
+    flat = jnp.concatenate([jnp.asarray(l, jnp.float32).reshape(-1)
+                            for l in leaves])
+    return flat, (treedef, shapes, sizes)
+
+
+def tree_unravel(flat, spec):
+    """Inverse of tree_ravel."""
+    treedef, shapes, sizes = spec
+    leaves = []
+    off = 0
+    for shape, size in zip(shapes, sizes):
+        leaves.append(jax.lax.dynamic_slice_in_dim(flat, off, size)
+                      .reshape(shape))
+        off += size
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def fused_tree_update(params, grads, t, cfg: GDRounding, key,
+                      step=0, *, mode: str = "prng", block_rows=None,
+                      interpret: Optional[bool] = None):
+    """Apply the paper's eq.-8 rounded update to a whole parameter pytree
+    with exactly one ``pallas_call``.
+
+    Args:
+      params/grads: matching pytrees (any leaf shapes/count).
+      t: scalar stepsize;  cfg: three-step rounding policy.
+      key: PRNG key; with ``step`` it fully determines the randomness.
+      mode: "prng" (in-kernel bits, hot path) or "bits" (explicit bits,
+        bit-exact oracle mode).
+    """
+    xf, spec = tree_ravel(params)
+    gf, _ = tree_ravel(grads)
+    if xf.size == 0:
+        return params
+    if xf.shape != gf.shape:
+        raise ValueError(f"params/grads size mismatch: {xf.shape} vs "
+                         f"{gf.shape}")
+    if mode == "prng":
+        seed = common.derive_seed(key, step)
+        out = fused_qupdate_prng_p(xf, gf, t, seed, cfg,
+                                   block_rows=block_rows,
+                                   interpret=interpret)
+    elif mode == "bits":
+        bits3 = jax.random.bits(jax.random.fold_in(key, step),
+                                (3, xf.size), jnp.uint32)
+        out = fused_qupdate_p(xf, gf, t, bits3, cfg,
+                              block_rows=block_rows, interpret=interpret)
+    else:
+        raise ValueError(f"unknown tree-update mode {mode!r}")
+    return tree_unravel(out, spec)

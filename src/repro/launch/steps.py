@@ -24,17 +24,24 @@ from repro.optim import qsgd
 
 
 # ------------------------------------------------------------- optimizers --
-def paper_optimizer(lr: float = 1e-3, fmt: str = "bfloat16"):
+def paper_optimizer(lr: float = 1e-3, fmt: str = "bfloat16",
+                    update_path: str = "jnp"):
     """The paper's technique as the production update path: SR for the
     stepsize multiply, signed-SRε (ε=0.1, v=gradient) for the subtraction,
-    momentum kept on an SR-rounded low-precision grid."""
+    momentum kept on an SR-rounded low-precision grid.
+
+    ``update_path="fused"`` switches the parameter update to the whole-tree
+    fused Pallas kernel with in-kernel PRNG (one ``pallas_call`` per step
+    for the entire model, 12 B/elt of HBM traffic — EXPERIMENTS.md §Perf);
+    "jnp" keeps the per-leaf chain, which shards trivially under pjit."""
     cfg = gd.GDRounding(
         grad=rounding.IDENTITY,              # grads computed in bf16/fp32
         mul=rounding.spec(fmt, "sr"),
         sub=rounding.spec(fmt, "signed_sr_eps", 0.1),
         sub_v="grad")
     return qsgd(lr=lr, momentum=0.9, cfg=cfg,
-                momentum_spec=rounding.spec(fmt, "sr"))
+                momentum_spec=rounding.spec(fmt, "sr"),
+                update_path=update_path)
 
 
 def baseline_optimizer(lr: float = 1e-3):

@@ -28,7 +28,7 @@ from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_local_mesh, mesh_axes_for
 from repro.dist.sharding import set_mesh_axes
 from repro.models import build_model
-from repro.optim import qsgd
+from repro.optim import base as optim_base, qsgd
 from repro.train import TrainLoop, TrainLoopConfig
 
 
@@ -53,14 +53,16 @@ def rounding_config(kind: str, fmt: str, eps: float) -> gd.GDRounding:
 
 def run(arch: str, *, reduced: bool, steps: int, batch: int, seq: int,
         lr: float, rounding_kind: str, fmt: str, eps: float,
-        ckpt_dir: str, log_every: int = 10, momentum: float = 0.9):
+        ckpt_dir: str, log_every: int = 10, momentum: float = 0.9,
+        update_path: str = "jnp"):
     cfg = get_config(arch)
     if reduced:
         cfg = reduce_cfg(cfg)
     cfg = dataclasses.replace(cfg, remat="none" if reduced else cfg.remat)
     model = build_model(cfg)
     opt = qsgd(lr=lr, momentum=momentum,
-               cfg=rounding_config(rounding_kind, fmt, eps))
+               cfg=rounding_config(rounding_kind, fmt, eps),
+               update_path=update_path)
 
     mesh = make_local_mesh()
     ax = mesh_axes_for(mesh, batch_size=batch)
@@ -108,10 +110,15 @@ def main():
     ap.add_argument("--fmt", default="bfloat16")
     ap.add_argument("--eps", type=float, default=0.1)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--update-path", default="jnp",
+                    choices=list(optim_base.UPDATE_PATHS),
+                    help="parameter-update engine: per-leaf jnp chain, "
+                         "whole-tree fused kernel (in-kernel PRNG), or "
+                         "whole-tree kernel with explicit bits")
     args = ap.parse_args()
     run(args.arch, reduced=args.reduced, steps=args.steps, batch=args.batch,
         seq=args.seq, lr=args.lr, rounding_kind=args.rounding, fmt=args.fmt,
-        eps=args.eps, ckpt_dir=args.ckpt_dir)
+        eps=args.eps, ckpt_dir=args.ckpt_dir, update_path=args.update_path)
 
 
 if __name__ == "__main__":

@@ -27,6 +27,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.dist import compat
 from repro.dist.sharding import _axes, shard_act
 from repro.models import layers as L
 from repro.models.ffn import ffn_apply, ffn_init
@@ -45,151 +46,6 @@ def moe_init(key, cfg):
         "w_up": expert_stack(ks[2], d, m.d_expert),
         "w_down": expert_stack(ks[3], m.d_expert, d),
     }
-    if m.n_shared:
-        params["shared"] = ffn_init(ks[4], d, m.n_shared * m.d_expert,
-                                    cfg.ffn_act)
-    return params
-
-
-def _expert_compute(buf, w_gate, w_up, w_down, dtype):
-    """Batched SwiGLU over stacked experts: (E, C, D) -> (E, C, D)."""
-    gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w_gate.astype(dtype)))
-    up = jnp.einsum("ecd,edf->ecf", buf, w_up.astype(dtype))
-    return jnp.einsum("ecf,efd->ecd", gate * up, w_down.astype(dtype))
-
-
-def _dispatch_compute_combine(xt, topw, topi, w_gate, w_up, w_down,
-                              n_experts, top_k, capacity_factor, dtype,
-                              e_offset=0, capacity_experts=None,
-                              reduce_fn=None):
-    """Capacity-scatter → expert FFN → weighted combine on local arrays.
-
-    ``e_offset``/``n_experts`` select the expert window this caller owns
-    (the EP path passes its shard; the dense path passes everything).
-    ``capacity_experts`` is the *total* expert count for the per-expert
-    capacity formula (so EP shards size their buffers correctly)."""
-    T, D = xt.shape
-    E = n_experts
-    ce = capacity_experts or E
-    C = max(1, int(T * top_k * capacity_factor / max(ce, top_k)))
-    e_all = topi.reshape(-1)                                    # (T*k,)
-    local = (e_all >= e_offset) & (e_all < e_offset + E)
-    e_flat = jnp.clip(e_all - e_offset, 0, E - 1)
-    onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32) * local[:, None]
-    pos = jnp.cumsum(onehot, axis=0) - onehot
-    p_flat = jnp.take_along_axis(pos, e_flat[:, None], axis=1)[:, 0]
-    keep = (p_flat < C) & local
-    p_flat = jnp.minimum(p_flat, C - 1)
-
-    x_rep = jnp.repeat(xt, top_k, axis=0)                       # (T*k, D)
-    buf = jnp.zeros((E, C, D), dtype)
-    buf = buf.at[e_flat, p_flat].add(
-        jnp.where(keep[:, None], x_rep, 0).astype(dtype))
-
-    out = _expert_compute(buf, w_gate, w_up, w_down, dtype)     # (E, C, D)
-    if reduce_fn is not None:       # TP-within-expert partial-sum combine
-        out = reduce_fn(out)
-
-    y_slots = out[e_flat, p_flat]                               # (T*k, D)
-    w_flat = topw.reshape(-1) * keep.astype(jnp.float32)
-    return (y_slots.astype(jnp.float32) * w_flat[:, None]).reshape(
-        T, top_k, D).sum(1).astype(dtype)
-
-
-def moe_apply(params, x, cfg, router_key=None) -> Tuple[jax.Array, jax.Array]:
-    """x: (B, S, D) -> (y, aux_loss)."""
-    m = cfg.moe
-    B, S, D = x.shape
-    dtype = x.dtype
-    T = B * S
-    xt = x.reshape(T, D)
-
-    logits = (xt @ params["router"].astype(dtype)).astype(jnp.float32)
-    if m.router_noise and router_key is not None:
-        logits = logits + m.router_noise * jax.random.normal(
-            router_key, logits.shape)
-    probs = jax.nn.softmax(logits, axis=-1)                     # (T, E)
-    topw, topi = jax.lax.top_k(probs, m.top_k)                  # (T, k)
-    topw = topw / (jnp.sum(topw, -1, keepdims=True) + 1e-9)
-
-    ax = _axes()
-    E = m.n_experts
-    serve_layout = getattr(cfg, "moe_serve_layout", False)
-    y = None
-    if ax.active and ax.mesh.shape[ax.model] > 1:
-        mesh = ax.mesh
-        from jax.sharding import PartitionSpec as P
-        dp = tuple(a for a in ax.batch if a in mesh.axis_names) or None
-        fsdp = tuple(ax.data)
-        n_d = 1
-        for a in fsdp:
-            n_d *= mesh.shape[a]
-
-        if serve_layout and dp is not None and E % n_d == 0:
-            # ----- serving layout: experts over `data`, F-TP over `model`.
-            # Tokens are replicated along model, so each device computes
-            # its F-shard of its data-shard's experts for ALL tokens
-            # (gathered - tiny at decode), partial-sums over model, sums
-            # expert contributions over data.  No weight movement at all.
-            E_loc = E // n_d
-
-            def serve_fn(xt_, topw_, topi_, wg_, wu_, wd_):
-                xt_all = jax.lax.all_gather(xt_, dp, axis=0, tiled=True)
-                topw_all = jax.lax.all_gather(topw_, dp, axis=0, tiled=True)
-                topi_all = jax.lax.all_gather(topi_, dp, axis=0, tiled=True)
-                e0 = jax.lax.axis_index(fsdp) * E_loc
-                y_all = _dispatch_compute_combine(
-                    xt_all, topw_all, topi_all, wg_, wu_, wd_, E_loc,
-                    m.top_k, m.capacity_factor, dtype, e_offset=e0,
-                    capacity_experts=E,
-                    reduce_fn=lambda o: jax.lax.psum(o, ax.model))
-                y_all = jax.lax.psum(y_all, dp)        # sum expert owners
-                T_loc = xt_.shape[0]
-                d_idx = jax.lax.axis_index(dp)
-                return jax.lax.dynamic_slice_in_dim(
-                    y_all, d_idx * T_loc, T_loc, axis=0)
-
-            tok_spec = P(dp, None)
-            y = jax.shard_map(
-                serve_fn, mesh=mesh,
-                in_specs=(tok_spec, tok_spec, tok_spec,
-                          P(fsdp, None, ax.model), P(fsdp, None, ax.model),
-                          P(fsdp, ax.model, None)),
-                out_specs=tok_spec, check_vma=False,
-            )(xt, topw, topi, params["w_gate"], params["w_up"],
-              params["w_down"])
-
-        elif E % mesh.shape[ax.model] == 0:
-            # ----- training layout: experts over `model` (EP), FSDP over
-            # data on D; weights all-gathered per layer.
-            E_loc = E // mesh.shape[ax.model]
-
-            def local_fn(xt_, topw_, topi_, wg_, wu_, wd_):
-                wg_ = jax.lax.all_gather(wg_, fsdp, axis=1, tiled=True)
-                wu_ = jax.lax.all_gather(wu_, fsdp, axis=1, tiled=True)
-                wd_ = jax.lax.all_gather(wd_, fsdp, axis=2, tiled=True)
-                e0 = jax.lax.axis_index(ax.model) * E_loc
-                y_ = _dispatch_compute_combine(
-                    xt_, topw_, topi_, wg_, wu_, wd_, E_loc, m.top_k,
-                    m.capacity_factor, dtype, e_offset=e0,
-                    capacity_experts=E)
-                return jax.lax.psum(y_, ax.model)
-
-            tok_spec = P(dp, None)
-            y = jax.shard_map(
-                local_fn, mesh=mesh,
-                in_specs=(tok_spec, tok_spec, tok_spec,
-                          P(ax.model, fsdp, None), P(ax.model, fsdp, None),
-                          P(ax.model, None, fsdp)),
-                out_specs=tok_spec, check_vma=False,
-            )(xt, topw, topi, params["w_gate"], params["w_up"],
-              params["w_down"])
-
-    if y is None:   # single-device / non-divisible fallback (reference)
-        y = _dispatch_compute_combine(
-            xt, topw, topi, params["w_gate"], params["w_up"],
-            params["w_down"], E, m.top_k, m.capacity_factor, dtype)
-
     if m.n_shared:
         params["shared"] = ffn_init(ks[4], d, m.n_shared * m.d_expert,
                                     cfg.ffn_act)
@@ -296,7 +152,7 @@ def moe_apply(params, x, cfg, router_key=None) -> Tuple[jax.Array, jax.Array]:
                     y_all, d_idx * T_loc, T_loc, axis=0)
 
             tok_spec = P(dp, None)
-            y = jax.shard_map(
+            y = compat.shard_map(
                 serve_fn, mesh=mesh,
                 in_specs=(tok_spec, tok_spec, tok_spec,
                           P(fsdp, None, ax.model), P(fsdp, None, ax.model),
@@ -327,7 +183,7 @@ def moe_apply(params, x, cfg, router_key=None) -> Tuple[jax.Array, jax.Array]:
             return jax.lax.psum(y_, ax.model)
 
         tok_spec = P(dp, None)
-        y = jax.shard_map(
+        y = compat.shard_map(
             local_fn, mesh=mesh,
             in_specs=(tok_spec, tok_spec, tok_spec,
                       P(ax.model, fsdp, None), P(ax.model, fsdp, None),

@@ -36,6 +36,7 @@ class QAdam:
     m_spec: RoundingSpec = IDENTITY
     v_spec: RoundingSpec = IDENTITY
     weight_decay: float = 0.0
+    update_path: str = "jnp"   # "jnp" | "fused" | "fused_bits" (optim/base)
 
     def init(self, params, key: Optional[jax.Array] = None) -> QAdamState:
         key = jax.random.PRNGKey(0) if key is None else key
@@ -47,7 +48,6 @@ class QAdam:
               lr: Optional[Any] = None):
         t = self.lr if lr is None else lr
         step = state.step + 1
-        kp = base.leaf_keys(state.key, state.step, params)
         km = base.leaf_keys(jax.random.fold_in(state.key, 0x6D), state.step, params)
         kv = base.leaf_keys(jax.random.fold_in(state.key, 0x76), state.step, params)
 
@@ -62,20 +62,24 @@ class QAdam:
         c1 = 1.0 - self.b1 ** step.astype(jnp.float32)
         c2 = 1.0 - self.b2 ** step.astype(jnp.float32)
 
-        def upd_p(p, m, v, k):
-            direction = (m / c1) / (jnp.sqrt(v / c2) + self.eps)
+        def direction(m, v, p):
+            d = (m / c1) / (jnp.sqrt(v / c2) + self.eps)
             if self.weight_decay:
-                direction = direction + self.weight_decay * p
-            # the Adam direction plays the role of the gradient in eq. (8)
-            return base.rounded_param_update(p, direction, t, self.cfg, k)
+                d = d + self.weight_decay * p
+            return d
 
-        new_params = jax.tree.map(upd_p, params, new_m, new_v, kp)
+        # the Adam direction plays the role of the gradient in eq. (8)
+        directions = jax.tree.map(direction, new_m, new_v, params)
+        new_params = base.tree_rounded_update(
+            params, directions, t, self.cfg, state.key, state.step,
+            update_path=self.update_path)
         return new_params, QAdamState(step=step, m=new_m, v=new_v,
                                       key=state.key)
 
 
 def qadam(lr, b1=0.9, b2=0.999, eps=1e-8, cfg: GDRounding = GDRounding(),
           m_spec: RoundingSpec = IDENTITY, v_spec: RoundingSpec = IDENTITY,
-          weight_decay=0.0) -> QAdam:
+          weight_decay=0.0, update_path: str = "jnp") -> QAdam:
     return QAdam(lr=lr, b1=b1, b2=b2, eps=eps, cfg=cfg, m_spec=m_spec,
-                 v_spec=v_spec, weight_decay=weight_decay)
+                 v_spec=v_spec, weight_decay=weight_decay,
+                 update_path=update_path)

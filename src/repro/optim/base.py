@@ -5,6 +5,16 @@ key folded from (base_key, step, leaf_index) so that (a) rounding noise is
 i.i.d. across parameters and steps, as the paper's analysis assumes, and
 (b) the whole optimizer step is a deterministic function of the checkpointed
 (key, step) — checkpoint/restart is bit-exact.
+
+Three parameter-update paths, selected by the optimizer's ``update_path``:
+
+* ``"jnp"``       — per-leaf pure-jnp chain (shards trivially under pjit;
+                    the historical default and the cross-path reference);
+* ``"fused"``     — ONE Pallas kernel over the flattened tree with
+                    in-kernel randomness (12 B/elt; the TPU hot path);
+* ``"fused_bits"``— same single kernel fed explicit random-bits operands
+                    (24 B/elt; bit-exact vs the jnp oracle on the
+                    concatenated vector — the audit mode).
 """
 from __future__ import annotations
 
@@ -15,6 +25,8 @@ import jax.numpy as jnp
 
 from repro.core.gd import GDRounding, _resolve_v
 from repro.core.rounding import RoundingSpec
+
+UPDATE_PATHS = ("jnp", "fused", "fused_bits")
 
 
 def leaf_keys(base_key, step, tree):
@@ -46,3 +58,30 @@ def round_state(spec: RoundingSpec, x, key):
     if spec.is_identity:
         return x
     return spec(x, key=key)
+
+
+def tree_rounded_update(params, grads, t, cfg: GDRounding, key, step,
+                        *, update_path: str = "jnp",
+                        interpret: Optional[bool] = None):
+    """Eq.-8 rounded update over a whole parameter pytree.
+
+    Dispatches between the per-leaf jnp path and the whole-tree fused
+    kernel (one ``pallas_call`` regardless of leaf count; see
+    kernels/tree_update.py).
+    """
+    if update_path == "jnp":
+        keys = leaf_keys(key, step, params)
+        return jax.tree.map(
+            lambda p, g, k: rounded_param_update(p, g, t, cfg, k),
+            params, grads, keys)
+    # lazy import: keeps Pallas out of the optimizer's import graph unless
+    # a kernel path is actually selected
+    from repro.kernels.tree_update import fused_tree_update
+    if update_path == "fused":
+        return fused_tree_update(params, grads, t, cfg, key, step,
+                                 mode="prng", interpret=interpret)
+    if update_path == "fused_bits":
+        return fused_tree_update(params, grads, t, cfg, key, step,
+                                 mode="bits", interpret=interpret)
+    raise ValueError(f"unknown update_path {update_path!r}; "
+                     f"known: {UPDATE_PATHS}")

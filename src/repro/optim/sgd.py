@@ -28,7 +28,13 @@ class QSGDState(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class QSGD:
-    """Functional quantized SGD. Use ``init``/``apply``."""
+    """Functional quantized SGD. Use ``init``/``apply``.
+
+    ``update_path`` selects the parameter-update engine: "jnp" (per-leaf
+    pure-jnp chain), "fused" (whole-tree Pallas kernel, in-kernel PRNG —
+    one ``pallas_call`` per step for the entire model), or "fused_bits"
+    (whole-tree kernel, explicit-bits oracle mode).  See optim/base.py.
+    """
 
     lr: float
     momentum: float = 0.0
@@ -36,6 +42,7 @@ class QSGD:
     cfg: GDRounding = GDRounding()
     momentum_spec: RoundingSpec = IDENTITY
     param_spec: RoundingSpec = IDENTITY   # storage grid of the params
+    update_path: str = "jnp"
 
     def init(self, params, key: Optional[jax.Array] = None) -> QSGDState:
         key = jax.random.PRNGKey(0) if key is None else key
@@ -56,7 +63,6 @@ class QSGD:
     def apply(self, params, grads, state: QSGDState, lr: Optional[Any] = None):
         """One optimizer step; returns (new_params, new_state)."""
         t = self.lr if lr is None else lr
-        keys = base.leaf_keys(state.key, state.step, params)
 
         if self.momentum:
             mkeys = base.leaf_keys(jax.random.fold_in(state.key, 0x6D6F6D),
@@ -76,15 +82,17 @@ class QSGD:
             new_mom = ()
             eff_grads = grads
 
-        new_params = jax.tree.map(
-            lambda p, g, k: base.rounded_param_update(p, g, t, self.cfg, k),
-            params, eff_grads, keys)
+        new_params = base.tree_rounded_update(
+            params, eff_grads, t, self.cfg, state.key, state.step,
+            update_path=self.update_path)
         return new_params, QSGDState(step=state.step + 1, momentum=new_mom,
                                      key=state.key)
 
 
 def qsgd(lr, momentum=0.0, cfg: GDRounding = GDRounding(),
          momentum_spec: RoundingSpec = IDENTITY,
-         param_spec: RoundingSpec = IDENTITY, nesterov=False) -> QSGD:
+         param_spec: RoundingSpec = IDENTITY, nesterov=False,
+         update_path: str = "jnp") -> QSGD:
     return QSGD(lr=lr, momentum=momentum, nesterov=nesterov, cfg=cfg,
-                momentum_spec=momentum_spec, param_spec=param_spec)
+                momentum_spec=momentum_spec, param_spec=param_spec,
+                update_path=update_path)

@@ -154,6 +154,8 @@ def analyze_compiled(compiled, *, arch: str, shape: str, mesh_desc: str,
                      n_chips: int, model_flops: float,
                      hw: Hardware = HW_V5E) -> RooflineReport:
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):   # older jax: list of per-device dicts
+        cost = cost[0] if cost else {}
     mem = compiled.memory_analysis()
     hlo = compiled.as_text()
     coll = collective_bytes_from_hlo(hlo)

@@ -72,19 +72,33 @@ class TrainLoop:
         start = self._try_resume()
         step = start
         restarts = 0
+        # wall-time accounting: feeds the step_ms column in the history and
+        # the perf trajectory in BENCH_kernels.json (benchmarks/run.py)
+        window_t, window_n = 0.0, 0
+        total_t, total_n = 0.0, 0
         while step < cfg.total_steps:
             try:
                 if self.fault_hook is not None:
                     self.fault_hook(step)
                 batch = self.pipeline.next()
+                t0 = time.perf_counter()
                 self.state, metrics = self.step_fn(self.state, batch)
+                jax.block_until_ready(self.state)
+                dt = time.perf_counter() - t0
+                window_t += dt
+                window_n += 1
+                total_t += dt
+                total_n += 1
                 loss = float(metrics.get("loss", np.nan))
                 if not np.isfinite(loss):
                     raise FloatingPointError(f"non-finite loss at {step}")
                 step += 1
                 if step % cfg.log_every == 0 or step == cfg.total_steps:
-                    self.history.append({"step": step, **{
-                        k: float(v) for k, v in metrics.items()}})
+                    self.history.append({
+                        "step": step,
+                        "step_ms": 1e3 * window_t / max(window_n, 1),
+                        **{k: float(v) for k, v in metrics.items()}})
+                    window_t, window_n = 0.0, 0
                     if self.metrics_hook:
                         self.metrics_hook(step, metrics)
                 if step % cfg.checkpoint_every == 0:
@@ -100,4 +114,5 @@ class TrainLoop:
         self._save(step, blocking=True)
         self.ckpt.wait()
         return {"final_step": step, "restarts": restarts,
-                "history": self.history}
+                "history": self.history,
+                "mean_step_ms": 1e3 * total_t / max(total_n, 1)}

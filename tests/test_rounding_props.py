@@ -4,6 +4,9 @@ Lemma 1."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed in image")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import formats, rounding
