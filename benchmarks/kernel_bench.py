@@ -19,9 +19,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import gd, rounding
-from repro.kernels import ops
+from repro.kernels import common as kcommon, ops
 from repro.kernels.tree_update import fused_tree_update
 from repro.optim import base as optim_base
+from repro.precision import policy as qpol
 
 # HBM-traffic model (bytes per element, f32 carrier):
 #   unfused eq.-8 chain: read g, write ĝ, read ĝ, write upd, read x,
@@ -91,6 +92,33 @@ def run(n: int = 1 << 20):
         x_, "binary8", "sr", key=k_))
     us_cast = _time(cast, x, key)
 
+    # -- quantized-GEMM path (eq. 8a): qdot fwd / dgrad / wgrad ------------
+    # Each site is one result-rounded GEMM through qmatmul_prng_p; in PRNG
+    # mode the HBM streams are identical to an fp32 GEMM (read a, read b,
+    # write out), so the memory-bound TPU projection is ratio 1.0 — the
+    # wall-clocks below are CPU interpret-mode software-emulation overhead.
+    m = 512
+    A = jax.random.normal(jax.random.fold_in(key, 2), (m, m),
+                          jnp.float32) * 0.1
+    B = jax.random.normal(jax.random.fold_in(key, 3), (m, m),
+                          jnp.float32) * 0.1
+    G = jnp.ones((m, m), jnp.float32)
+    pol = qpol.get_policy("binary8-paper")
+    ctx = qpol.QuantCtx(pol, kcommon.derive_seed(key, 0))
+    words = qpol.fold_words(ctx.words, 0)
+
+    dot_fp32 = jax.jit(lambda a_, b_: a_ @ b_)
+    q_fwd = jax.jit(lambda a_, b_: qpol.qdot(a_, b_, ctx))
+    q_dgrad = jax.jit(lambda g_, b_: qpol.site_matmul(
+        pol, qpol.SITE_DGRAD, g_, b_.T, words))
+    q_wgrad = jax.jit(lambda a_, g_: qpol.site_matmul(
+        pol, qpol.SITE_WGRAD, a_.T, g_, words))
+
+    us_dot = _time(dot_fp32, A, B)
+    us_qfwd = _time(q_fwd, A, B)
+    us_qdgrad = _time(q_dgrad, G, B)
+    us_qwgrad = _time(q_wgrad, A, G)
+
     melt = n / 1e6
     rows = [
         ("kernel/update_fp32_us_per_Melt", us_fp32 / melt, 1.0),
@@ -114,5 +142,13 @@ def run(n: int = 1 << 20):
          TRAFFIC_FUSED_PRNG / TRAFFIC_FP32),
         # measured CPU speedup of the kernel path over the per-leaf jnp path
         ("kernel/fused_prng_vs_jnp_speedup", 0.0, us_jnp / us_fused_prng),
+        # quantized-GEMM sites (512^3 GEMM, binary8 SR result rounding);
+        # derived = CPU overhead ratio vs the fp32 jnp GEMM of that shape
+        ("kernel/qmatmul_fwd_us", us_qfwd, us_qfwd / us_dot),
+        ("kernel/qmatmul_dgrad_us", us_qdgrad, us_qdgrad / us_dot),
+        ("kernel/qmatmul_wgrad_us", us_qwgrad, us_qwgrad / us_dot),
+        # PRNG-mode rounded GEMM moves the same HBM bytes as an fp32 GEMM
+        # (no bits stream): memory-bound TPU projection of eq.-8a cost
+        ("kernel/qmatmul_prng_traffic_ratio_vs_fp32", 0.0, 1.0),
     ]
     return rows

@@ -9,7 +9,7 @@ sequence; homogeneous runs are executed with scan-over-layers.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Any, Optional, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,6 +99,10 @@ class ModelConfig:
     # all-to-all instead of per-step expert-weight gathers) — set
     # automatically for decode lowering (§Perf iteration 2C)
     moe_serve_layout: bool = False
+    # quantized-GEMM precision policy (paper eq. 8a): name of a
+    # repro.precision preset ("fp32" | "e4m3-sr" | "binary8-paper" | ...)
+    # or a QuantPolicy instance; None keeps every GEMM full-precision
+    gemm_policy: Optional[Any] = None
 
     @property
     def resolved_head_dim(self) -> int:

@@ -60,6 +60,9 @@ def round_block(x, bits, fmt: FPFormat, mode: str, eps: float, v=None):
     mag = jnp.where(frac == 0.0, jnp.abs(x), mag)
     mag = jnp.minimum(mag, jnp.float32(fmt.xmax))
     out = jnp.where(sign_x < 0, -mag, mag)
+    # negative-zero fix-up (matches round_to_format): sign(-0.0) == 0, so
+    # the branch above would emit +0.0 where the oracle preserves -0.0
+    out = jnp.where(jnp.signbit(x) & (x == 0), -jnp.float32(0.0), out)
     return jnp.where(jnp.isfinite(x), out, x)
 
 
@@ -178,15 +181,19 @@ def kernel_bits3(seed_ref, shape, row0, need, *, interpret: bool):
     return out
 
 
-def derive_seed(key, step=None):
-    """(base_key[, step]) -> (2,) uint32 seed words for the kernel PRNG.
+def derive_seed(key, step=None, site=None):
+    """(base_key[, step[, site]]) -> (2,) uint32 seed words for the kernel PRNG.
 
     The per-block seed inside the kernel is (words, block_index); folding
     ``step`` here keeps the whole optimizer step a deterministic function
-    of the checkpointed (key, step) — restart stays bit-exact.
+    of the checkpointed (key, step) — restart stays bit-exact.  ``site`` is
+    a static int distinguishing rounding sites that share a (key, step)
+    pair (e.g. the fwd/dgrad/wgrad GEMMs of one qdot call; repro.precision).
     """
     if step is not None:
         key = jax.random.fold_in(key, step)
+    if site is not None:
+        key = jax.random.fold_in(key, site)
     if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
         key = jax.random.key_data(key)
     return key.reshape(-1)[:2].astype(jnp.uint32)

@@ -7,6 +7,7 @@ the same functions to place actual data.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, Dict, Optional, Tuple
 
@@ -50,11 +51,22 @@ def baseline_optimizer(lr: float = 1e-3):
 
 
 # ------------------------------------------------------------ step makers --
-def make_train_step(model, optimizer, *, grad_dtype=jnp.bfloat16):
+def make_train_step(model, optimizer, *, grad_dtype=jnp.bfloat16,
+                    gemm_policy=None):
     """Mixed-precision train step: the loss is differentiated w.r.t.
     bf16-cast params so gradients (and their cross-device reductions) are
     bf16; the optimizer applies them to the fp32/low-precision master
-    params through the paper's rounded update path."""
+    params through the paper's rounded update path.
+
+    ``gemm_policy`` (preset name or QuantPolicy) overrides the model
+    config's quantized-GEMM policy: every forward/dgrad/wgrad GEMM of the
+    step then runs through the rounded Pallas kernels (repro.precision),
+    seeded per (step, layer, call site) from the checkpointed optimizer
+    key — the end-to-end low-precision training regime of eq. (8a)."""
+    if gemm_policy is not None:
+        model = build_model(dataclasses.replace(model.cfg,
+                                                gemm_policy=gemm_policy))
+
     def train_step(params, opt_state, batch):
         rng = jax.random.fold_in(opt_state.key, opt_state.step)
 

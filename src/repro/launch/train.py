@@ -54,11 +54,15 @@ def rounding_config(kind: str, fmt: str, eps: float) -> gd.GDRounding:
 def run(arch: str, *, reduced: bool, steps: int, batch: int, seq: int,
         lr: float, rounding_kind: str, fmt: str, eps: float,
         ckpt_dir: str, log_every: int = 10, momentum: float = 0.9,
-        update_path: str = "jnp"):
+        update_path: str = "jnp", gemm_policy: str = None):
     cfg = get_config(arch)
     if reduced:
         cfg = reduce_cfg(cfg)
-    cfg = dataclasses.replace(cfg, remat="none" if reduced else cfg.remat)
+    cfg = dataclasses.replace(
+        cfg, remat="none" if reduced else cfg.remat,
+        # CLI overrides the config's policy only when actually given
+        gemm_policy=gemm_policy if gemm_policy is not None
+        else cfg.gemm_policy)
     model = build_model(cfg)
     opt = qsgd(lr=lr, momentum=momentum,
                cfg=rounding_config(rounding_kind, fmt, eps),
@@ -115,10 +119,18 @@ def main():
                     help="parameter-update engine: per-leaf jnp chain, "
                          "whole-tree fused kernel (in-kernel PRNG), or "
                          "whole-tree kernel with explicit bits")
+    from repro.precision import PRESETS
+    ap.add_argument("--gemm-policy", default=None,
+                    choices=sorted(PRESETS),
+                    help="quantized-GEMM precision policy (eq. 8a): round "
+                         "every forward/dgrad/wgrad GEMM result onto the "
+                         "preset's low-precision grid via the Pallas "
+                         "kernels; default: full-precision GEMMs")
     args = ap.parse_args()
     run(args.arch, reduced=args.reduced, steps=args.steps, batch=args.batch,
         seq=args.seq, lr=args.lr, rounding_kind=args.rounding, fmt=args.fmt,
-        eps=args.eps, ckpt_dir=args.ckpt_dir, update_path=args.update_path)
+        eps=args.eps, ckpt_dir=args.ckpt_dir, update_path=args.update_path,
+        gemm_policy=args.gemm_policy)
 
 
 if __name__ == "__main__":

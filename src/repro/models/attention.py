@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import layers as L
+from repro.precision import policy as QP
 
 
 class KVCache(NamedTuple):
@@ -147,16 +148,19 @@ def causal_mask(Sq: int, Skv: int, q_offset=0, window: int = 0):
 def attn_apply(params, x, positions, cfg, *, causal=True,
                cache: Optional[KVCache] = None,
                positions3=None,
-               return_kv: bool = False) -> Tuple[jax.Array, Optional[KVCache]]:
-    """x: (B, S, D). With ``cache`` given, S is the new-token count (decode)."""
+               return_kv: bool = False,
+               quant=None) -> Tuple[jax.Array, Optional[KVCache]]:
+    """x: (B, S, D). With ``cache`` given, S is the new-token count (decode).
+    ``quant``: optional QuantCtx — routes the q/k/v/o projections through
+    the rounded-GEMM path (repro.precision)."""
     B, S, D = x.shape
     hd = cfg.resolved_head_dim
     nh, nkv = cfg.n_heads, cfg.n_kv_heads
     dtype = x.dtype
 
-    q = (x @ params["wq"].astype(dtype)).reshape(B, S, nh, hd)
-    k = (x @ params["wk"].astype(dtype)).reshape(B, S, nkv, hd)
-    v = (x @ params["wv"].astype(dtype)).reshape(B, S, nkv, hd)
+    q = L.qdense(x, params["wq"], quant, QP.TAG_ATTN_Q).reshape(B, S, nh, hd)
+    k = L.qdense(x, params["wk"], quant, QP.TAG_ATTN_K).reshape(B, S, nkv, hd)
+    v = L.qdense(x, params["wv"], quant, QP.TAG_ATTN_V).reshape(B, S, nkv, hd)
     q, k = _rotary(q, k, positions, cfg, positions3)
 
     if cache is not None:
@@ -194,7 +198,8 @@ def attn_apply(params, x, positions, cfg, *, causal=True,
                                 v=v.astype(jnp.bfloat16),
                                 length=jnp.full((), S, jnp.int32))
 
-    y = out.reshape(B, S, nh * hd) @ params["wo"].astype(dtype)
+    y = L.qdense(out.reshape(B, S, nh * hd), params["wo"], quant,
+                 QP.TAG_ATTN_O)
     return y, new_cache
 
 
@@ -202,21 +207,22 @@ def cross_attn_init(key, cfg):
     return attn_init(key, cfg)
 
 
-def cross_attn_apply(params, x, enc_out, cfg):
+def cross_attn_apply(params, x, enc_out, cfg, quant=None):
     """Decoder cross-attention (no cache for enc k/v recompute simplicity)."""
     B, S, D = x.shape
     hd = cfg.resolved_head_dim
     nh, nkv = cfg.n_heads, cfg.n_kv_heads
     dtype = x.dtype
     enc_out = enc_out.astype(dtype)
-    q = (x @ params["wq"].astype(dtype)).reshape(B, S, nh, hd)
-    k = (enc_out @ params["wk"].astype(dtype)).reshape(
+    q = L.qdense(x, params["wq"], quant, QP.TAG_CROSS_Q).reshape(B, S, nh, hd)
+    k = L.qdense(enc_out, params["wk"], quant, QP.TAG_CROSS_K).reshape(
         B, enc_out.shape[1], nkv, hd)
-    v = (enc_out @ params["wv"].astype(dtype)).reshape(
+    v = L.qdense(enc_out, params["wv"], quant, QP.TAG_CROSS_V).reshape(
         B, enc_out.shape[1], nkv, hd)
     mask = jnp.ones((B, S, enc_out.shape[1]), bool)
     out = _sdpa(q, k, v, mask, 1.0 / hd ** 0.5)
-    return out.reshape(B, S, nh * hd) @ params["wo"].astype(dtype)
+    return L.qdense(out.reshape(B, S, nh * hd), params["wo"], quant,
+                    QP.TAG_CROSS_O)
 
 
 def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16,

@@ -1,10 +1,20 @@
-"""Dense FFN blocks: SwiGLU / GeGLU / plain-GELU."""
+"""Dense FFN blocks: SwiGLU / GeGLU / plain-GELU.
+
+All weight GEMMs route through the quantized dense primitive
+(``layers.qdense``); the post-nonlinearity hidden activation is the
+policy's ``act`` rounding site (straight-through gradient).
+``swiglu_apply`` is the single definition of the quantized SwiGLU
+sequence — the MoE routed experts reuse it so their rounding sites and
+tag order can never diverge from the dense FFN's.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import layers as L
+from repro.precision import policy as QP
+from repro.precision.policy import qact
 
 
 def ffn_init(key, d_model: int, d_ff: int, act: str):
@@ -16,15 +26,24 @@ def ffn_init(key, d_model: int, d_ff: int, act: str):
     return params
 
 
-def ffn_apply(params, x, act: str):
-    dtype = x.dtype
-    up = x @ params["w_up"].astype(dtype)
+def swiglu_apply(x, w_gate, w_up, w_down, quant=None):
+    """Quantized SwiGLU: gate/up GEMMs -> act rounding -> down GEMM."""
+    gate = jax.nn.silu(L.qdense(x, w_gate, quant, QP.TAG_FFN_GATE))
+    up = L.qdense(x, w_up, quant, QP.TAG_FFN_UP)
+    h = qact(gate * up, quant, QP.TAG_FFN_ACT)
+    return L.qdense(h, w_down, quant, QP.TAG_FFN_DOWN)
+
+
+def ffn_apply(params, x, act: str, quant=None):
     if act == "swiglu":
-        gate = jax.nn.silu(x @ params["w_gate"].astype(dtype))
-        h = gate * up
-    elif act == "geglu":
-        gate = jax.nn.gelu(x @ params["w_gate"].astype(dtype))
+        return swiglu_apply(x, params["w_gate"], params["w_up"],
+                            params["w_down"], quant)
+    up = L.qdense(x, params["w_up"], quant, QP.TAG_FFN_UP)
+    if act == "geglu":
+        gate = jax.nn.gelu(L.qdense(x, params["w_gate"], quant,
+                                    QP.TAG_FFN_GATE))
         h = gate * up
     else:
         h = L.ACT[act](up)
-    return h @ params["w_down"].astype(dtype)
+    h = qact(h, quant, QP.TAG_FFN_ACT)
+    return L.qdense(h, params["w_down"], quant, QP.TAG_FFN_DOWN)

@@ -1,10 +1,14 @@
 """Primitive layers: norms, embeddings, rotary position embeddings (RoPE and
-multimodal M-RoPE), initializers, activations.
+multimodal M-RoPE), initializers, activations, and the quantized dense
+primitive every weight GEMM in the model stack routes through.
 
 Everything is functional: ``*_init(key, ...) -> params`` and pure apply
 functions.  Compute dtype is bfloat16 with fp32 params (the mixed-precision
-baseline); the paper's low-precision machinery acts on the *optimizer* path
-(see repro/optim), so model math stays in the standard TPU dtypes.
+baseline).  With a ``QuantCtx`` (repro.precision) threaded in, each weight
+matmul becomes the paper's eq. (8a): the GEMM *result* is rounded onto the
+policy's low-precision grid — forward and both backward transpose GEMMs run
+through the Pallas qmatmul kernels.  Without a context (``quant=None``)
+``qdense`` is exactly ``x @ w`` — the fp32/bf16 baseline is untouched.
 """
 from __future__ import annotations
 
@@ -15,6 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.precision.policy import qdot
+
 ACT = {
     "silu": jax.nn.silu,
     "gelu": jax.nn.gelu,
@@ -23,6 +29,12 @@ ACT = {
 }
 
 COMPUTE_DTYPE = jnp.bfloat16
+
+
+def qdense(x, w, quant=None, tag: int = 0):
+    """``x @ w`` in the activation compute dtype through the quantized-GEMM
+    path: the single call site for every weight matmul in models/."""
+    return qdot(x, w.astype(x.dtype), quant, tag)
 
 
 def dense_init(key, d_in: int, d_out: int, scale: Optional[float] = None):

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import layers as L
+from repro.precision import policy as QP
 
 
 class MLACache(NamedTuple):
@@ -41,18 +42,18 @@ def mla_init(key, cfg):
     }
 
 
-def _mla_qkv(params, x, positions, cfg):
+def _mla_qkv(params, x, positions, cfg, quant=None):
     m = cfg.mla
     B, S, _ = x.shape
     nh = cfg.n_heads
-    dtype = x.dtype
-    cq = L.rms_norm(x @ params["wq_a"].astype(dtype), params["q_norm"])
-    q = (cq @ params["wq_b"].astype(dtype)).reshape(
+    cq = L.rms_norm(L.qdense(x, params["wq_a"], quant, QP.TAG_MLA_QA),
+                    params["q_norm"])
+    q = L.qdense(cq, params["wq_b"], quant, QP.TAG_MLA_QB).reshape(
         B, S, nh, m.qk_nope_dim + m.qk_rope_dim)
     q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
     q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
 
-    kv_a = x @ params["wkv_a"].astype(dtype)
+    kv_a = L.qdense(x, params["wkv_a"], quant, QP.TAG_MLA_KVA)
     c_kv, k_rope = jnp.split(kv_a, [m.kv_lora_rank], axis=-1)
     c_kv = L.rms_norm(c_kv, params["kv_norm"])
     k_rope = L.apply_rope(k_rope[:, :, None, :], positions,
@@ -60,12 +61,12 @@ def _mla_qkv(params, x, positions, cfg):
     return q_nope, q_rope, c_kv, k_rope
 
 
-def _mla_attend(params, q_nope, q_rope, c_kv, k_rope, mask, cfg):
+def _mla_attend(params, q_nope, q_rope, c_kv, k_rope, mask, cfg, quant=None):
     m = cfg.mla
     nh = cfg.n_heads
     dtype = q_nope.dtype
     B, Skv = c_kv.shape[:2]
-    kv = (c_kv @ params["wkv_b"].astype(dtype)).reshape(
+    kv = L.qdense(c_kv, params["wkv_b"], quant, QP.TAG_MLA_KVB).reshape(
         B, Skv, nh, m.qk_nope_dim + m.v_head_dim)
     k_nope, v = jnp.split(kv, [m.qk_nope_dim], axis=-1)
     scale = 1.0 / (m.qk_nope_dim + m.qk_rope_dim) ** 0.5
@@ -76,7 +77,8 @@ def _mla_attend(params, q_nope, q_rope, c_kv, k_rope, mask, cfg):
     logits = jnp.where(mask[:, None, :, :], logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhqs,bshd->bqhd", probs.astype(dtype), v)
-    return out.reshape(B, -1, nh * m.v_head_dim) @ params["wo"].astype(dtype)
+    return L.qdense(out.reshape(B, -1, nh * m.v_head_dim), params["wo"],
+                    quant, QP.TAG_MLA_O)
 
 
 def _mla_attend_absorbed(params, q_nope, q_rope, c_kv, k_rope, mask, cfg):
@@ -118,10 +120,10 @@ def _mla_attend_absorbed(params, q_nope, q_rope, c_kv, k_rope, mask, cfg):
 
 def mla_apply(params, x, positions, cfg, *, causal=True,
               cache: Optional[MLACache] = None,
-              return_kv: bool = False
-              ) -> Tuple[jax.Array, Optional[MLACache]]:
+              return_kv: bool = False,
+              quant=None) -> Tuple[jax.Array, Optional[MLACache]]:
     B, S, _ = x.shape
-    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, x, positions, cfg)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, x, positions, cfg, quant)
 
     if cache is not None:
         start = cache.length
@@ -132,9 +134,15 @@ def mla_apply(params, x, positions, cfg, *, causal=True,
         Skv = c_all.shape[1]
         valid = jnp.arange(Skv)[None, :] < (start + S)
         mask = jnp.broadcast_to(valid[:, None, :], (B, S, Skv))
-        attend = (_mla_attend_absorbed if cfg.mla.absorb else _mla_attend)
-        y = attend(params, q_nope, q_rope, c_all.astype(x.dtype),
-                   r_all.astype(x.dtype), mask, cfg)
+        if cfg.mla.absorb:
+            # absorbed decode works on pre-folded weights in the compressed
+            # space — no standalone weight GEMM to round (policy open item)
+            y = _mla_attend_absorbed(params, q_nope, q_rope,
+                                     c_all.astype(x.dtype),
+                                     r_all.astype(x.dtype), mask, cfg)
+        else:
+            y = _mla_attend(params, q_nope, q_rope, c_all.astype(x.dtype),
+                            r_all.astype(x.dtype), mask, cfg, quant)
         return y, MLACache(c_kv=c_all, k_rope=r_all, length=start + S)
 
     m_cfg = cfg.mla
@@ -143,7 +151,7 @@ def mla_apply(params, x, positions, cfg, *, causal=True,
         # then run the generic blocked flash attention (MHA: KV == H)
         dtype = x.dtype
         nh = cfg.n_heads
-        kv = (c_kv @ params["wkv_b"].astype(dtype)).reshape(
+        kv = L.qdense(c_kv, params["wkv_b"], quant, QP.TAG_MLA_KVB).reshape(
             B, S, nh, m_cfg.qk_nope_dim + m_cfg.v_head_dim)
         k_nope, v = jnp.split(kv, [m_cfg.qk_nope_dim], axis=-1)
         k_full = jnp.concatenate(
@@ -154,12 +162,14 @@ def mla_apply(params, x, positions, cfg, *, causal=True,
         from repro.models.attention import flash_attention
         o = flash_attention(q_full, k_full, v, scale, causal=True,
                             window=cfg.sliding_window)
-        y = o.reshape(B, S, nh * m_cfg.v_head_dim) @ params["wo"].astype(dtype)
+        y = L.qdense(o.reshape(B, S, nh * m_cfg.v_head_dim), params["wo"],
+                     quant, QP.TAG_MLA_O)
     else:
         from repro.models.attention import causal_mask
         m = causal_mask(S, S) if causal else jnp.ones((S, S), bool)
         mask = jnp.broadcast_to(m[None], (B, S, S))
-        y = _mla_attend(params, q_nope, q_rope, c_kv, k_rope, mask, cfg)
+        y = _mla_attend(params, q_nope, q_rope, c_kv, k_rope, mask, cfg,
+                        quant)
     new_cache = None
     if return_kv:   # prefill: emit the compressed cache
         new_cache = MLACache(c_kv=c_kv.astype(jnp.bfloat16),

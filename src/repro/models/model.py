@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.dist.sharding import shard_act
 from repro.models import attention, layers as L, mla, rwkv, ssm, transformer
+from repro.precision.policy import TAG_LOGITS, ctx_for, fold_ctx
 
 LOSS_CHUNK = 1024
 
@@ -103,10 +104,14 @@ class Model:
         x = L.rms_norm(x, params["final_norm"])
         return x, aux, offset
 
-    def _logits(self, params, h):
-        w = (params["embed"].T if self.cfg.tie_embeddings
-             else params["lm_head"]).astype(h.dtype)
-        return shard_act(h @ w, "logits")
+    def _logits(self, params, h, quant=None):
+        w = params["embed"].T if self.cfg.tie_embeddings else params["lm_head"]
+        return shard_act(L.qdense(h, w, quant, TAG_LOGITS), "logits")
+
+    def _logits_ctx(self, rng):
+        """Quant context for the lm-head GEMM (None without a policy)."""
+        return ctx_for(self.cfg,
+                       rng if rng is not None else jax.random.PRNGKey(0))
 
     # --------------------------------------------------------------- loss --
     def loss_fn(self, params, batch, rng=None) -> Tuple[jax.Array, Dict]:
@@ -118,9 +123,11 @@ class Model:
         B, S, _ = h.shape
         n_chunks = max(1, -(-S // LOSS_CHUNK))
         total, count = jnp.float32(0.0), 0
+        lq = self._logits_ctx(rng)
         for i in range(n_chunks):
             sl = slice(i * LOSS_CHUNK, min((i + 1) * LOSS_CHUNK, S))
-            logits = self._logits(params, h[:, sl, :]).astype(jnp.float32)
+            logits = self._logits(params, h[:, sl, :],
+                                  quant=fold_ctx(lq, i)).astype(jnp.float32)
             lab = labels[:, sl]
             logz = jax.nn.logsumexp(logits, axis=-1)
             gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
@@ -147,7 +154,8 @@ class Model:
             positions3=positions3, rng=rng, enc_out=enc_out,
             collect_cache=True)
         x = L.rms_norm(x, params["final_norm"])
-        next_logits = self._logits(params, x[:, -1:, :])
+        next_logits = self._logits(params, x[:, -1:, :],
+                                   quant=self._logits_ctx(rng))
         return next_logits, caches
 
     # ------------------------------------------------------------- decode --
@@ -184,9 +192,20 @@ class Model:
         return {t: bump(t, c) for t, c in caches.items()}
 
     def decode_step(self, params, caches, tokens, pos, enc_out=None,
-                    rng=None):
-        """One-token decode.  tokens: (B, 1); pos: scalar position index."""
+                    rng=None, compute_logits: bool = True):
+        """One-token decode.  tokens: (B, 1); pos: scalar position index.
+        ``compute_logits=False`` skips the lm-head projection (prompt
+        absorption only needs the caches)."""
         cfg = self.cfg
+        if rng is None:
+            rng = jax.random.PRNGKey(0)
+            if cfg.gemm_policy is not None:
+                # fold the position in so stochastic-rounding streams
+                # decorrelate across decode steps instead of replaying the
+                # same per-coordinate bits; gated on the policy so baseline
+                # decode (incl. MoE router noise) stays bit-identical to
+                # the pre-policy model
+                rng = jax.random.fold_in(rng, jnp.asarray(pos, jnp.int32))
         x = params["embed"][tokens].astype(L.COMPUTE_DTYPE)
         B = tokens.shape[0]
         positions = jnp.broadcast_to(
@@ -198,7 +217,9 @@ class Model:
             params["blocks"], x, positions, cfg, self.decoder_plan(),
             caches=caches, positions3=positions3, rng=rng, enc_out=enc_out)
         x = L.rms_norm(x, params["final_norm"])
-        logits = self._logits(params, x)
+        if not compute_logits:
+            return None, new_caches
+        logits = self._logits(params, x, quant=self._logits_ctx(rng))
         return logits, new_caches
 
     # ------------------------------------------------------- param counts --

@@ -30,7 +30,8 @@ import jax.numpy as jnp
 from repro.dist import compat
 from repro.dist.sharding import _axes, shard_act
 from repro.models import layers as L
-from repro.models.ffn import ffn_apply, ffn_init
+from repro.models.ffn import ffn_apply, ffn_init, swiglu_apply
+from repro.precision import policy as QP
 
 
 def moe_init(key, cfg):
@@ -52,8 +53,26 @@ def moe_init(key, cfg):
     return params
 
 
-def _expert_compute(buf, w_gate, w_up, w_down, dtype):
-    """Batched SwiGLU over stacked experts: (E, C, D) -> (E, C, D)."""
+def _expert_compute(buf, w_gate, w_up, w_down, dtype, quant=None):
+    """Batched SwiGLU over stacked experts: (E, C, D) -> (E, C, D).
+
+    With a quant context the three GEMMs of every expert run through the
+    rounded-GEMM path and the post-SwiGLU hidden goes through the act
+    rounding site, mirroring ffn_apply.  Experts run under a lax.scan
+    (graph size O(1) in E; the expert index is folded into the seed words
+    inside the body — Threefry folds accept traced tags); dense path only."""
+    if quant is not None and not quant.policy.is_identity:
+        def expert_body(carry, inp):
+            e, b_e, wg_e, wu_e, wd_e = inp
+            qe = QP.fold_ctx(quant, QP.TAG_MOE_EXPERT0 + e)
+            return carry, swiglu_apply(b_e, wg_e, wu_e, wd_e, qe)
+
+        E = buf.shape[0]
+        _, out = jax.lax.scan(
+            expert_body, 0,
+            (jnp.arange(E), buf, w_gate.astype(dtype), w_up.astype(dtype),
+             w_down.astype(dtype)))
+        return out
     gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w_gate.astype(dtype)))
     up = jnp.einsum("ecd,edf->ecf", buf, w_up.astype(dtype))
     return jnp.einsum("ecf,efd->ecd", gate * up, w_down.astype(dtype))
@@ -62,7 +81,7 @@ def _expert_compute(buf, w_gate, w_up, w_down, dtype):
 def _dispatch_compute_combine(xt, topw, topi, w_gate, w_up, w_down,
                               n_experts, top_k, capacity_factor, dtype,
                               e_offset=0, capacity_experts=None,
-                              reduce_fn=None):
+                              reduce_fn=None, quant=None):
     """Capacity-scatter → expert FFN → weighted combine on local arrays.
 
     ``e_offset``/``n_experts`` select the expert window this caller owns
@@ -87,7 +106,8 @@ def _dispatch_compute_combine(xt, topw, topi, w_gate, w_up, w_down,
     buf = buf.at[e_flat, p_flat].add(
         jnp.where(keep[:, None], x_rep, 0).astype(dtype))
 
-    out = _expert_compute(buf, w_gate, w_up, w_down, dtype)     # (E, C, D)
+    out = _expert_compute(buf, w_gate, w_up, w_down, dtype,
+                          quant=quant)                          # (E, C, D)
     if reduce_fn is not None:       # TP-within-expert partial-sum combine
         out = reduce_fn(out)
 
@@ -97,15 +117,20 @@ def _dispatch_compute_combine(xt, topw, topi, w_gate, w_up, w_down,
         T, top_k, D).sum(1).astype(dtype)
 
 
-def moe_apply(params, x, cfg, router_key=None) -> Tuple[jax.Array, jax.Array]:
-    """x: (B, S, D) -> (y, aux_loss)."""
+def moe_apply(params, x, cfg, router_key=None,
+              quant=None) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (y, aux_loss).  ``quant`` routes the router GEMM,
+    the shared expert, and the dense-path routed experts through the
+    rounded-GEMM path; the shard_map EP/serving layouts keep full-precision
+    expert GEMMs for now (ROADMAP open item)."""
     m = cfg.moe
     B, S, D = x.shape
     dtype = x.dtype
     T = B * S
     xt = x.reshape(T, D)
 
-    logits = (xt @ params["router"].astype(dtype)).astype(jnp.float32)
+    logits = L.qdense(xt, params["router"], quant,
+                      QP.TAG_ROUTER).astype(jnp.float32)
     if m.router_noise and router_key is not None:
         logits = logits + m.router_noise * jax.random.normal(
             router_key, logits.shape)
@@ -195,10 +220,11 @@ def moe_apply(params, x, cfg, router_key=None) -> Tuple[jax.Array, jax.Array]:
                         E % ax.mesh.shape[ax.model] != 0):
         y = _dispatch_compute_combine(
             xt, topw, topi, params["w_gate"], params["w_up"],
-            params["w_down"], E, m.top_k, m.capacity_factor, dtype)
+            params["w_down"], E, m.top_k, m.capacity_factor, dtype,
+            quant=quant)
 
     if m.n_shared:
-        y = y + ffn_apply(params["shared"], xt, cfg.ffn_act)
+        y = y + ffn_apply(params["shared"], xt, cfg.ffn_act, quant=quant)
 
     # Switch-style load-balance loss
     frac_tokens = jnp.mean(

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.dist.sharding import shard_act
 from repro.models import attention, ffn, layers as L, mla, moe, rwkv, ssm
+from repro.precision.policy import ctx_for
 
 
 # ---------------------------------------------------------------- segments --
@@ -115,37 +116,44 @@ def init_blocks(key, cfg, plan) -> Dict[str, Any]:
 # ------------------------------------------------------------ block apply --
 def _apply_attn_block(p, x, positions, cfg, cache, positions3, rkey,
                       causal=True, collect=False):
-    """Returns (x, aux_loss, new_cache)."""
+    """Returns (x, aux_loss, new_cache).  The block's quantized-GEMM
+    context (cfg.gemm_policy + seed words from the per-layer key) is
+    derived here and threaded into every weight GEMM below."""
+    qc = ctx_for(cfg, rkey)
     h = L.rms_norm(x, p["norm1"])
     if cfg.mla is not None:
         a, new_cache = mla.mla_apply(p["mla"], h, positions, cfg,
                                      causal=causal, cache=cache,
-                                     return_kv=collect)
+                                     return_kv=collect, quant=qc)
     else:
         a, new_cache = attention.attn_apply(
             p["attn"], h, positions, cfg, causal=causal, cache=cache,
-            positions3=positions3, return_kv=collect)
+            positions3=positions3, return_kv=collect, quant=qc)
     x = x + a
     h2 = L.rms_norm(x, p["norm2"])
     if "moe" in p:
-        y, aux = moe.moe_apply(p["moe"], h2, cfg, router_key=rkey)
+        y, aux = moe.moe_apply(p["moe"], h2, cfg, router_key=rkey, quant=qc)
     else:
-        y, aux = ffn.ffn_apply(p["mlp"], h2, cfg.ffn_act), jnp.float32(0.0)
+        y, aux = ffn.ffn_apply(p["mlp"], h2, cfg.ffn_act,
+                               quant=qc), jnp.float32(0.0)
     x = shard_act(x + y, "hidden")
     return x, aux, new_cache
 
 
-def _apply_dec_attn_block(p, x, positions, cfg, cache, enc_out,
+def _apply_dec_attn_block(p, x, positions, cfg, cache, enc_out, key,
                           collect=False):
+    qc = ctx_for(cfg, key)
     h = L.rms_norm(x, p["norm1"])
     a, new_cache = attention.attn_apply(p["attn"], h, positions, cfg,
                                         causal=True, cache=cache,
-                                        return_kv=collect)
+                                        return_kv=collect, quant=qc)
     x = x + a
     hx = L.rms_norm(x, p["norm_x"])
-    x = x + attention.cross_attn_apply(p["cross_attn"], hx, enc_out, cfg)
+    x = x + attention.cross_attn_apply(p["cross_attn"], hx, enc_out, cfg,
+                                       quant=qc)
     h2 = L.rms_norm(x, p["norm2"])
-    x = shard_act(x + ffn.ffn_apply(p["mlp"], h2, cfg.ffn_act), "hidden")
+    x = shard_act(x + ffn.ffn_apply(p["mlp"], h2, cfg.ffn_act, quant=qc),
+                  "hidden")
     return x, jnp.float32(0.0), new_cache
 
 
@@ -230,7 +238,8 @@ def apply_blocks(blocks, x, positions, cfg, plan, *, caches=None,
                                                collect_cache)
             elif t == "dec_attn":
                 x_, a_, nc = _apply_dec_attn_block(p_, x_, positions, cfg,
-                                                   c_, enc_out, collect_cache)
+                                                   c_, enc_out, k_,
+                                                   collect_cache)
             elif t == "mamba":
                 x_, a_, nc = _apply_mamba_block(p_, x_, cfg, c_,
                                                 collect_cache)

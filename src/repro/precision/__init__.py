@@ -1,0 +1,11 @@
+"""Precision policies for quantized-GEMM model execution (paper eq. 8a)."""
+from repro.precision.policy import (PRESETS, QuantCtx, QuantPolicy, ctx_for,
+                                    fold_ctx, fold_words, get_policy,
+                                    make_ctx, make_policy, qact, qdot,
+                                    resolve_policy)
+
+__all__ = [
+    "PRESETS", "QuantCtx", "QuantPolicy", "ctx_for", "fold_ctx",
+    "fold_words", "get_policy", "make_ctx", "make_policy", "qact", "qdot",
+    "resolve_policy",
+]

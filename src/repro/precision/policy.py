@@ -1,0 +1,292 @@
+"""Precision-policy subsystem: per-site GEMM rounding for the model stack.
+
+The paper's eq. (8a) is about GEMM *results* stored in low precision.  This
+module turns the PR-1 kernels (`kernels/qmatmul.py`) into a *differentiable*
+model-wide capability:
+
+* ``QuantPolicy`` — one ``RoundingSpec`` per GEMM **site**: the forward
+  matmul (``fwd``), the activation-gradient transpose GEMM (``dgrad``), the
+  weight-gradient transpose GEMM (``wgrad``), and elementwise activation
+  storage (``act``).  Named presets (``fp32``, ``e4m3-sr``,
+  ``binary8-paper``) cover the regimes studied in the paper and in the
+  few-random-bits SR literature (PAPERS.md).
+* ``qdot(a, b, quant, tag)`` — a ``jax.custom_vjp`` matmul whose forward
+  runs ``qmatmul_prng_p`` (in-kernel randomness, no bits operand in HBM)
+  and whose backward runs the two transpose GEMMs through the *same*
+  kernel, each site with its own ``RoundingSpec`` and its own PRNG stream.
+  Under ``policy.oracle=True`` all three sites instead run the
+  explicit-bits kernel ``qmatmul_p`` fed counter-derived bits, which is
+  bit-exact against a pure-jnp reference VJP (tests/test_qdot.py).
+* ``qact(x, quant, tag)`` — straight-through-estimator rounding of an
+  activation tensor onto the ``act`` grid via the ``sr_cast`` kernels.
+
+Seed discipline (restart-determinism): the trainer's per-step rng key is
+reduced to two uint32 words (``kernels.common.derive_seed(key, step,
+site)``); every call site folds a *static* tag, and every site inside a
+call folds its site id — all folds are one Threefry-2x32 evaluation, so
+each (step, block, call-site, site) quadruple owns an independent stream
+and the whole training step stays a deterministic function of the
+checkpointed ``(key, step)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rounding import IDENTITY, RoundingSpec, spec
+from repro.kernels import common
+from repro.kernels.qmatmul import qmatmul_p, qmatmul_prng_p
+from repro.kernels.sr_cast import sr_cast_p, sr_cast_prng_p
+
+# GEMM/activation sites (folded into the per-call seed words).
+SITE_FWD, SITE_DGRAD, SITE_WGRAD, SITE_ACT = 0, 1, 2, 3
+
+# Static per-call-site tags: every qdot/qact call inside one block must use
+# a distinct tag so its PRNG stream is independent of its siblings'.  Blocks
+# themselves get distinct base words (per-layer keys), so tags only need to
+# be unique *within* a block.
+TAG_ATTN_Q, TAG_ATTN_K, TAG_ATTN_V, TAG_ATTN_O = 0, 1, 2, 3
+TAG_FFN_UP, TAG_FFN_GATE, TAG_FFN_DOWN, TAG_FFN_ACT = 4, 5, 6, 7
+TAG_ROUTER = 8
+TAG_CROSS_Q, TAG_CROSS_K, TAG_CROSS_V, TAG_CROSS_O = 9, 10, 11, 12
+TAG_MLA_QA, TAG_MLA_QB, TAG_MLA_KVA, TAG_MLA_KVB, TAG_MLA_O = 13, 14, 15, 16, 17
+TAG_LOGITS = 18
+TAG_MOE_EXPERT0 = 32          # expert e uses TAG_MOE_EXPERT0 + e
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """Per-site rounding policy for the quantized-GEMM model stack.
+
+    ``oracle=True`` switches every site from the in-kernel-PRNG GEMM to the
+    explicit-bits kernel fed counter-derived bits — the bit-exact audit
+    mode (kernel == pure-jnp reference given the same words).
+    ``bm/bn/bk`` are the Pallas block sizes (clamped to the problem).
+    """
+
+    fwd: RoundingSpec = IDENTITY
+    dgrad: RoundingSpec = IDENTITY
+    wgrad: RoundingSpec = IDENTITY
+    act: RoundingSpec = IDENTITY
+    oracle: bool = False
+    bm: int = 256
+    bn: int = 256
+    bk: int = 256
+
+    @property
+    def gemm_identity(self) -> bool:
+        return (self.fwd.is_identity and self.dgrad.is_identity
+                and self.wgrad.is_identity)
+
+    @property
+    def is_identity(self) -> bool:
+        return self.gemm_identity and self.act.is_identity
+
+
+_SITE_ATTR = {SITE_FWD: "fwd", SITE_DGRAD: "dgrad", SITE_WGRAD: "wgrad",
+              SITE_ACT: "act"}
+
+def _check_gemm_spec(s: RoundingSpec, site: str) -> RoundingSpec:
+    # signed_sr_eps needs a bias-direction operand the GEMM kernels don't
+    # have; reject it here rather than at trace time deep inside the model.
+    if s.mode == "signed_sr_eps" and not s.is_identity:
+        raise ValueError(
+            f"signed_sr_eps is not supported for site {site!r} "
+            "(result/STE rounding has no bias-direction operand); use "
+            "'sr' / 'sr_eps' or a deterministic mode")
+    return s
+
+
+def make_policy(fwd=None, dgrad=None, wgrad=None, act=None, *,
+                fmt=None, mode: str = "sr", eps: float = 0.0,
+                oracle: bool = False) -> QuantPolicy:
+    """Build a QuantPolicy; ``fmt`` fills every unspecified GEMM site.
+
+    ``signed_sr_eps`` is rejected for every site: the GEMM kernels have no
+    bias-direction operand, and ``qact``'s straight-through rounding never
+    supplies one either."""
+    default = spec(fmt, mode, eps) if fmt is not None else IDENTITY
+    pol = QuantPolicy(
+        fwd=_check_gemm_spec(fwd if fwd is not None else default, "fwd"),
+        dgrad=_check_gemm_spec(dgrad if dgrad is not None else default,
+                               "dgrad"),
+        wgrad=_check_gemm_spec(wgrad if wgrad is not None else default,
+                               "wgrad"),
+        act=_check_gemm_spec(act if act is not None else IDENTITY, "act"),
+        oracle=oracle)
+    return pol
+
+
+# Named presets.  ``binary8-paper`` is the paper's §5 regime: every GEMM
+# result and every stored activation lands on the binary8 (E5M2) grid via
+# SR; ``e4m3-sr`` is the OCP-FP8 production regime (activations kept high
+# precision); ``bf16-rn`` is the deterministic mixed-precision control.
+PRESETS = {
+    "fp32": QuantPolicy(),
+    "bf16-rn": make_policy(fmt="bfloat16", mode="rn"),
+    "e4m3-sr": make_policy(fmt="e4m3", mode="sr"),
+    "binary8-paper": make_policy(fmt="binary8", mode="sr",
+                                 act=spec("binary8", "sr")),
+    "e4m3-sr-oracle": make_policy(fmt="e4m3", mode="sr", oracle=True),
+}
+
+
+def get_policy(name: str) -> QuantPolicy:
+    try:
+        return PRESETS[name]
+    except KeyError as exc:
+        raise ValueError(f"unknown gemm policy {name!r}; "
+                         f"known: {sorted(PRESETS)}") from exc
+
+
+def resolve_policy(p: Any) -> Optional[QuantPolicy]:
+    """None | preset name | QuantPolicy -> Optional[QuantPolicy]."""
+    if p is None:
+        return None
+    if isinstance(p, QuantPolicy):
+        return p
+    return get_policy(p)
+
+
+# ---------------------------------------------------------------------------
+# Seed plumbing.
+# ---------------------------------------------------------------------------
+_FOLD_CONST = 0x243F6A88      # pi fractional bits; fixed second counter word
+_CTX_SALT = 0x71D07          # "qdot" context salt folded into the base key
+
+
+def fold_words(words, tag: int):
+    """Fold a static tag into (2,) uint32 seed words (one Threefry eval)."""
+    w0, w1 = common.threefry2x32(words[0], words[1], jnp.uint32(tag),
+                                 jnp.uint32(_FOLD_CONST))
+    return jnp.stack([w0, w1])
+
+
+class QuantCtx(NamedTuple):
+    """A policy plus this call site's (2,) uint32 seed words."""
+    policy: QuantPolicy
+    words: jax.Array
+
+
+def make_ctx(policy, key, step=None) -> Optional[QuantCtx]:
+    """(policy-or-name, rng key[, step]) -> QuantCtx (None if identity).
+
+    The context's base words come from ``derive_seed(key, step, site)``
+    with the qdot context salt as the site; per-call-site tags and the
+    fwd/dgrad/wgrad/act ids are then folded *in-graph* via ``fold_words``
+    (the words are traced by that point, so jax.random.fold_in no longer
+    applies)."""
+    pol = resolve_policy(policy)
+    if pol is None or pol.is_identity:
+        return None
+    return QuantCtx(pol, common.derive_seed(key, step, _CTX_SALT))
+
+
+def ctx_for(cfg, key) -> Optional[QuantCtx]:
+    """Context from a ModelConfig's ``gemm_policy`` and a block rng key."""
+    return make_ctx(getattr(cfg, "gemm_policy", None), key)
+
+
+def fold_ctx(ctx: Optional[QuantCtx], tag: int) -> Optional[QuantCtx]:
+    if ctx is None:
+        return None
+    return QuantCtx(ctx.policy, fold_words(ctx.words, tag))
+
+
+# ---------------------------------------------------------------------------
+# The differentiable rounded matmul.
+# ---------------------------------------------------------------------------
+def site_matmul(policy: QuantPolicy, site: int, a, b, words):
+    """One rounded 2-D GEMM at ``site`` (f32 in, f32 out) — the unit the
+    qdot forward/backward composes; public for benchmarks and audits."""
+    s: RoundingSpec = getattr(policy, _SITE_ATTR[site])
+    if s.is_identity:
+        return jnp.dot(a, b, preferred_element_type=jnp.float32)
+    w = fold_words(words, site)
+    if policy.oracle:
+        bits = common.counter_bits(w[0], w[1], (a.shape[0], b.shape[1]))
+        return qmatmul_p(a, b, bits, s.fmt, s.mode, s.eps,
+                         bm=policy.bm, bn=policy.bn, bk=policy.bk)
+    return qmatmul_prng_p(a, b, w, s.fmt, s.mode, s.eps,
+                          bm=policy.bm, bn=policy.bn, bk=policy.bk)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _qdot2(policy: QuantPolicy, a, b, words):
+    return site_matmul(policy, SITE_FWD, a, b, words)
+
+
+def _qdot2_fwd(policy, a, b, words):
+    return _qdot2(policy, a, b, words), (a, b, words)
+
+
+def _qdot2_bwd(policy, res, g):
+    a, b, words = res
+    g = g.astype(jnp.float32)
+    da = site_matmul(policy, SITE_DGRAD, g, b.T, words)
+    db = site_matmul(policy, SITE_WGRAD, a.T, g, words)
+    return da, db, np.zeros(words.shape, jax.dtypes.float0)
+
+
+_qdot2.defvjp(_qdot2_fwd, _qdot2_bwd)
+
+
+def qdot(a, b, quant: Optional[QuantCtx], tag: int = 0):
+    """Policy-rounded differentiable ``a @ b``.
+
+    a: (..., K); b: (K, N).  With ``quant=None`` (or an all-identity GEMM
+    policy) this is exactly ``a @ b`` — zero overhead, bit-identical to the
+    unquantized model.  Otherwise the forward and both backward GEMMs run
+    through the Pallas result-rounding kernels; the output is cast back to
+    the input dtype (every supported ≤8-bit grid embeds exactly in bf16).
+    """
+    if quant is None or quant.policy.gemm_identity:
+        return a @ b
+    policy, words = quant
+    words = fold_words(words, tag)
+    lead = a.shape[:-1]
+    a2 = a.reshape(-1, a.shape[-1]).astype(jnp.float32)
+    out = _qdot2(policy, a2, b.astype(jnp.float32), words)
+    out_dtype = jnp.result_type(a.dtype, b.dtype)
+    return out.reshape(lead + (b.shape[-1],)).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activation rounding (straight-through estimator).
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _qact(policy: QuantPolicy, x, words):
+    s = policy.act
+    w = fold_words(words, SITE_ACT)
+    if policy.oracle:
+        # one bit-word per element, keyed by the flat index (column iota is
+        # constant so every element owns a distinct (row, col) counter)
+        bits = common.counter_bits(w[0], w[1], (x.size, 1)).reshape(x.shape)
+        return sr_cast_p(x, bits, s.fmt, s.mode, eps=s.eps)
+    return sr_cast_prng_p(x, w, s.fmt, s.mode, eps=s.eps)
+
+
+def _qact_fwd(policy, x, words):
+    return _qact(policy, x, words), words
+
+
+def _qact_bwd(policy, words, g):
+    # straight-through: rounding is piecewise constant, its "gradient" is
+    # the identity on the carrier (standard STE for quantized activations)
+    return g, np.zeros(words.shape, jax.dtypes.float0)
+
+
+_qact.defvjp(_qact_fwd, _qact_bwd)
+
+
+def qact(x, quant: Optional[QuantCtx], tag: int = 0):
+    """Round an activation tensor onto the policy's ``act`` grid (STE)."""
+    if quant is None or quant.policy.act.is_identity:
+        return x
+    words = fold_words(quant.words, tag)
+    return _qact(quant.policy, x.astype(jnp.float32), words).astype(x.dtype)

@@ -3,18 +3,21 @@
 Composes: a jit'd step function, a checkpointable data pipeline, the
 CheckpointManager, and failure handling:
 
-* periodic async checkpoints (params + optimizer state + pipeline step +
-  loss-scale state);
+* periodic async checkpoints (params + optimizer state + pipeline step);
 * automatic resume from the latest checkpoint (``run`` is re-entrant: a
   crashed/preempted process restarts and continues bit-exactly);
 * a fault-injection hook used by the tests to simulate preemption;
-* non-finite-loss circuit breaker (restores last checkpoint, halves the
-  loss scale) — the practical straggler/failure posture for SPMD jobs is
-  checkpoint-restart, since a lock-step collective cannot outrun its
-  slowest participant (see DESIGN.md §5).
+* non-finite-loss / runtime-error circuit breaker: restore the latest
+  checkpoint, or — when nothing has been checkpointed yet — the pristine
+  *initial* state snapshotted at construction (the in-flight ``self.state``
+  may hold a half-applied, corrupted update).  Loss scaling is the
+  optimizer's concern, not the loop's.  The practical straggler/failure
+  posture for SPMD jobs is checkpoint-restart, since a lock-step
+  collective cannot outrun its slowest participant (see DESIGN.md §5).
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import time
 from typing import Any, Callable, Dict, Optional
@@ -44,6 +47,11 @@ class TrainLoop:
         self.step_fn = step_fn
         self.pipeline = pipeline
         self.state = init_state
+        # pristine snapshot for checkpoint-less restarts: jax arrays are
+        # immutable, so holding the initial tree is enough; the pipeline
+        # state dict is copied because pipelines mutate in place
+        self._init_state = init_state
+        self._init_pipeline = copy.deepcopy(pipeline.state_dict())
         self.config = config
         self.fault_hook = fault_hook
         self.metrics_hook = metrics_hook
@@ -60,11 +68,23 @@ class TrainLoop:
     def _try_resume(self) -> int:
         latest = self.ckpt.latest_step()
         if latest is None:
-            return 0
-        _, payload, _ = self.ckpt.restore(latest)
-        self.state = jax.tree.map(jax.numpy.asarray, payload["state"])
-        self.pipeline.load_state_dict(payload["pipeline"])
-        return latest
+            # nothing checkpointed yet: restore the pristine initial state —
+            # the in-flight self.state may be a corrupted half-step
+            if self._init_state is not None:
+                self.state = self._init_state
+                self.pipeline.load_state_dict(
+                    copy.deepcopy(self._init_pipeline))
+            resumed = 0
+        else:
+            _, payload, _ = self.ckpt.restore(latest)
+            self.state = jax.tree.map(jax.numpy.asarray, payload["state"])
+            self.pipeline.load_state_dict(payload["pipeline"])
+            resumed = latest
+        # drop history from the discarded run segment: the replayed steps
+        # append fresh entries (otherwise the BENCH trajectory would carry
+        # duplicate step numbers with stale losses)
+        self.history = [h for h in self.history if h["step"] <= resumed]
+        return resumed
 
     # ----------------------------------------------------------------- run
     def run(self) -> Dict[str, Any]:
@@ -103,13 +123,22 @@ class TrainLoop:
                         self.metrics_hook(step, metrics)
                 if step % cfg.checkpoint_every == 0:
                     self._save(step)
+                    if (self._init_state is not None
+                            and self.ckpt.latest_step() is not None):
+                        # a durable checkpoint now covers restart: release
+                        # the pristine snapshot (it pins params + optimizer
+                        # state on device); async saves may defer this to
+                        # the next checkpoint boundary
+                        self._init_state = None
+                        self._init_pipeline = None
             except (FloatingPointError, RuntimeError) as e:
                 restarts += 1
                 if restarts > cfg.max_restarts:
                     raise
                 resumed = self._try_resume()
                 step = resumed
-                # nothing checkpointed yet → restart from scratch state
+                # the interrupted window's timings belong to discarded steps
+                window_t, window_n = 0.0, 0
                 continue
         self._save(step, blocking=True)
         self.ckpt.wait()

@@ -171,6 +171,35 @@ def test_trainloop_survives_injected_fault(tmp_path):
     assert clean["history"][-1]["loss"] == out["history"][-1]["loss"]
 
 
+def test_trainloop_checkpointless_restart_restores_init_state(tmp_path):
+    """A failure before the first checkpoint must roll back to the pristine
+    initial state (the in-flight state is a corrupted half-step), not keep
+    training from the corrupted tree."""
+    step_fn, pipe, state, cfg = _toy_setup(tmp_path, total=4, ckpt_every=100)
+    calls = {"n": 0}
+
+    def poisoned_step(s, batch):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            # corrupt the in-flight state AND fail the step
+            return (s[0] + 1e6, s[1] + 100), {"loss": float("nan")}
+        return step_fn(s, batch)
+
+    loop = TrainLoop(poisoned_step, pipe, state, cfg)
+    out = loop.run()
+    assert out["restarts"] == 1 and out["final_step"] == 4
+    # the corrupted +1e6 weights must NOT survive the restart: final
+    # weights match a clean run from the same initial state bit-for-bit
+    step_fn2, pipe2, state2, cfg2 = _toy_setup(tmp_path, total=4,
+                                               ckpt_every=100)
+    cfg2.checkpoint_dir = str(tmp_path / "ck_clean")
+    clean_loop = TrainLoop(step_fn2, pipe2, state2, cfg2)
+    clean_loop.run()
+    np.testing.assert_array_equal(np.asarray(loop.state[0]),
+                                  np.asarray(clean_loop.state[0]))
+    assert int(loop.state[1]) == int(clean_loop.state[1]) == 4
+
+
 def test_trainloop_gives_up_after_max_restarts(tmp_path):
     step_fn, pipe, state, cfg = _toy_setup(tmp_path)
     cfg.max_restarts = 2

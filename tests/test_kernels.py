@@ -55,6 +55,47 @@ def test_sr_cast_signed_mode():
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+@pytest.mark.parametrize("mode", ["rn", "sr", "rz", "ra"])
+def test_sr_cast_preserves_negative_zero(mode):
+    """round_block must return -0.0 where the oracle does: exact ±0.0
+    inputs and FTZ-flushed subnormals both keep their sign bit."""
+    x = jnp.asarray([0.0, -0.0, 2.5, -2.5, 1e-30, -1e-30, 1e-40, -1e-40],
+                    jnp.float32)
+    bits = jax.random.bits(KEY, x.shape, jnp.uint32)
+    for fmt in FORMATS:
+        got = np.asarray(sr_cast_p(x, bits, fmt, mode, interpret=True))
+        want = np.asarray(ref.sr_cast_ref(x, bits, fmt, mode))
+        np.testing.assert_array_equal(got, want)
+        np.testing.assert_array_equal(np.signbit(got), np.signbit(want),
+                                      err_msg=f"{fmt}/{mode}")
+
+
+def test_fused_update_preserves_negative_zero():
+    """Eq.-8 chain through the fused kernel: x = -0.0, g = 0 must come out
+    as -0.0 (bit-exact vs the oracle, sign bit included)."""
+    cfg = gd.make_config("binary8", "sr", "sr", "sr")
+    x = jnp.asarray([-0.0, 0.0, -0.0, 1.5], jnp.float32)
+    g = jnp.zeros_like(x)
+    bits3 = jax.random.bits(KEY, (3,) + x.shape, jnp.uint32)
+    got = np.asarray(fused_qupdate_p(x, g, 0.1, bits3, cfg, interpret=True))
+    want = np.asarray(ref.fused_qupdate_ref(x, g, 0.1, bits3, cfg))
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(np.signbit(got), np.signbit(want))
+
+
+def test_qmatmul_preserves_negative_zero():
+    """A GEMM whose exact product is -0.0 (single K, -1 * 0) must emit
+    -0.0 from the kernel like the jnp oracle."""
+    a = jnp.asarray([[-1.0], [1.0], [-2.0]], jnp.float32)
+    b = jnp.asarray([[0.0, -0.0, 3.0]], jnp.float32)
+    bits = jax.random.bits(KEY, (3, 3), jnp.uint32)
+    got = np.asarray(qmatmul_p(a, b, bits, "binary8", "sr", bm=4, bn=4,
+                               bk=1, interpret=True))
+    want = np.asarray(ref.qmatmul_ref(a, b, bits, "binary8", "sr"))
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(np.signbit(got), np.signbit(want))
+
+
 def test_sr_cast_jit_wrapper():
     x = _data((1000,), seed=4)
     y = ops.sr_cast(x, KEY, "bfloat16", "sr", interpret=True)
