@@ -119,6 +119,21 @@ def run(n: int = 1 << 20):
     us_qdgrad = _time(q_dgrad, G, B)
     us_qwgrad = _time(q_wgrad, A, G)
 
+    # -- batched quantized contraction (qeinsum): 8 x 256^3 stacked slices
+    # (same total MACs as the 512^3 single GEMM above) through the
+    # batch-gridded kernel with per-slice seed folds — the MoE-expert /
+    # per-head-MLA lowering shape
+    E, mb = 8, 256
+    Ab = jax.random.normal(jax.random.fold_in(key, 4), (E, mb, mb),
+                           jnp.float32) * 0.1
+    Bb = jax.random.normal(jax.random.fold_in(key, 5), (E, mb, mb),
+                           jnp.float32) * 0.1
+    beq = "emk,ekn->emn"
+    bdot_fp32 = jax.jit(lambda a_, b_: jnp.einsum(beq, a_, b_))
+    bq_fwd = jax.jit(lambda a_, b_: qpol.qeinsum(beq, a_, b_, ctx))
+    us_bdot = _time(bdot_fp32, Ab, Bb)
+    us_bqfwd = _time(bq_fwd, Ab, Bb)
+
     melt = n / 1e6
     rows = [
         ("kernel/update_fp32_us_per_Melt", us_fp32 / melt, 1.0),
@@ -147,6 +162,9 @@ def run(n: int = 1 << 20):
         ("kernel/qmatmul_fwd_us", us_qfwd, us_qfwd / us_dot),
         ("kernel/qmatmul_dgrad_us", us_qdgrad, us_qdgrad / us_dot),
         ("kernel/qmatmul_wgrad_us", us_qwgrad, us_qwgrad / us_dot),
+        # batched (8 x 256^3) rounded contraction vs the fp32 einsum of the
+        # same shape — the qeinsum/MoE-expert lowering path
+        ("kernel/qmatmul_batched_fwd_us", us_bqfwd, us_bqfwd / us_bdot),
         # PRNG-mode rounded GEMM moves the same HBM bytes as an fp32 GEMM
         # (no bits stream): memory-bound TPU projection of eq.-8a cost
         ("kernel/qmatmul_prng_traffic_ratio_vs_fp32", 0.0, 1.0),

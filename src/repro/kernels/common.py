@@ -135,11 +135,31 @@ def counter_bits(k0, k1, shape, row0=0, col0=0, stream: int = 0):
                              stream=stream)[0]
 
 
+def seed_kernel_prng_words(w0, w1, block_id, *, interpret: bool) -> None:
+    """Seed the TPU per-core PRNG from two already-loaded uint32 words
+    (no-op under interpret, where kernel_bits_words re-derives everything
+    from coordinates instead).  The words flavour exists for kernels whose
+    seed operand holds *several* word pairs (batched qmatmul: one pair per
+    batch slice) and must pick one dynamically."""
+    if not interpret:
+        pltpu.prng_seed(w0, w1, block_id)
+
+
+def kernel_bits_words(w0, w1, shape, row0=0, col0=0, stream: int = 0,
+                      *, interpret: bool):
+    """kernel_bits on explicit seed words (see seed_kernel_prng_words)."""
+    if interpret:
+        return counter_bits(w0, w1, shape, row0=row0, col0=col0,
+                            stream=stream)
+    return pltpu.prng_random_bits(shape)
+
+
 def seed_kernel_prng(seed_ref, block_id, *, interpret: bool) -> None:
     """Seed the TPU per-core PRNG for this block (no-op under interpret,
     where kernel_bits re-derives everything from coordinates instead)."""
     if not interpret:
-        pltpu.prng_seed(seed_ref[0], seed_ref[1], block_id)
+        seed_kernel_prng_words(seed_ref[0], seed_ref[1], block_id,
+                               interpret=interpret)
 
 
 def kernel_bits(seed_ref, shape, row0=0, col0=0, stream: int = 0,
@@ -152,10 +172,8 @@ def kernel_bits(seed_ref, shape, row0=0, col0=0, stream: int = 0,
     advance the hardware stream, so ``stream`` is only used by the
     interpret path (where draws are stateless).
     """
-    if interpret:
-        return counter_bits(seed_ref[0], seed_ref[1], shape,
-                            row0=row0, col0=col0, stream=stream)
-    return pltpu.prng_random_bits(shape)
+    return kernel_bits_words(seed_ref[0], seed_ref[1], shape, row0=row0,
+                             col0=col0, stream=stream, interpret=interpret)
 
 
 def kernel_bits3(seed_ref, shape, row0, need, *, interpret: bool):

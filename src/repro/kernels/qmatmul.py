@@ -10,6 +10,14 @@ stochastic modes comes from: ``qmatmul_p`` reads an explicit uint32 HBM
 operand (bit-exact oracle mode), ``qmatmul_prng_p`` generates it in-kernel
 at emit time (the operand — 4 B per *output* element — vanishes from HBM).
 
+Batched variants (``qmatmul_batched_p`` / ``qmatmul_batched_prng_p``) add a
+leading batch grid dimension over (E, M, K) x (E, K, N) operand stacks —
+the lowering target for ``precision.qeinsum`` (MoE expert stacks, per-head
+MLA contractions).  The PRNG flavour takes *per-slice* seed words (E, 2)
+via scalar prefetch so every batch slice draws an independent bit stream
+even under the interpret-mode counter hash, whose counters are only the
+within-slice (row, col) coordinates.
+
 Block sizes default to 128/256 multiples so the MXU (128x128) is saturated
 and the working set (bm*bk + bk*bn + 2*bm*bn tiles) stays ≲ 2 MiB in VMEM.
 """
@@ -168,3 +176,150 @@ def qmatmul_prng_p(a, b, seed, fmt, mode: str = "sr", eps: float = 0.0,
         interpret=interpret,
     )(seed, a_p, b_p)
     return out[:M, :N]
+
+
+# ---------------------------------------------------------------------------
+# Batched (stacked) variants: grid (E, i, j, k) over (E, M, K) x (E, K, N).
+# ---------------------------------------------------------------------------
+def _pad_to3(x, m1, m2):
+    p1 = -(-x.shape[1] // m1) * m1 - x.shape[1]
+    p2 = -(-x.shape[2] // m2) * m2 - x.shape[2]
+    return jnp.pad(x, ((0, 0), (0, p1), (0, p2)))
+
+
+def _batch_geometry(a, b, bm, bn, bk):
+    """Clamp block sizes, pad the stacked operands, derive (e, i, j, k)."""
+    E, M, K = a.shape
+    E2, K2, N = b.shape
+    assert E == E2 and K == K2, (a.shape, b.shape)
+    bm_, bn_, bk_ = min(bm, M), min(bn, N), min(bk, K)
+    a_p = _pad_to3(a, bm_, bk_)
+    b_p = _pad_to3(b, bk_, bn_)
+    _, Mp, Kp = a_p.shape
+    _, _, Np = b_p.shape
+    k_steps = Kp // bk_
+    grid = (E, Mp // bm_, Np // bn_, k_steps)
+    return a_p, b_p, (M, N, Mp, Np), (bm_, bn_, bk_), k_steps, grid
+
+
+def _accumulate_b(a_ref, b_ref, acc_ref):
+    """Batched twin of _accumulate: refs carry a leading (1,) slice dim."""
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[0], b_ref[0],
+                            preferred_element_type=jnp.float32)
+
+
+def _qmatmul_batched_kernel(a_ref, b_ref, bits_ref, o_ref, acc_ref,
+                            *, fmt, mode, eps, k_steps):
+    _accumulate_b(a_ref, b_ref, acc_ref)
+
+    @pl.when(pl.program_id(3) == k_steps - 1)
+    def _emit():
+        bits = bits_ref[0] if mode in ("sr", "sr_eps") else None
+        o_ref[0] = common.round_block(acc_ref[...], bits, fmt, mode, eps)
+
+
+def qmatmul_batched_p(a, b, bits, fmt, mode: str = "sr", eps: float = 0.0,
+                      *, bm: int = 256, bn: int = 256, bk: int = 256,
+                      interpret=None):
+    """Rounded batched matmul ``a[e] @ b[e]`` with explicit bits (oracle).
+
+    a: (E, M, K) float32; b: (E, K, N) float32; bits: (E, M, N) uint32 —
+    one bit-plane per batch slice (deterministic modes ignore it but the
+    signature stays uniform with the 2-D kernel).
+    """
+    _check_mode(mode)
+    fmt = get_format(fmt)
+    if interpret is None:
+        interpret = common.default_interpret()
+    a_p, b_p, (M, N, Mp, Np), (bm_, bn_, bk_), k_steps, grid = \
+        _batch_geometry(a, b, bm, bn, bk)
+    bits_p = _pad_to3(bits, bm_, bn_)
+    E = a.shape[0]
+
+    kern = functools.partial(_qmatmul_batched_kernel, fmt=fmt, mode=mode,
+                             eps=eps, k_steps=k_steps)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm_, bk_), lambda e, i, j, k: (e, i, k)),
+            pl.BlockSpec((1, bk_, bn_), lambda e, i, j, k: (e, k, j)),
+            pl.BlockSpec((1, bm_, bn_), lambda e, i, j, k: (e, i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm_, bn_), lambda e, i, j, k: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, Mp, Np), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
+        interpret=interpret,
+    )(a_p, b_p, bits_p)
+    return out[:, :M, :N]
+
+
+def _qmatmul_batched_prng_kernel(seed_ref, a_ref, b_ref, o_ref, acc_ref,
+                                 *, fmt, mode, eps, k_steps, bm, bn,
+                                 interpret):
+    e, i, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    n_i, n_j = pl.num_programs(1), pl.num_programs(2)
+
+    _accumulate_b(a_ref, b_ref, acc_ref)
+
+    @pl.when(pl.program_id(3) == k_steps - 1)
+    def _emit():
+        if mode in ("sr", "sr_eps"):
+            # per-slice seed words; the hardware path additionally folds the
+            # linearized (e, i, j) block id, the interpret path keys the
+            # counter hash by within-slice global coordinates
+            w0, w1 = seed_ref[e, 0], seed_ref[e, 1]
+            block_id = (e * n_i + i) * n_j + j
+            common.seed_kernel_prng_words(w0, w1, block_id,
+                                          interpret=interpret)
+            bits = common.kernel_bits_words(w0, w1, acc_ref.shape,
+                                            row0=i * bm, col0=j * bn,
+                                            interpret=interpret)
+        else:
+            bits = None
+        o_ref[0] = common.round_block(acc_ref[...], bits, fmt, mode, eps)
+
+
+def qmatmul_batched_prng_p(a, b, seeds, fmt, mode: str = "sr",
+                           eps: float = 0.0, *, bm: int = 256, bn: int = 256,
+                           bk: int = 256, interpret=None):
+    """Rounded batched matmul with in-kernel randomness.
+
+    ``seeds``: (E, 2) uint32 — *per-batch-slice* seed words (the caller
+    folds the slice index into the call-site words, precision.policy), via
+    SMEM scalar prefetch.  Slices therefore own independent bit streams on
+    both the hardware-PRNG and interpret paths.
+    """
+    _check_mode(mode)
+    fmt = get_format(fmt)
+    if interpret is None:
+        interpret = common.default_interpret()
+    a_p, b_p, (M, N, Mp, Np), (bm_, bn_, bk_), k_steps, grid = \
+        _batch_geometry(a, b, bm, bn, bk)
+    E = a.shape[0]
+    seeds = jnp.asarray(seeds, jnp.uint32).reshape(E, 2)
+
+    kern = functools.partial(_qmatmul_batched_prng_kernel, fmt=fmt,
+                             mode=mode, eps=eps, k_steps=k_steps, bm=bm_,
+                             bn=bn_, interpret=interpret)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bm_, bk_), lambda e, i, j, k, s: (e, i, k)),
+                pl.BlockSpec((1, bk_, bn_), lambda e, i, j, k, s: (e, k, j)),
+            ],
+            out_specs=pl.BlockSpec((1, bm_, bn_),
+                                   lambda e, i, j, k, s: (e, i, j)),
+            scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((E, Mp, Np), jnp.float32),
+        interpret=interpret,
+    )(seeds, a_p, b_p)
+    return out[:, :M, :N]

@@ -7,6 +7,7 @@ Example:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -18,10 +19,14 @@ from repro.models import build_model
 
 
 def run(arch: str, *, reduced: bool, batch: int, prompt_len: int, gen: int,
-        seed: int = 0):
+        seed: int = 0, gemm_policy: str = None):
     cfg = get_config(arch)
     if reduced:
         cfg = reduce_cfg(cfg)
+    if gemm_policy is not None:
+        # quantized serving (eq. 8a at inference): prefill-scan and decode
+        # both honor the policy — including the absorbed-MLA decode path
+        cfg = dataclasses.replace(cfg, gemm_policy=gemm_policy)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
 
@@ -97,9 +102,14 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    from repro.precision import PRESETS
+    ap.add_argument("--gemm-policy", default=None, choices=sorted(PRESETS),
+                    help="quantized-GEMM precision policy for prefill and "
+                         "decode (default: full-precision GEMMs)")
     args = ap.parse_args()
     run(args.arch, reduced=args.reduced, batch=args.batch,
-        prompt_len=args.prompt_len, gen=args.gen)
+        prompt_len=args.prompt_len, gen=args.gen,
+        gemm_policy=args.gemm_policy)
 
 
 if __name__ == "__main__":

@@ -81,7 +81,8 @@ def _mla_attend(params, q_nope, q_rope, c_kv, k_rope, mask, cfg, quant=None):
                     quant, QP.TAG_MLA_O)
 
 
-def _mla_attend_absorbed(params, q_nope, q_rope, c_kv, k_rope, mask, cfg):
+def _mla_attend_absorbed(params, q_nope, q_rope, c_kv, k_rope, mask, cfg,
+                         quant=None):
     """Absorbed-matmul attention: scores and values computed directly in
     the compressed kv_lora space.
 
@@ -92,7 +93,13 @@ def _mla_attend_absorbed(params, q_nope, q_rope, c_kv, k_rope, mask, cfg):
 
     FLOPs per decode step drop from O(S·r·H·(d_nope+d_v)) (decompress the
     whole context) to O(H·S·(r+d_rope)) — the production DeepSeek serving
-    formulation, adapted to TPU einsums."""
+    formulation, adapted to TPU einsums.
+
+    The weight-bearing contractions (q_eff against w_k, the o_c→output
+    against w_v, and wo) run through the batched rounded-GEMM path with a
+    per-head seed fold when ``quant`` is given; the attention logits and
+    probs·cache contraction stay fp32 by design (allowlisted —
+    EXPERIMENTS.md §Quantized GEMM path)."""
     m = cfg.mla
     nh = cfg.n_heads
     dtype = q_nope.dtype
@@ -101,7 +108,8 @@ def _mla_attend_absorbed(params, q_nope, q_rope, c_kv, k_rope, mask, cfg):
         r, nh, m.qk_nope_dim + m.v_head_dim)
     w_k, w_v = wkv[..., :m.qk_nope_dim], wkv[..., m.qk_nope_dim:]
     scale = 1.0 / (m.qk_nope_dim + m.qk_rope_dim) ** 0.5
-    q_eff = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32), w_k)
+    q_eff = QP.qeinsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32), w_k,
+                       quant, QP.TAG_MLA_ABS_QEFF)
     logits = (jnp.einsum("bqhr,bsr->bhqs", q_eff,
                          c_kv.astype(jnp.float32))
               + jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32),
@@ -114,8 +122,10 @@ def _mla_attend_absorbed(params, q_nope, q_rope, c_kv, k_rope, mask, cfg):
     logits = jnp.where(mask[:, None, :, :], logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1)
     o_c = jnp.einsum("bhqs,bsr->bqhr", probs, c_kv.astype(jnp.float32))
-    out = jnp.einsum("bqhr,rhd->bqhd", o_c, w_v).astype(dtype)
-    return out.reshape(B, -1, nh * m.v_head_dim) @ params["wo"].astype(dtype)
+    out = QP.qeinsum("bqhr,rhd->bqhd", o_c, w_v, quant,
+                     QP.TAG_MLA_ABS_OUT).astype(dtype)
+    return L.qdense(out.reshape(B, -1, nh * m.v_head_dim), params["wo"],
+                    quant, QP.TAG_MLA_O)
 
 
 def mla_apply(params, x, positions, cfg, *, causal=True,
@@ -135,11 +145,10 @@ def mla_apply(params, x, positions, cfg, *, causal=True,
         valid = jnp.arange(Skv)[None, :] < (start + S)
         mask = jnp.broadcast_to(valid[:, None, :], (B, S, Skv))
         if cfg.mla.absorb:
-            # absorbed decode works on pre-folded weights in the compressed
-            # space — no standalone weight GEMM to round (policy open item)
             y = _mla_attend_absorbed(params, q_nope, q_rope,
                                      c_all.astype(x.dtype),
-                                     r_all.astype(x.dtype), mask, cfg)
+                                     r_all.astype(x.dtype), mask, cfg,
+                                     quant=quant)
         else:
             y = _mla_attend(params, q_nope, q_rope, c_all.astype(x.dtype),
                             r_all.astype(x.dtype), mask, cfg, quant)

@@ -30,7 +30,7 @@ import jax.numpy as jnp
 from repro.dist import compat
 from repro.dist.sharding import _axes, shard_act
 from repro.models import layers as L
-from repro.models.ffn import ffn_apply, ffn_init, swiglu_apply
+from repro.models.ffn import ffn_apply, ffn_init
 from repro.precision import policy as QP
 
 
@@ -56,26 +56,20 @@ def moe_init(key, cfg):
 def _expert_compute(buf, w_gate, w_up, w_down, dtype, quant=None):
     """Batched SwiGLU over stacked experts: (E, C, D) -> (E, C, D).
 
-    With a quant context the three GEMMs of every expert run through the
-    rounded-GEMM path and the post-SwiGLU hidden goes through the act
-    rounding site, mirroring ffn_apply.  Experts run under a lax.scan
-    (graph size O(1) in E; the expert index is folded into the seed words
-    inside the body — Threefry folds accept traced tags); dense path only."""
-    if quant is not None and not quant.policy.is_identity:
-        def expert_body(carry, inp):
-            e, b_e, wg_e, wu_e, wd_e = inp
-            qe = QP.fold_ctx(quant, QP.TAG_MOE_EXPERT0 + e)
-            return carry, swiglu_apply(b_e, wg_e, wu_e, wd_e, qe)
-
-        E = buf.shape[0]
-        _, out = jax.lax.scan(
-            expert_body, 0,
-            (jnp.arange(E), buf, w_gate.astype(dtype), w_up.astype(dtype),
-             w_down.astype(dtype)))
-        return out
-    gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w_gate.astype(dtype)))
-    up = jnp.einsum("ecd,edf->ecf", buf, w_up.astype(dtype))
-    return jnp.einsum("ecf,efd->ecd", gate * up, w_down.astype(dtype))
+    The three expert GEMMs run as ONE batched contraction each through
+    ``precision.qeinsum`` — with a quant context the batch-gridded rounded
+    kernels round every expert's GEMM results, and the expert (batch-slice)
+    index is folded into the seed words inside qeinsum so no two experts
+    share a bit stream; the post-SwiGLU hidden goes through the act
+    rounding site, mirroring ffn_apply.  With ``quant=None`` this is the
+    plain einsum path, bit-identical to the unrouted model."""
+    gate = jax.nn.silu(QP.qeinsum("ecd,edf->ecf", buf, w_gate.astype(dtype),
+                                  quant, QP.TAG_MOE_GATE))
+    up = QP.qeinsum("ecd,edf->ecf", buf, w_up.astype(dtype), quant,
+                    QP.TAG_MOE_UP)
+    h = QP.qact(gate * up, quant, QP.TAG_MOE_ACT)
+    return QP.qeinsum("ecf,efd->ecd", h, w_down.astype(dtype), quant,
+                      QP.TAG_MOE_DOWN)
 
 
 def _dispatch_compute_combine(xt, topw, topi, w_gate, w_up, w_down,
@@ -120,9 +114,12 @@ def _dispatch_compute_combine(xt, topw, topi, w_gate, w_up, w_down,
 def moe_apply(params, x, cfg, router_key=None,
               quant=None) -> Tuple[jax.Array, jax.Array]:
     """x: (B, S, D) -> (y, aux_loss).  ``quant`` routes the router GEMM,
-    the shared expert, and the dense-path routed experts through the
-    rounded-GEMM path; the shard_map EP/serving layouts keep full-precision
-    expert GEMMs for now (ROADMAP open item)."""
+    the shared expert, and the routed experts of ALL THREE execution paths
+    (dense, shard_map EP training layout, shard_map serving layout) through
+    the rounded-GEMM kernels.  The EP bodies receive the call-site seed
+    words as a replicated shard_map operand and fold in their expert-window
+    offset (and, for the F-TP serving layout, the model-shard index) so
+    expert streams stay globally decorrelated across devices."""
     m = cfg.moe
     B, S, D = x.shape
     dtype = x.dtype
@@ -143,6 +140,12 @@ def moe_apply(params, x, cfg, router_key=None,
     serve_layout = getattr(cfg, "moe_serve_layout", False)
     use_ep = (ax.active and ax.mesh.shape[ax.model] > 1
               and (E % ax.mesh.shape[ax.model] == 0 or serve_layout))
+    # quant words enter the shard_map bodies as a replicated operand (the
+    # policy itself is static and closes over); identity policies pass
+    # nothing so the unquantized lowering is untouched
+    use_q = quant is not None and not quant.policy.is_identity
+    q_args = (quant.words,) if use_q else ()
+    y = None
     if use_ep and serve_layout and ax.batch:
         # ----- serving layout: experts over `data`, F-TP over `model` ----
         # Tokens are replicated along model, so each device computes its
@@ -159,16 +162,28 @@ def moe_apply(params, x, cfg, router_key=None,
         if E % n_d == 0:
             E_loc = E // n_d
 
-            def serve_fn(xt_, topw_, topi_, wg_, wu_, wd_):
+            def serve_fn(xt_, topw_, topi_, wg_, wu_, wd_, *qw_):
                 xt_all = jax.lax.all_gather(xt_, dp, axis=0, tiled=True)
                 topw_all = jax.lax.all_gather(topw_, dp, axis=0, tiled=True)
                 topi_all = jax.lax.all_gather(topi_, dp, axis=0, tiled=True)
                 e0 = jax.lax.axis_index(fsdp[-1]) * E_loc
+                q_loc = None
+                if use_q:
+                    # fold the expert-window offset AND the model-shard
+                    # index: each device rounds a distinct F-shard of the
+                    # same expert, and the interpret-mode counter hash only
+                    # sees local coordinates — without the model fold all
+                    # F-shards of one expert would share a bit stream
+                    w_loc = QP.fold_words(qw_[0], e0)
+                    w_loc = QP.fold_words(w_loc,
+                                          jax.lax.axis_index(ax.model))
+                    q_loc = QP.QuantCtx(quant.policy, w_loc)
                 y_all = _dispatch_compute_combine(
                     xt_all, topw_all, topi_all, wg_, wu_, wd_, E_loc,
                     m.top_k, m.capacity_factor, dtype, e_offset=e0,
                     capacity_experts=E,
-                    reduce_fn=lambda o: jax.lax.psum(o, ax.model))
+                    reduce_fn=lambda o: jax.lax.psum(o, ax.model),
+                    quant=q_loc)
                 y_all = jax.lax.psum(y_all, dp)        # sum expert owners
                 T_loc = xt_.shape[0]
                 d_idx = jax.lax.axis_index(dp[-1] if isinstance(dp, tuple)
@@ -181,10 +196,10 @@ def moe_apply(params, x, cfg, router_key=None,
                 serve_fn, mesh=mesh,
                 in_specs=(tok_spec, tok_spec, tok_spec,
                           P(fsdp, None, ax.model), P(fsdp, None, ax.model),
-                          P(fsdp, ax.model, None)),
+                          P(fsdp, ax.model, None)) + (P(),) * len(q_args),
                 out_specs=tok_spec, check_vma=False,
             )(xt, topw, topi, params["w_gate"], params["w_up"],
-              params["w_down"])
+              params["w_down"], *q_args)
         else:
             serve_layout = False
     if use_ep and not serve_layout and E % ax.mesh.shape[ax.model] == 0:
@@ -195,15 +210,29 @@ def moe_apply(params, x, cfg, router_key=None,
         fsdp = tuple(ax.data)
         E_loc = E // mesh.shape[ax.model]
 
-        def local_fn(xt_, topw_, topi_, wg_, wu_, wd_):
+        def local_fn(xt_, topw_, topi_, wg_, wu_, wd_, *qw_):
             # FSDP gather of this shard's expert weights over `data`
             wg_ = jax.lax.all_gather(wg_, fsdp, axis=1, tiled=True)
             wu_ = jax.lax.all_gather(wu_, fsdp, axis=1, tiled=True)
             wd_ = jax.lax.all_gather(wd_, fsdp, axis=2, tiled=True)
             e0 = jax.lax.axis_index(ax.model) * E_loc
+            # expert-window fold: qeinsum's per-slice folds are local
+            # (0..E_loc), so the window offset keeps streams distinct
+            # across the model axis (Threefry folds accept traced tags);
+            # the data-axis index is folded too — data shards share e0 and
+            # post-gather weights, and without the fold their rounded
+            # wgrad partials would draw correlated bits at identical
+            # local coordinates before the data-axis reduction
+            q_loc = None
+            if use_q:
+                w_loc = QP.fold_words(qw_[0], e0)
+                for a_ in (dp or ()):
+                    w_loc = QP.fold_words(w_loc, jax.lax.axis_index(a_))
+                q_loc = QP.QuantCtx(quant.policy, w_loc)
             y_ = _dispatch_compute_combine(
                 xt_, topw_, topi_, wg_, wu_, wd_, E_loc, m.top_k,
-                m.capacity_factor, dtype, e_offset=e0, capacity_experts=E)
+                m.capacity_factor, dtype, e_offset=e0, capacity_experts=E,
+                quant=q_loc)
             # combine partial expert outputs across the model axis
             return jax.lax.psum(y_, ax.model)
 
@@ -212,12 +241,12 @@ def moe_apply(params, x, cfg, router_key=None,
             local_fn, mesh=mesh,
             in_specs=(tok_spec, tok_spec, tok_spec,
                       P(ax.model, fsdp, None), P(ax.model, fsdp, None),
-                      P(ax.model, None, fsdp)),
+                      P(ax.model, None, fsdp)) + (P(),) * len(q_args),
             out_specs=tok_spec, check_vma=False,
         )(xt, topw, topi, params["w_gate"], params["w_up"],
-          params["w_down"])
-    elif not use_ep or (use_ep and serve_layout is False and
-                        E % ax.mesh.shape[ax.model] != 0):
+          params["w_down"], *q_args)
+    if y is None:   # no usable EP layout (incl. serve_layout without a
+        # batch axis / indivisible E): single-device dense reference path
         y = _dispatch_compute_combine(
             xt, topw, topi, params["w_gate"], params["w_up"],
             params["w_down"], E, m.top_k, m.capacity_factor, dtype,

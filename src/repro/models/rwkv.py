@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import layers as L
+from repro.precision import policy as QP
 
 
 class RWKVCache(NamedTuple):
@@ -120,7 +121,12 @@ def _wkv_chunked(r, k, v, logw, u, chunk: int):
 
 
 def rwkv_time_mix(params, x, cfg, cache: Optional[RWKVCache] = None,
-                  return_state: bool = False):
+                  return_state: bool = False, quant=None):
+    """``quant`` routes the five full-width projections (w_r/w_k/w_v/w_g
+    and w_o) through the rounded-GEMM path; the low-rank data-dependent
+    decay MLP (decay_a/decay_b) stays fp32 by design — its output feeds
+    exp() twice, where binary8-grid decay would collapse whole heads
+    (allowlisted; EXPERIMENTS.md §Quantized GEMM path)."""
     B, S, D = x.shape
     H, hd = _dims(cfg)
     dtype = x.dtype
@@ -135,10 +141,10 @@ def rwkv_time_mix(params, x, cfg, cache: Optional[RWKVCache] = None,
     xw = _lerp(x, prev, params["mu_w"].astype(dtype))
     xg = _lerp(x, prev, params["mu_g"].astype(dtype))
 
-    r = (xr @ params["w_r"].astype(dtype)).reshape(B, S, H, hd)
-    k = (xk @ params["w_k"].astype(dtype)).reshape(B, S, H, hd)
-    v = (xv @ params["w_v"].astype(dtype)).reshape(B, S, H, hd)
-    g = jax.nn.silu(xg @ params["w_g"].astype(dtype))
+    r = L.qdense(xr, params["w_r"], quant, QP.TAG_RWKV_R).reshape(B, S, H, hd)
+    k = L.qdense(xk, params["w_k"], quant, QP.TAG_RWKV_K).reshape(B, S, H, hd)
+    v = L.qdense(xv, params["w_v"], quant, QP.TAG_RWKV_V).reshape(B, S, H, hd)
+    g = jax.nn.silu(L.qdense(xg, params["w_g"], quant, QP.TAG_RWKV_G))
 
     # data-dependent decay (Finch): ŵ = w0 + tanh(xw A) B
     w_hat = params["decay_w0"] + (
@@ -167,19 +173,22 @@ def rwkv_time_mix(params, x, cfg, cache: Optional[RWKVCache] = None,
     out = L.rms_norm(out.reshape(B, S, H, hd).astype(dtype),
                      params["ln_out"].reshape(H, hd))
     out = out.reshape(B, S, D) * g
-    y = out @ params["w_o"].astype(dtype)
+    y = L.qdense(out, params["w_o"], quant, QP.TAG_RWKV_O)
     shift_out = x[:, -1, :]
     return y, shift_out, new_state
 
 
-def rwkv_channel_mix(params, x, cfg, cache: Optional[RWKVCache] = None):
+def rwkv_channel_mix(params, x, cfg, cache: Optional[RWKVCache] = None,
+                     quant=None):
     dtype = x.dtype
     prev = _shift(x, None if cache is None else cache.cm_shift.astype(dtype))
     xk = _lerp(x, prev, params["cm_mu_k"].astype(dtype))
     xr = _lerp(x, prev, params["cm_mu_r"].astype(dtype))
-    k = jnp.square(jax.nn.relu(xk @ params["cm_k"].astype(dtype)))
-    kv = k @ params["cm_v"].astype(dtype)
-    y = jax.nn.sigmoid(xr @ params["cm_r"].astype(dtype)) * kv
+    k = jnp.square(jax.nn.relu(
+        L.qdense(xk, params["cm_k"], quant, QP.TAG_RWKV_CM_K)))
+    kv = L.qdense(k, params["cm_v"], quant, QP.TAG_RWKV_CM_V)
+    y = jax.nn.sigmoid(
+        L.qdense(xr, params["cm_r"], quant, QP.TAG_RWKV_CM_R)) * kv
     return y, x[:, -1, :]
 
 

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import layers as L
+from repro.precision import policy as QP
 
 
 class SSMCache(NamedTuple):
@@ -121,14 +122,17 @@ def _ssd_chunked(xh, Bm, Cm, dt, A_log, chunk: int):
 
 
 def ssm_apply(params, x, cfg, cache: Optional[SSMCache] = None,
-              return_state: bool = False
+              return_state: bool = False, quant=None
               ) -> Tuple[jax.Array, Optional[SSMCache]]:
-    """x: (B, S, D).  Decode path (cache given) expects S == 1."""
+    """x: (B, S, D).  Decode path (cache given) expects S == 1.  ``quant``
+    routes the in/out projections (the block's weight GEMMs) through the
+    rounded-GEMM path; the SSD state recurrence itself is elementwise /
+    activation-only contractions and stays fp32 (allowlisted)."""
     s = cfg.ssm
     d_inner, H, conv_dim = _dims(cfg)
     B_, S, D = x.shape
     dtype = x.dtype
-    proj = x @ params["in_proj"].astype(dtype)
+    proj = L.qdense(x, params["in_proj"], quant, QP.TAG_SSM_IN)
     z, xs, Bm, Cm, dt = _split_proj(proj, cfg)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
 
@@ -165,7 +169,7 @@ def ssm_apply(params, x, cfg, cache: Optional[SSMCache] = None,
     y = y + params["D"][None, None, :, None] * xh
     y = y.reshape(B_, S, d_inner).astype(dtype)
     y = L.rms_norm(y * jax.nn.silu(z), params["norm"])
-    return y @ params["out_proj"].astype(dtype), new_cache
+    return L.qdense(y, params["out_proj"], quant, QP.TAG_SSM_OUT), new_cache
 
 
 def init_ssm_cache(cfg, batch: int, dtype=jnp.float32,

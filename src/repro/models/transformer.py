@@ -157,21 +157,24 @@ def _apply_dec_attn_block(p, x, positions, cfg, cache, enc_out, key,
     return x, jnp.float32(0.0), new_cache
 
 
-def _apply_mamba_block(p, x, cfg, cache, collect=False):
+def _apply_mamba_block(p, x, cfg, cache, rkey, collect=False):
+    qc = ctx_for(cfg, rkey)
     h = L.rms_norm(x, p["norm1"])
     y, new_cache = ssm.ssm_apply(p["ssm"], h, cfg, cache=cache,
-                                 return_state=collect)
+                                 return_state=collect, quant=qc)
     return shard_act(x + y, "hidden"), jnp.float32(0.0), new_cache
 
 
-def _apply_rwkv_block(p, x, cfg, cache: Optional[rwkv.RWKVCache],
+def _apply_rwkv_block(p, x, cfg, cache: Optional[rwkv.RWKVCache], rkey,
                       collect=False):
+    qc = ctx_for(cfg, rkey)
     h = L.rms_norm(x, p["norm1"])
     y, tm_shift, state = rwkv.rwkv_time_mix(
-        p["rwkv"], h, cfg, cache=cache, return_state=collect)
+        p["rwkv"], h, cfg, cache=cache, return_state=collect, quant=qc)
     x = x + y
     h2 = L.rms_norm(x, p["norm2"])
-    y2, cm_shift = rwkv.rwkv_channel_mix(p["rwkv"], h2, cfg, cache=cache)
+    y2, cm_shift = rwkv.rwkv_channel_mix(p["rwkv"], h2, cfg, cache=cache,
+                                         quant=qc)
     x = shard_act(x + y2, "hidden")
     new_cache = None
     if cache is not None or (collect and state is not None):
@@ -241,10 +244,10 @@ def apply_blocks(blocks, x, positions, cfg, plan, *, caches=None,
                                                    c_, enc_out, k_,
                                                    collect_cache)
             elif t == "mamba":
-                x_, a_, nc = _apply_mamba_block(p_, x_, cfg, c_,
+                x_, a_, nc = _apply_mamba_block(p_, x_, cfg, c_, k_,
                                                 collect_cache)
             elif t == "rwkv":
-                x_, a_, nc = _apply_rwkv_block(p_, x_, cfg, c_,
+                x_, a_, nc = _apply_rwkv_block(p_, x_, cfg, c_, k_,
                                                collect_cache)
             else:
                 raise ValueError(f"unknown block type {t!r}")

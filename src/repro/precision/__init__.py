@@ -2,10 +2,10 @@
 from repro.precision.policy import (PRESETS, QuantCtx, QuantPolicy, ctx_for,
                                     fold_ctx, fold_words, get_policy,
                                     make_ctx, make_policy, qact, qdot,
-                                    resolve_policy)
+                                    qeinsum, resolve_policy)
 
 __all__ = [
     "PRESETS", "QuantCtx", "QuantPolicy", "ctx_for", "fold_ctx",
     "fold_words", "get_policy", "make_ctx", "make_policy", "qact", "qdot",
-    "resolve_policy",
+    "qeinsum", "resolve_policy",
 ]

@@ -40,23 +40,33 @@ import numpy as np
 
 from repro.core.rounding import IDENTITY, RoundingSpec, spec
 from repro.kernels import common
-from repro.kernels.qmatmul import qmatmul_p, qmatmul_prng_p
+from repro.kernels.qmatmul import (qmatmul_batched_p, qmatmul_batched_prng_p,
+                                   qmatmul_p, qmatmul_prng_p)
 from repro.kernels.sr_cast import sr_cast_p, sr_cast_prng_p
 
 # GEMM/activation sites (folded into the per-call seed words).
 SITE_FWD, SITE_DGRAD, SITE_WGRAD, SITE_ACT = 0, 1, 2, 3
 
-# Static per-call-site tags: every qdot/qact call inside one block must use
-# a distinct tag so its PRNG stream is independent of its siblings'.  Blocks
-# themselves get distinct base words (per-layer keys), so tags only need to
-# be unique *within* a block.
+# Static per-call-site tags: every qdot/qeinsum/qact call inside one block
+# must use a distinct tag so its PRNG stream is independent of its
+# siblings'.  Blocks themselves get distinct base words (per-layer keys),
+# so tags only need to be unique *within* a block.
 TAG_ATTN_Q, TAG_ATTN_K, TAG_ATTN_V, TAG_ATTN_O = 0, 1, 2, 3
 TAG_FFN_UP, TAG_FFN_GATE, TAG_FFN_DOWN, TAG_FFN_ACT = 4, 5, 6, 7
 TAG_ROUTER = 8
 TAG_CROSS_Q, TAG_CROSS_K, TAG_CROSS_V, TAG_CROSS_O = 9, 10, 11, 12
 TAG_MLA_QA, TAG_MLA_QB, TAG_MLA_KVA, TAG_MLA_KVB, TAG_MLA_O = 13, 14, 15, 16, 17
 TAG_LOGITS = 18
-TAG_MOE_EXPERT0 = 32          # expert e uses TAG_MOE_EXPERT0 + e
+# absorbed-MLA decode: per-head contractions against the folded wkv_b halves
+TAG_MLA_ABS_QEFF, TAG_MLA_ABS_OUT = 19, 20
+# SSM (Mamba2) projections
+TAG_SSM_IN, TAG_SSM_OUT = 21, 22
+# RWKV6 time-mix projections + channel-mix
+TAG_RWKV_R, TAG_RWKV_K, TAG_RWKV_V, TAG_RWKV_G, TAG_RWKV_O = 23, 24, 25, 26, 27
+TAG_RWKV_CM_K, TAG_RWKV_CM_V, TAG_RWKV_CM_R = 28, 29, 30
+# MoE stacked-expert einsums (batched qeinsum; the expert index is a
+# per-batch-slice fold *inside* qeinsum, not part of the tag)
+TAG_MOE_GATE, TAG_MOE_UP, TAG_MOE_DOWN, TAG_MOE_ACT = 32, 33, 34, 35
 
 
 @dataclasses.dataclass(frozen=True)
@@ -254,6 +264,131 @@ def qdot(a, b, quant: Optional[QuantCtx], tag: int = 0):
     out = _qdot2(policy, a2, b.astype(jnp.float32), words)
     out_dtype = jnp.result_type(a.dtype, b.dtype)
     return out.reshape(lead + (b.shape[-1],)).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# The differentiable rounded *batched* contraction (einsum-capable).
+# ---------------------------------------------------------------------------
+def slice_words(words, n: int):
+    """Per-batch-slice seed words: (2,) -> (n, 2), slice e == fold_words(
+    words, e) (one vectorized Threefry eval).  Every batch slice of a
+    batched rounded GEMM owns an independent bit stream — under interpret
+    the counter hash only sees within-slice (row, col) coordinates, so the
+    decorrelation must come from the seed, not the counter."""
+    w0, w1 = common.threefry2x32(words[0], words[1],
+                                 jnp.arange(n, dtype=jnp.uint32),
+                                 jnp.uint32(_FOLD_CONST))
+    return jnp.stack([w0, w1], axis=1)
+
+
+def batched_site_matmul(policy: QuantPolicy, site: int, a, b, words):
+    """One rounded batched GEMM (E, M, K) x (E, K, N) -> (E, M, N) at
+    ``site`` — the unit the qeinsum forward/backward composes."""
+    s: RoundingSpec = getattr(policy, _SITE_ATTR[site])
+    if s.is_identity:
+        return jnp.einsum("emk,ekn->emn", a, b,
+                          preferred_element_type=jnp.float32)
+    w = fold_words(words, site)
+    seeds = slice_words(w, a.shape[0])
+    if policy.oracle:
+        bits = jax.vmap(lambda se: common.counter_bits(
+            se[0], se[1], (a.shape[1], b.shape[2])))(seeds)
+        return qmatmul_batched_p(a, b, bits, s.fmt, s.mode, s.eps,
+                                 bm=policy.bm, bn=policy.bn, bk=policy.bk)
+    return qmatmul_batched_prng_p(a, b, seeds, s.fmt, s.mode, s.eps,
+                                  bm=policy.bm, bn=policy.bn, bk=policy.bk)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _qbmm(policy: QuantPolicy, a, b, words):
+    return batched_site_matmul(policy, SITE_FWD, a, b, words)
+
+
+def _qbmm_fwd(policy, a, b, words):
+    return _qbmm(policy, a, b, words), (a, b, words)
+
+
+def _qbmm_bwd(policy, res, g):
+    a, b, words = res
+    g = g.astype(jnp.float32)
+    da = batched_site_matmul(policy, SITE_DGRAD, g,
+                             jnp.swapaxes(b, 1, 2), words)
+    db = batched_site_matmul(policy, SITE_WGRAD,
+                             jnp.swapaxes(a, 1, 2), g, words)
+    return da, db, np.zeros(words.shape, jax.dtypes.float0)
+
+
+_qbmm.defvjp(_qbmm_fwd, _qbmm_bwd)
+
+
+@functools.lru_cache(maxsize=None)
+def _parse_einsum(eqn: str):
+    """Decompose a two-operand einsum into (batch, contract, free_a,
+    free_b) label groups.  Supported: unique labels per operand, no
+    ellipsis, every non-contracted label present in the output."""
+    eqn = eqn.replace(" ", "")
+    if "->" not in eqn or "." in eqn:
+        raise ValueError(f"qeinsum needs an explicit two-operand "
+                         f"'ab,bc->ac'-style equation, got {eqn!r}")
+    lhs, out = eqn.split("->")
+    sa, sb = lhs.split(",")
+    if len(set(sa)) != len(sa) or len(set(sb)) != len(sb) \
+            or len(set(out)) != len(out):
+        raise ValueError(f"qeinsum: repeated labels unsupported in {eqn!r}")
+    batch = tuple(d for d in sa if d in sb and d in out)
+    contract = tuple(d for d in sa if d in sb and d not in out)
+    free_a = tuple(d for d in sa if d not in sb)
+    free_b = tuple(d for d in sb if d not in sa)
+    if set(out) != set(batch + free_a + free_b) or not contract:
+        raise ValueError(f"qeinsum: {eqn!r} is not a pure contraction "
+                         "(summed-out free labels are unsupported)")
+    return sa, sb, out, batch, contract, free_a, free_b
+
+
+def _prod(xs):
+    out = 1
+    for x in xs:
+        out *= x
+    return out
+
+
+def qeinsum(eqn: str, a, b, quant: Optional[QuantCtx], tag: int = 0):
+    """Policy-rounded differentiable ``jnp.einsum(eqn, a, b)``.
+
+    The generalization of ``qdot`` to batched/multi-dim contractions
+    ("ecd,edf->ecf" expert stacks, "bqhd,rhd->bqhr" per-head MLA forms):
+    the operands are canonicalized to (G, M, K) x (G, K, N) stacks and run
+    through the batch-gridded rounded-GEMM kernels, per-batch-slice seed
+    folds included; the backward transpose contractions ride the same
+    kernels via ``_qbmm``'s custom VJP.  With ``quant=None`` (or an
+    all-identity GEMM policy) this is exactly ``jnp.einsum(eqn, a, b)`` —
+    bit-identical to the unrouted model.
+    """
+    if quant is None or quant.policy.gemm_identity:
+        return jnp.einsum(eqn, a, b)
+    sa, sb, out, batch, contract, free_a, free_b = _parse_einsum(eqn)
+    dim = {}
+    for labels, shape in ((sa, a.shape), (sb, b.shape)):
+        if len(labels) != len(shape):
+            raise ValueError(f"{eqn!r} rank mismatch for shape {shape}")
+        for d, n in zip(labels, shape):
+            if dim.setdefault(d, n) != n:
+                raise ValueError(f"{eqn!r}: size mismatch on {d!r}")
+
+    policy, words = quant
+    words = fold_words(words, tag)
+    a3 = jnp.transpose(
+        a, [sa.index(d) for d in batch + free_a + contract]).reshape(
+            _prod(dim[d] for d in batch), _prod(dim[d] for d in free_a),
+            _prod(dim[d] for d in contract)).astype(jnp.float32)
+    b3 = jnp.transpose(
+        b, [sb.index(d) for d in batch + contract + free_b]).reshape(
+            a3.shape[0], a3.shape[2],
+            _prod(dim[d] for d in free_b)).astype(jnp.float32)
+    o3 = _qbmm(policy, a3, b3, words)
+    o = o3.reshape([dim[d] for d in batch + free_a + free_b])
+    o = jnp.transpose(o, [(batch + free_a + free_b).index(d) for d in out])
+    return o.astype(jnp.result_type(a.dtype, b.dtype))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,14 @@
+"""Shared tier-1 test configuration.
+
+Pins the jax PRNG implementation: every stochastic-rounding bit stream in
+the suite is derived from hard-coded keys via ``kernels.common.derive_seed``
+(which reads the raw key words), so the CLT-bounded statistical assertions
+in test_qdot.py / test_kernel_prng.py and the pinned-seed regression values
+are deterministic only as long as ``jax.random.PRNGKey`` keeps producing
+Threefry key data.  An environment (or future jax default) switching to the
+``rbg``/``unsafe_rbg`` impl would silently re-randomize every check; pin it
+here so tier-1 is bit-deterministic everywhere.
+"""
+import jax
+
+jax.config.update("jax_default_prng_impl", "threefry2x32")

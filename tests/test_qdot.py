@@ -281,3 +281,254 @@ def test_no_policy_model_bitexact_vs_baseline():
     np.testing.assert_array_equal(
         np.asarray(model._logits(params, h), np.float32),
         np.asarray(h @ w, np.float32))
+
+
+# ------------------------------------------------------- qeinsum (batched) --
+BMM_EQN = "emk,ekn->emn"
+
+
+def _ref_bsite(spec, site, a3, b3, words):
+    """Pure-jnp reference for one *batched* GEMM site: the site fold, then
+    the per-batch-slice fold, then the counter-derived bits — the exact
+    derivation the oracle-mode batched kernel path uses."""
+    w = P.fold_words(words, site)
+    outs = []
+    for e in range(a3.shape[0]):
+        we = P.fold_words(w, e)
+        bits = common.counter_bits(we[0], we[1],
+                                   (a3.shape[1], b3.shape[2]))
+        outs.append(rounding.round_to_format(
+            a3[e] @ b3[e], spec.fmt, spec.mode, bits=bits, eps=spec.eps))
+    return jnp.stack(outs)
+
+
+@pytest.mark.parametrize("preset", sorted(P.PRESETS))
+def test_qeinsum_oracle_bitexact_vs_jnp_reference(preset):
+    """Batched forward and both backward transpose contractions of
+    qeinsum are bit-exact against the pure-jnp reference VJP."""
+    pol = dataclasses.replace(P.get_policy(preset), oracle=True)
+    base = common.derive_seed(KEY, 6)
+    tag = 4
+    ctx = P.QuantCtx(pol, base)
+    a = _data((3, 48, 32), seed=21)
+    b = _data((3, 32, 40), seed=22)
+    g = _data((3, 48, 40), seed=23)
+
+    out, vjp = jax.vjp(
+        lambda a_, b_: P.qeinsum(BMM_EQN, a_, b_, ctx, tag=tag), a, b)
+    da, db = vjp(g)
+
+    if pol.gemm_identity:       # fp32 preset: the early plain-einsum path
+        w_out, w_vjp = jax.vjp(
+            lambda a_, b_: jnp.einsum(BMM_EQN, a_, b_), a, b)
+        w_da, w_db = w_vjp(g)
+    else:
+        words = P.fold_words(base, tag)
+        w_out = _ref_bsite(pol.fwd, P.SITE_FWD, a, b, words)
+        w_da = _ref_bsite(pol.dgrad, P.SITE_DGRAD, g,
+                          jnp.swapaxes(b, 1, 2), words)
+        w_db = _ref_bsite(pol.wgrad, P.SITE_WGRAD,
+                          jnp.swapaxes(a, 1, 2), g, words)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(w_out))
+    np.testing.assert_array_equal(np.asarray(da), np.asarray(w_da))
+    np.testing.assert_array_equal(np.asarray(db), np.asarray(w_db))
+    if not pol.fwd.is_identity:
+        assert bool(jnp.all(rounding.is_representable(out, pol.fwd.fmt)))
+
+
+def test_qeinsum_identity_is_plain_einsum():
+    """quant=None (and the fp32 preset) must be byte-identical to
+    jnp.einsum for every supported contraction pattern — the default-path
+    protection for the rerouted MoE/MLA/SSM/RWKV sites."""
+    a = _data((2, 12, 8))
+    b = _data((2, 8, 10), seed=1)
+    np.testing.assert_array_equal(
+        np.asarray(P.qeinsum(BMM_EQN, a, b, None)),
+        np.asarray(jnp.einsum(BMM_EQN, a, b)))
+    q = _data((2, 6, 3, 8), seed=2)      # per-head MLA-style contraction
+    w = _data((5, 3, 8), seed=3)
+    np.testing.assert_array_equal(
+        np.asarray(P.qeinsum("bqhd,rhd->bqhr", q, w, None)),
+        np.asarray(jnp.einsum("bqhd,rhd->bqhr", q, w)))
+
+
+def test_qeinsum_rejects_non_contractions():
+    a, b = _data((4, 8)), _data((8, 4), seed=1)
+    with pytest.raises(ValueError):
+        P._parse_einsum("ab,bc")            # no output
+    with pytest.raises(ValueError):
+        P._parse_einsum("ab,bc->a")         # summed-out free label
+    with pytest.raises(ValueError):
+        P._parse_einsum("ab,ba->ab")        # no contracted label
+
+
+G_SLICES = 2
+
+
+def _beinsum_site_samples(site_attr, spec):
+    """qeinsum (+VJP) shaped so the active batched site is an outer
+    product of constants: every output element is an independent rounding
+    of the exact value X0 (cf. _site_samples)."""
+    pol = _site_policy(site_attr, spec)
+    ctx = P.QuantCtx(pol, common.derive_seed(KEY, 2))
+    R, C = N_ROWS, N_COLS // G_SLICES
+    if site_attr == "fwd":
+        a = jnp.full((G_SLICES, R, 1), X0, jnp.float32)
+        b = jnp.ones((G_SLICES, 1, C), jnp.float32)
+        out = P.qeinsum(BMM_EQN, a, b, ctx)
+        return np.asarray(out, np.float64)
+    if site_attr == "dgrad":
+        a = jnp.ones((G_SLICES, R, C), jnp.float32)
+        b = jnp.ones((G_SLICES, C, 1), jnp.float32)
+        g = jnp.full((G_SLICES, R, 1), X0, jnp.float32)
+        _, vjp = jax.vjp(lambda a_: P.qeinsum(BMM_EQN, a_, b, ctx), a)
+        (da,) = vjp(g)
+        return np.asarray(da, np.float64)
+    a = jnp.full((G_SLICES, 1, R), X0, jnp.float32)
+    b = jnp.ones((G_SLICES, R, C), jnp.float32)
+    g = jnp.ones((G_SLICES, 1, C), jnp.float32)
+    _, vjp = jax.vjp(lambda b_: P.qeinsum(BMM_EQN, a, b_, ctx), b)
+    (db,) = vjp(g)
+    return np.asarray(db, np.float64)
+
+
+@pytest.mark.parametrize("site", ["fwd", "dgrad", "wgrad"])
+def test_qeinsum_prng_sr_unbiased_and_eq5_variance(site):
+    """Eqs. (3)-(5) hold per batched site: SR is unbiased with variance
+    frac(1-frac)·ulp² at the interior point."""
+    err = _beinsum_site_samples(
+        site, rounding.spec("binary8", "sr")).ravel() - X0
+    q = float(rounding.ulp(jnp.float32(X0), "binary8"))
+    _, _, frac_a, _ = rounding.magnitude_decompose(
+        jnp.float32(X0), rounding.get_format("binary8"))
+    frac = float(frac_a)
+    want_var = frac * (1.0 - frac) * q * q
+    assert abs(err.mean()) < _clt_tol(want_var, err.size), (site, err.mean())
+    assert abs(err.var() - want_var) < 0.05 * want_var, (site, err.var())
+
+
+@pytest.mark.parametrize("site", ["fwd", "dgrad", "wgrad"])
+def test_qeinsum_prng_sr_eps_bias_eq3(site):
+    eps = 0.2
+    err = _beinsum_site_samples(
+        site, rounding.spec("binary8", "sr_eps", eps)).ravel() - X0
+    q = float(rounding.ulp(jnp.float32(X0), "binary8"))
+    want = eps * q      # sign(X0) = +1
+    var = err.var()
+    assert abs(err.mean() - want) < _clt_tol(var, err.size), (site, err.mean())
+
+
+def test_qeinsum_batch_slices_draw_independent_streams():
+    """Two batch slices (two experts at the same step) must not share a
+    bit stream: per-coordinate round-up decisions are uncorrelated."""
+    samples = _beinsum_site_samples("fwd", rounding.spec("binary8", "sr"))
+    up0 = (samples[0] > X0).astype(np.float64).ravel()
+    up1 = (samples[1] > X0).astype(np.float64).ravel()
+    corr = np.corrcoef(up0, up1)[0, 1]
+    assert abs(corr) < 5.0 / np.sqrt(up0.size), corr
+    # and the slices are genuinely distinct streams, not offset copies
+    assert np.any(samples[0] != samples[1])
+
+
+# ----------------------------------------- rerouting bit-identity (default) --
+REROUTED_ARCHS = [
+    "qwen3-moe-30b-a3b",    # batched expert einsums
+    "deepseek-v2-236b",     # MLA (+ absorbed decode below)
+    "zamba2-1.2b",          # SSM in/out projections
+    "rwkv6-7b",             # RWKV time-mix + channel-mix projections
+]
+
+
+@pytest.mark.parametrize("arch", REROUTED_ARCHS)
+def test_rerouted_families_bitexact_without_policy(arch):
+    """gemm_policy=None and the fp32 preset are byte-identical for every
+    rerouted family: the qdense/qeinsum identity fast paths add nothing to
+    the default graph."""
+    cfg = reduced(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(KEY)
+    batch = _batch(cfg)
+    h_none, _, _ = model.hidden_states(params, batch, rng=KEY)
+    m_fp32 = build_model(dataclasses.replace(cfg, gemm_policy="fp32"))
+    h_fp32, _, _ = m_fp32.hidden_states(params, batch, rng=KEY)
+    np.testing.assert_array_equal(np.asarray(h_none, np.float32),
+                                  np.asarray(h_fp32, np.float32))
+
+
+def test_absorbed_decode_bitexact_without_policy():
+    """Absorbed-MLA decode: quant=None routing through qeinsum/qdense is
+    byte-identical to the fp32 preset (protects the serving default)."""
+    cfg = reduced(get_config("deepseek-v2-236b"))
+    cfg = dataclasses.replace(
+        cfg, mla=dataclasses.replace(cfg.mla, absorb=True))
+    m_none = build_model(cfg)
+    m_fp32 = build_model(dataclasses.replace(cfg, gemm_policy="fp32"))
+    params = m_none.init(KEY)
+    caches = m_none.init_decode_cache(batch=2, max_len=4)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    l_none, _ = m_none.decode_step(params, caches, tok, 0)
+    l_fp32, _ = m_fp32.decode_step(params, caches, tok, 0)
+    np.testing.assert_array_equal(np.asarray(l_none, np.float32),
+                                  np.asarray(l_fp32, np.float32))
+
+
+# --------------------------------------------------------- serving parity --
+def _prefill_decode_logits(cfg):
+    """(prefill next-token logits, teacher-forced decode logits) for the
+    last prompt position — the serve.py prefill-scan vs decode contract."""
+    model = build_model(cfg)
+    params = model.init(KEY)
+    toks = jax.random.randint(jax.random.fold_in(KEY, 9), (2, 8), 0,
+                              cfg.vocab_size)
+    next_logits, _ = model.prefill(params, {"tokens": toks}, rng=KEY)
+    caches = model.init_decode_cache(2, 8)
+    lg = None
+    for t in range(8):
+        lg, caches = model.decode_step(params, caches, toks[:, t:t + 1], t)
+    return (np.asarray(next_logits[:, -1], np.float32),
+            np.asarray(lg[:, -1], np.float32))
+
+
+def test_serving_prefill_decode_consistency_deterministic_quant():
+    """Under the deterministic bf16-rn policy, prefill and decode round
+    the same GEMM results the same way: logits agree to the baseline
+    flash-vs-sdpa tolerance and pick the same next token."""
+    cfg = dataclasses.replace(reduced(get_config("smollm-360m")),
+                              gemm_policy="bf16-rn")
+    a, b = _prefill_decode_logits(cfg)
+    np.testing.assert_allclose(a, b, rtol=0.05, atol=0.05)
+    # the winning tokens must be interchangeable within the same path
+    # tolerance (strict argmax equality would flip on near-tied logits —
+    # prefill runs flash attention, decode the dense masked path)
+    b_at_a = np.take_along_axis(b, a.argmax(-1)[:, None], axis=-1)[:, 0]
+    assert np.all(b.max(-1) - b_at_a < 0.05), b.max(-1) - b_at_a
+
+
+def test_serving_prefill_decode_consistency_stochastic_quant():
+    """Under binary8-paper SR the two paths draw independent streams; the
+    logits must stay within a few binary8 ulps and strongly correlated
+    (deterministic given the pinned seeds)."""
+    cfg = dataclasses.replace(reduced(get_config("smollm-360m")),
+                              gemm_policy="binary8-paper")
+    a, b = _prefill_decode_logits(cfg)
+    assert np.all(np.isfinite(a)) and np.all(np.isfinite(b))
+    assert np.abs(a - b).max() < 1.0, np.abs(a - b).max()
+    corr = np.corrcoef(a.ravel(), b.ravel())[0, 1]
+    assert corr > 0.85, corr
+
+
+def test_serving_absorbed_mla_decode_honors_policy():
+    """The absorbed-MLA decode path must consume the policy (the former
+    gap): under binary8-paper its logits land on different values than the
+    unquantized absorbed decode, stay finite, and remain consistent with
+    the quantized prefill."""
+    cfg = reduced(get_config("deepseek-v2-236b"))
+    cfg = dataclasses.replace(
+        cfg, mla=dataclasses.replace(cfg.mla, absorb=True))
+    a0, b0 = _prefill_decode_logits(cfg)                       # baseline
+    cfgq = dataclasses.replace(cfg, gemm_policy="binary8-paper")
+    a1, b1 = _prefill_decode_logits(cfgq)
+    assert np.any(b1 != b0)         # the decode path is actually rounding
+    assert np.all(np.isfinite(b1))
+    corr = np.corrcoef(a1.ravel(), b1.ravel())[0, 1]
+    assert corr > 0.7, corr
