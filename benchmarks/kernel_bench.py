@@ -4,12 +4,17 @@ Wall-times on this CPU container are *not* TPU performance; what we measure
 here is (a) the pure-jnp rounded-update path vs the fp32 baseline (the
 software-emulation overhead a user pays on CPU), (b) the fused Pallas
 update in interpret mode — explicit-bits and in-kernel-PRNG flavours, and
-the whole-tree single-``pallas_call`` step — and (c) the derived HBM-traffic
-model (bytes/element unfused vs fused vs fused+PRNG) that drives the TPU
-roofline argument in EXPERIMENTS.md §Perf.
+the whole-tree single-``pallas_call`` step —, (c) the quantized-GEMM path
+(autotuned blocks, fused FFN epilogue, packed storage), and (d) the derived
+HBM-traffic model (bytes/element) that drives the TPU roofline argument in
+EXPERIMENTS.md §Perf.
 
 ``rows()`` output feeds both the CSV emitter and BENCH_kernels.json
-(benchmarks/run.py), so the perf trajectory is tracked across PRs.
+(benchmarks/run.py; schema ``bench_kernels_v2``), so the perf trajectory is
+tracked across PRs.  Every row is ``(name, us, derived, iters)`` — the
+iteration count makes the wall-clock columns comparable across runs; rows
+with ``us > 0`` and ``derived > 0`` report *slowdown ratios* (higher is
+worse) and are the ones the CI perf gate (benchmarks/perf_gate.py) guards.
 """
 from __future__ import annotations
 
@@ -19,8 +24,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import gd, rounding
-from repro.kernels import common as kcommon, ops
+from repro.kernels import autotune, common as kcommon, ops
+from repro.kernels.qmatmul import qmatmul_batched_prng_p, qmatmul_prng_p
 from repro.kernels.tree_update import fused_tree_update
+from repro.models import ffn
 from repro.optim import base as optim_base
 from repro.precision import policy as qpol
 
@@ -40,15 +47,40 @@ TRAFFIC_FUSED = 24.0
 TRAFFIC_FUSED_PRNG = 12.0
 TRAFFIC_FP32 = 12.0
 
+# Packed-storage GEMM traffic (square M=N=K, f32 operands).  The PRNG-mode
+# rounded GEMM moves read-a + read-b + write-out; packing the rounded
+# output to uint8 code words (binary8/e4m3) cuts the write stream 4x, and
+# a consuming kernel that decodes the packed operand on load
+# (qmatmul a_fmt=...) cuts its read stream 4x too:
+#   fp32 out            4 + 4 + 4 = 12 B/elt -> ratio 1.00 (the old row)
+#   packed out          4 + 4 + 1 =  9 B/elt -> ratio 0.75
+#   packed in + out     1 + 4 + 1 =  6 B/elt -> ratio 0.50 (chained layers)
+PACKED_OUT_B_PER_ELT = 1.0
+TRAFFIC_GEMM_PACKED_OUT_RATIO = 9.0 / 12.0
+TRAFFIC_GEMM_PACKED_CHAIN_RATIO = 6.0 / 12.0
 
-def _time(fn, *args, iters: int = 20) -> float:
-    """Mean wall-time per call in us: one explicit warmup (compile), then
-    ``iters`` timed calls, each synchronized with block_until_ready."""
-    jax.block_until_ready(fn(*args))            # compile + warmup
-    t0 = time.perf_counter()
+ITERS = 20
+
+
+def _time_many(fns, iters: int = ITERS):
+    """Median wall-time per call in us for several zero-arg callables,
+    timed round-robin (a, b, ..., a, b, ...) after one warmup each.
+
+    The derived columns are *ratios* between rows of one group; the
+    interleaving makes machine-load drift hit numerator and denominator
+    alike, and the median drops scheduler spikes — both matter for the
+    20% CI perf gate on shared runners.
+    """
+    import numpy as np
+    for fn in fns:
+        jax.block_until_ready(fn())             # compile + warmup
+    samples = [[] for _ in fns]
     for _ in range(iters):
-        jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / iters * 1e6
+        for i, fn in enumerate(fns):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            samples[i].append(time.perf_counter() - t0)
+    return [float(np.median(s)) * 1e6 for s in samples]
 
 
 def paper_cfg() -> gd.GDRounding:
@@ -58,7 +90,50 @@ def paper_cfg() -> gd.GDRounding:
                          sub_v="grad")
 
 
+# Benchmark GEMM shapes (also the shapes `run.py --autotune` refreshes).
+GEMM_M = 512                     # 512^3 single GEMM
+BATCH_E, BATCH_M = 8, 256        # 8 x 256^3 stacked slices (same MACs)
+
+
+def autotune_refresh(sidecar: str = autotune.DEFAULT_SIDECAR,
+                     iters: int = 3) -> None:
+    """Re-time candidate block tilings for the benchmark GEMM shapes and
+    write the JSON sidecar (the ``run.py --autotune`` entry point)."""
+    key = jax.random.PRNGKey(0)
+    m = GEMM_M
+    A = jax.random.normal(key, (m, m), jnp.float32) * 0.1
+    B = jax.random.normal(jax.random.fold_in(key, 1), (m, m),
+                          jnp.float32) * 0.1
+    seed = kcommon.derive_seed(key, 0)
+
+    def launch2d(blocks):
+        bm, bn, bk = blocks
+        fn = jax.jit(lambda a_, b_: qmatmul_prng_p(
+            a_, b_, seed, "binary8", "sr", bm=bm, bn=bn, bk=bk))
+        return lambda: fn(A, B)
+
+    autotune.autotune(launch2d, m, m, m, mode="sr", iters=iters)
+
+    E, mb = BATCH_E, BATCH_M
+    Ab = jax.random.normal(jax.random.fold_in(key, 4), (E, mb, mb),
+                           jnp.float32) * 0.1
+    Bb = jax.random.normal(jax.random.fold_in(key, 5), (E, mb, mb),
+                           jnp.float32) * 0.1
+    seeds = qpol.slice_words(seed, E)
+
+    def launchb(blocks):
+        be, bm, bn, bk = blocks
+        fn = jax.jit(lambda a_, b_: qmatmul_batched_prng_p(
+            a_, b_, seeds, "binary8", "sr", be=be, bm=bm, bn=bn, bk=bk))
+        return lambda: fn(Ab, Bb)
+
+    autotune.autotune(launchb, mb, mb, mb, E=E, mode="sr", iters=iters)
+    autotune.save_sidecar(sidecar)
+    print(f"# wrote {sidecar}")
+
+
 def run(n: int = 1 << 20):
+    autotune.load_sidecar()     # pick up a committed sidecar if present
     key = jax.random.PRNGKey(0)
     x = jax.random.normal(key, (n,), jnp.float32)
     g = jax.random.normal(jax.random.fold_in(key, 1), (n,), jnp.float32)
@@ -73,12 +148,7 @@ def run(n: int = 1 << 20):
     upd_fused_prng = lambda x_, g_, k_: ops.fused_qupdate_prng(
         x_, g_, 0.01, k_, cfg)
 
-    us_fp32 = _time(upd_fp32, x, g)
-    us_jnp = _time(upd_jnp, x, g, key)
-    us_fused_bits = _time(upd_fused_bits, x, g, key)
-    us_fused_prng = _time(upd_fused_prng, x, g, key)
-
-    # -- whole-tree step: many-leaf pytree, ONE pallas_call ----------------
+    # whole-tree step: many-leaf pytree, ONE pallas_call
     leaf = n // 16
     tree_p = {f"w{i}": jax.lax.dynamic_slice_in_dim(x, i * leaf, leaf)
               for i in range(16)}
@@ -86,18 +156,29 @@ def run(n: int = 1 << 20):
               for i in range(16)}
     upd_tree = jax.jit(lambda p_, g_, k_: fused_tree_update(
         p_, g_, 0.01, cfg, k_, 0, mode="prng"))
-    us_tree = _time(upd_tree, tree_p, tree_g, key)
 
+    # sr_cast vs the fp32 memcpy-bound baseline of the same size
+    memcpy = jax.jit(lambda x_: x_ * 1.0)
     cast = jax.jit(lambda x_, k_: rounding.round_to_format(
         x_, "binary8", "sr", key=k_))
-    us_cast = _time(cast, x, key)
+
+    (us_fp32, us_jnp, us_fused_bits, us_fused_prng, us_tree, us_memcpy,
+     us_cast) = _time_many([
+         lambda: upd_fp32(x, g),
+         lambda: upd_jnp(x, g, key),
+         lambda: upd_fused_bits(x, g, key),
+         lambda: upd_fused_prng(x, g, key),
+         lambda: upd_tree(tree_p, tree_g, key),
+         lambda: memcpy(x),
+         lambda: cast(x, key),
+     ])
 
     # -- quantized-GEMM path (eq. 8a): qdot fwd / dgrad / wgrad ------------
-    # Each site is one result-rounded GEMM through qmatmul_prng_p; in PRNG
-    # mode the HBM streams are identical to an fp32 GEMM (read a, read b,
-    # write out), so the memory-bound TPU projection is ratio 1.0 — the
-    # wall-clocks below are CPU interpret-mode software-emulation overhead.
-    m = 512
+    # Each site is one result-rounded GEMM through qmatmul_prng_p with
+    # autotuned blocks; wall-clocks are CPU interpret-mode software-
+    # emulation overhead, the ratios (vs the fp32 jnp GEMM of the same
+    # shape) are the perf-gate quantities.
+    m = GEMM_M
     A = jax.random.normal(jax.random.fold_in(key, 2), (m, m),
                           jnp.float32) * 0.1
     B = jax.random.normal(jax.random.fold_in(key, 3), (m, m),
@@ -114,16 +195,52 @@ def run(n: int = 1 << 20):
     q_wgrad = jax.jit(lambda a_, g_: qpol.site_matmul(
         pol, qpol.SITE_WGRAD, a_.T, g_, words))
 
-    us_dot = _time(dot_fp32, A, B)
-    us_qfwd = _time(q_fwd, A, B)
-    us_qdgrad = _time(q_dgrad, G, B)
-    us_qwgrad = _time(q_wgrad, A, G)
+    # few-random-bits SR: same fwd GEMM drawing 16 bits/element
+    ctx16 = qpol.QuantCtx(qpol.get_policy("binary8-paper-r16"), ctx.words)
+    q_fwd16 = jax.jit(lambda a_, b_: qpol.qdot(a_, b_, ctx16))
+
+    # packed output storage: same GEMM emitting uint8 code words
+    q_fwd_packed = jax.jit(lambda a_, b_: qpol.site_matmul(
+        pol, qpol.SITE_FWD, a_, b_, words, out_packed=True))
+
+    (us_dot, us_qfwd, us_qdgrad, us_qwgrad, us_qfwd16,
+     us_qfwd_packed) = _time_many([
+         lambda: dot_fp32(A, B),
+         lambda: q_fwd(A, B),
+         lambda: q_dgrad(G, B),
+         lambda: q_wgrad(A, G),
+         lambda: q_fwd16(A, B),
+         lambda: q_fwd_packed(A, B),
+     ])
+
+    # -- fused GLU-FFN prefix vs the unfused fp32 swiglu -------------------
+    d_model, d_ff = 512, 1024
+    Xf = jax.random.normal(jax.random.fold_in(key, 6), (m, d_model),
+                           jnp.float32) * 0.1
+    Wg = jax.random.normal(jax.random.fold_in(key, 7), (d_model, d_ff),
+                           jnp.float32) * 0.1
+    Wu = jax.random.normal(jax.random.fold_in(key, 8), (d_model, d_ff),
+                           jnp.float32) * 0.1
+    Wd = jax.random.normal(jax.random.fold_in(key, 9), (d_ff, d_model),
+                           jnp.float32) * 0.1
+    swiglu_fp32 = jax.jit(lambda x_: (
+        jax.nn.silu(x_ @ Wg) * (x_ @ Wu)) @ Wd)
+    ctx_packed = qpol.QuantCtx(qpol.get_policy("binary8-paper-packed"),
+                               ctx.words)
+    qffn = jax.jit(lambda x_: ffn.swiglu_apply(x_, Wg, Wu, Wd, ctx))
+    qffn_packed = jax.jit(lambda x_: ffn.swiglu_apply(x_, Wg, Wu, Wd,
+                                                      ctx_packed))
+    us_swiglu, us_qffn, us_qffn_packed = _time_many([
+        lambda: swiglu_fp32(Xf),
+        lambda: qffn(Xf),
+        lambda: qffn_packed(Xf),
+    ])
 
     # -- batched quantized contraction (qeinsum): 8 x 256^3 stacked slices
     # (same total MACs as the 512^3 single GEMM above) through the
     # batch-gridded kernel with per-slice seed folds — the MoE-expert /
     # per-head-MLA lowering shape
-    E, mb = 8, 256
+    E, mb = BATCH_E, BATCH_M
     Ab = jax.random.normal(jax.random.fold_in(key, 4), (E, mb, mb),
                            jnp.float32) * 0.1
     Bb = jax.random.normal(jax.random.fold_in(key, 5), (E, mb, mb),
@@ -131,42 +248,66 @@ def run(n: int = 1 << 20):
     beq = "emk,ekn->emn"
     bdot_fp32 = jax.jit(lambda a_, b_: jnp.einsum(beq, a_, b_))
     bq_fwd = jax.jit(lambda a_, b_: qpol.qeinsum(beq, a_, b_, ctx))
-    us_bdot = _time(bdot_fp32, Ab, Bb)
-    us_bqfwd = _time(bq_fwd, Ab, Bb)
+    us_bdot, us_bqfwd = _time_many([
+        lambda: bdot_fp32(Ab, Bb),
+        lambda: bq_fwd(Ab, Bb),
+    ])
 
     melt = n / 1e6
     rows = [
-        ("kernel/update_fp32_us_per_Melt", us_fp32 / melt, 1.0),
+        ("kernel/update_fp32_us_per_Melt", us_fp32 / melt, 1.0, ITERS),
         ("kernel/update_rounded_jnp_us_per_Melt", us_jnp / melt,
-         us_jnp / us_fp32),
+         us_jnp / us_fp32, ITERS),
         ("kernel/update_fused_bits_us_per_Melt", us_fused_bits / melt,
-         us_fused_bits / us_fp32),
+         us_fused_bits / us_fp32, ITERS),
         ("kernel/update_fused_prng_us_per_Melt", us_fused_prng / melt,
-         us_fused_prng / us_fp32),
+         us_fused_prng / us_fp32, ITERS),
         ("kernel/update_tree_prng_us_per_Melt", us_tree / melt,
-         us_tree / us_fp32),
-        ("kernel/sr_cast_us_per_Melt", us_cast / melt, 0.0),
-        ("kernel/traffic_unfused_B_per_elt", 0.0, TRAFFIC_UNFUSED),
-        ("kernel/traffic_fused_B_per_elt", 0.0, TRAFFIC_FUSED),
-        ("kernel/traffic_fused_prng_B_per_elt", 0.0, TRAFFIC_FUSED_PRNG),
+         us_tree / us_fp32, ITERS),
+        # sr_cast vs the memcpy-bound fp32 baseline of the same size (the
+        # derived column used to be a dead 0.0)
+        ("kernel/sr_cast_us_per_Melt", us_cast / melt,
+         us_cast / us_memcpy, ITERS),
+        ("kernel/traffic_unfused_B_per_elt", 0.0, TRAFFIC_UNFUSED, 0),
+        ("kernel/traffic_fused_B_per_elt", 0.0, TRAFFIC_FUSED, 0),
+        ("kernel/traffic_fused_prng_B_per_elt", 0.0, TRAFFIC_FUSED_PRNG, 0),
         ("kernel/fusion_speedup_bound", 0.0,
-         TRAFFIC_UNFUSED / TRAFFIC_FUSED_PRNG),
+         TRAFFIC_UNFUSED / TRAFFIC_FUSED_PRNG, 0),
         # memory-bound TPU projection of the whole-tree rounded step vs the
         # fp32 baseline — the acceptance-bound quantity (≤ 3)
         ("kernel/tree_update_roofline_ratio_vs_fp32", 0.0,
-         TRAFFIC_FUSED_PRNG / TRAFFIC_FP32),
+         TRAFFIC_FUSED_PRNG / TRAFFIC_FP32, 0),
         # measured CPU speedup of the kernel path over the per-leaf jnp path
-        ("kernel/fused_prng_vs_jnp_speedup", 0.0, us_jnp / us_fused_prng),
-        # quantized-GEMM sites (512^3 GEMM, binary8 SR result rounding);
-        # derived = CPU overhead ratio vs the fp32 jnp GEMM of that shape
-        ("kernel/qmatmul_fwd_us", us_qfwd, us_qfwd / us_dot),
-        ("kernel/qmatmul_dgrad_us", us_qdgrad, us_qdgrad / us_dot),
-        ("kernel/qmatmul_wgrad_us", us_qwgrad, us_qwgrad / us_dot),
+        ("kernel/fused_prng_vs_jnp_speedup", 0.0, us_jnp / us_fused_prng,
+         ITERS),
+        # quantized-GEMM sites (512^3 GEMM, binary8 SR result rounding,
+        # autotuned blocks); derived = CPU overhead ratio vs the fp32 jnp
+        # GEMM of that shape
+        ("kernel/qmatmul_fwd_us", us_qfwd, us_qfwd / us_dot, ITERS),
+        ("kernel/qmatmul_dgrad_us", us_qdgrad, us_qdgrad / us_dot, ITERS),
+        ("kernel/qmatmul_wgrad_us", us_qwgrad, us_qwgrad / us_dot, ITERS),
+        # few-random-bits SR (16 bits/elt) and packed-uint8-output variants
+        ("kernel/qmatmul_fwd_r16_us", us_qfwd16, us_qfwd16 / us_dot, ITERS),
+        ("kernel/qmatmul_fwd_packed_us", us_qfwd_packed,
+         us_qfwd_packed / us_dot, ITERS),
+        # fused GLU-FFN prefix (gate+up GEMMs + silu + act rounding + down
+        # GEMM) vs the fp32 jnp swiglu of the same shape; the packed
+        # flavour stores the hidden as uint8 and decodes in the down GEMM
+        ("kernel/qffn_swiglu_us", us_qffn, us_qffn / us_swiglu, ITERS),
+        ("kernel/qffn_swiglu_packed_us", us_qffn_packed,
+         us_qffn_packed / us_swiglu, ITERS),
         # batched (8 x 256^3) rounded contraction vs the fp32 einsum of the
         # same shape — the qeinsum/MoE-expert lowering path
-        ("kernel/qmatmul_batched_fwd_us", us_bqfwd, us_bqfwd / us_bdot),
-        # PRNG-mode rounded GEMM moves the same HBM bytes as an fp32 GEMM
-        # (no bits stream): memory-bound TPU projection of eq.-8a cost
-        ("kernel/qmatmul_prng_traffic_ratio_vs_fp32", 0.0, 1.0),
+        ("kernel/qmatmul_batched_fwd_us", us_bqfwd, us_bqfwd / us_bdot,
+         ITERS),
+        # packed-storage GEMM traffic model (see constants above): the
+        # rounded GEMM's HBM bytes vs the fp32 GEMM's, with the output
+        # emitted as 1 B/elt code words (was 1.0 before packed storage)
+        ("kernel/qmatmul_packed_out_B_per_elt", 0.0, PACKED_OUT_B_PER_ELT,
+         0),
+        ("kernel/qmatmul_prng_traffic_ratio_vs_fp32", 0.0,
+         TRAFFIC_GEMM_PACKED_OUT_RATIO, 0),
+        ("kernel/qmatmul_packed_chain_traffic_ratio_vs_fp32", 0.0,
+         TRAFFIC_GEMM_PACKED_CHAIN_RATIO, 0),
     ]
     return rows

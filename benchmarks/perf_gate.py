@@ -1,0 +1,90 @@
+"""CI perf-regression gate over BENCH_kernels.json.
+
+Compares a freshly measured kernels-benchmark JSON against the committed
+baseline and fails (exit 1) when any *slowdown-ratio* row regresses by
+more than ``--tol`` (default 20%).
+
+Which rows are guarded: every row present in BOTH files whose fresh
+``us > 0`` **and** ``derived > 0`` — by the bench_kernels_v2 contract
+(benchmarks/kernel_bench.py) those derived columns are slowdown ratios vs
+an fp32 baseline measured *in the same run*, so machine-speed variance
+cancels and higher is strictly worse.  Derived-only model rows (traffic
+bytes, roofline bounds; ``us == 0``) and the speedup row are excluded.
+Accepts both the v1 and v2 schemas so the gate works across the schema
+bump.
+
+Usage::
+
+    python benchmarks/perf_gate.py --baseline BENCH_kernels.json \
+        --fresh BENCH_kernels.fresh.json [--tol 0.2]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+_SCHEMAS = ("bench_kernels_v1", "bench_kernels_v2")
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    schema = payload.get("schema")
+    if schema not in _SCHEMAS:
+        raise SystemExit(f"{path}: unknown schema {schema!r} "
+                         f"(expected one of {_SCHEMAS})")
+    return payload
+
+
+def gate(baseline_rows: dict, fresh_rows: dict, tol: float):
+    """Returns (failures, compared): lists of (name, old, new) tuples."""
+    failures, compared = [], []
+    for name in sorted(set(baseline_rows) & set(fresh_rows)):
+        old, new = baseline_rows[name], fresh_rows[name]
+        if not (new.get("us", 0) > 0 and new.get("derived", 0) > 0
+                and old.get("derived", 0) > 0):
+            continue
+        compared.append((name, old["derived"], new["derived"]))
+        if new["derived"] > old["derived"] * (1.0 + tol):
+            failures.append((name, old["derived"], new["derived"]))
+    return failures, compared
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_kernels.json",
+                    help="committed baseline JSON")
+    ap.add_argument("--fresh", required=True,
+                    help="freshly measured JSON to check")
+    ap.add_argument("--tol", type=float, default=0.20,
+                    help="allowed relative regression of any slowdown "
+                         "ratio (default 0.20 = 20%%)")
+    args = ap.parse_args()
+
+    baseline, fresh = _load(args.baseline), _load(args.fresh)
+    if baseline.get("n") != fresh.get("n"):
+        raise SystemExit(
+            f"perf gate: workload size mismatch — baseline n="
+            f"{baseline.get('n')} vs fresh n={fresh.get('n')}; ratios are "
+            "only comparable between runs of the same workload (run the "
+            "kernels benchmark without --quick for the committed baseline)")
+    failures, compared = gate(baseline["rows"], fresh["rows"], args.tol)
+    for name, old, new in compared:
+        flag = "FAIL" if (name, old, new) in failures else "ok"
+        print(f"{flag:4s} {name}: {old:.3f} -> {new:.3f} "
+              f"({(new / old - 1) * 100:+.1f}%)")
+    if not compared:
+        raise SystemExit("perf gate: no comparable slowdown-ratio rows "
+                         "between baseline and fresh JSON")
+    if failures:
+        print(f"perf gate: {len(failures)} row(s) regressed more than "
+              f"{args.tol * 100:.0f}% vs the committed baseline",
+              file=sys.stderr)
+        raise SystemExit(1)
+    print(f"perf gate: {len(compared)} slowdown ratios within "
+          f"{args.tol * 100:.0f}% of the committed baseline")
+
+
+if __name__ == "__main__":
+    main()

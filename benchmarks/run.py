@@ -19,17 +19,25 @@ import traceback
 
 
 def _emit(rows):
-    for name, us, derived in rows:
+    for row in rows:
+        name, us, derived = row[0], row[1], row[2]
         print(f"{name},{us:.3f},{derived}")
         sys.stdout.flush()
 
 
-def _write_kernels_json(rows, path: str) -> None:
+def _write_kernels_json(rows, path: str, n: int) -> None:
+    """bench_kernels_v2: each row records its iteration count (0 for
+    derived-only model rows) and the payload records the update workload
+    size ``n`` — ratios are only comparable between runs of the same
+    workload, which the perf gate enforces."""
     payload = {
-        "schema": "bench_kernels_v1",
-        "unit": "us_per_Melt (us column) / ratio-or-bytes (derived column)",
-        "rows": {name: {"us": us, "derived": derived}
-                 for name, us, derived in rows},
+        "schema": "bench_kernels_v2",
+        "n": n,
+        "unit": ("us_per_Melt (us column) / ratio-or-bytes (derived "
+                 "column) / timing iterations (iters)"),
+        "rows": {row[0]: {"us": row[1], "derived": row[2],
+                          "iters": (row[3] if len(row) > 3 else 0)}
+                 for row in rows},
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
@@ -46,8 +54,21 @@ def main() -> None:
     ap.add_argument("--kernels-json", default="BENCH_kernels.json",
                     help="where the kernels benchmark writes its JSON "
                          "(empty string disables)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="re-time candidate qmatmul block tilings for the "
+                         "benchmark shapes and refresh the "
+                         "AUTOTUNE_qmatmul.json sidecar (committed "
+                         "alongside BENCH_kernels.json) before running")
     args, _ = ap.parse_known_args()
     q = args.quick
+
+    # single source of truth for the kernels-bench workload size: passed
+    # to kernel_bench.run AND recorded in the JSON the perf gate trusts
+    n_kernels = (1 << 18) if q else (1 << 20)
+
+    if args.autotune:
+        from benchmarks import kernel_bench
+        kernel_bench.autotune_refresh(iters=1 if q else 3)
 
     from benchmarks import (fig2_stagnation, fig3_quadratic, fig4_mlr,
                             fig5_mlr_lr, fig6_nn, kernel_bench,
@@ -68,7 +89,7 @@ def main() -> None:
         "fig6": lambda: fig6_nn.run(
             epochs=15 if q else 50, sims=1 if q else 2,
             n_train=1000 if q else 3000, n_test=400 if q else 800),
-        "kernels": lambda: kernel_bench.run(n=(1 << 18) if q else (1 << 20)),
+        "kernels": lambda: kernel_bench.run(n=n_kernels),
         "roofline": lambda: roofline_report.run(),
     }
     only = set(args.only.split(",")) if args.only else None
@@ -82,7 +103,7 @@ def main() -> None:
             rows = fn()
             _emit(rows)
             if name == "kernels" and args.kernels_json:
-                _write_kernels_json(rows, args.kernels_json)
+                _write_kernels_json(rows, args.kernels_json, n=n_kernels)
             print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
         except Exception:
             failures += 1

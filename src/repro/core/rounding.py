@@ -98,6 +98,14 @@ def _float_exponent(x):
     return jnp.where(raw_exp > 0, raw_exp - _F32_EXP_BIAS, -_F32_EXP_BIAS)
 
 
+def _narrow_grid(fmt: FPFormat) -> bool:
+    """Whether every grid-spacing exponent of ``fmt`` keeps 2^±qe a
+    *normal* float32, so a single exact `_pow2` multiply replaces the
+    two-step `_exact_scale` (binary8/e4m3/binary16: yes; bfloat16: its
+    subnormal-range quantum 2^-133 would flush to zero)."""
+    return fmt.quantum_min_exp >= -126 and fmt.emax - fmt.precision < 126
+
+
 def magnitude_decompose(x, fmt: FPFormat):
     """Decompose |x| on the target rounding grid.
 
@@ -106,10 +114,22 @@ def magnitude_decompose(x, fmt: FPFormat):
       quantum:   grid spacing (ulp) at x (float32, exact power of two).
       frac:      (|x| - floor_mag)/quantum in [0, 1) (float32, exact).
       fy:        floor_mag / quantum as float32 integer (< 2**precision).
+
+    For narrow-exponent formats (``_narrow_grid``) the power-of-two
+    scalings collapse to one exact multiply each — the products are a
+    ≤24-bit integer significand times a normal power of two, so no step
+    ever rounds; bit-identical to the generic two-step path.
     """
     x = x.astype(jnp.float32)
     mag = jnp.abs(x)
     qe = _quantum_exponent(x, fmt)
+    if _narrow_grid(fmt):
+        quantum = _pow2(qe)
+        y = mag * _pow2(-qe)
+        fy = jnp.floor(y)
+        frac = y - fy
+        floor_mag = fy * quantum
+        return floor_mag, quantum, frac, fy
     y = _exact_scale(mag, -qe)
     fy = jnp.floor(y)
     frac = y - fy
@@ -130,6 +150,8 @@ def _quantum_exponent(x, fmt: FPFormat):
 def _ceil_from_decompose(x, fy, fmt: FPFormat):
     """(fy + 1) * 2**qe, exact, avoiding subnormal intermediates."""
     qe = _quantum_exponent(x, fmt)
+    if _narrow_grid(fmt):
+        return (fy + 1.0) * _pow2(qe)
     return _exact_scale(fy + 1.0, qe)
 
 
@@ -156,9 +178,31 @@ def _p_round_up(mode, frac, fy, sign_x, eps, sign_v):
     raise ValueError(f"unknown rounding mode {mode!r}")
 
 
-def _uniform_from_bits(bits):
-    """uint32 bits -> uniform float32 in [0, 1) with 24-bit resolution."""
-    return (bits >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2.0 ** -24)
+RAND_BITS_CHOICES = (8, 16, 32)
+
+
+def _uniform_from_bits(bits, rand_bits: int = 32):
+    """Random bits -> uniform float32 in [0, 1).
+
+    ``rand_bits=32`` (default): ``bits`` is a full uint32 word; the top 24
+    bits give a uniform with float32-exact resolution — the legacy/oracle
+    derivation, bit-compatible with every pre-existing stream.
+
+    ``rand_bits∈{8, 16}`` (few-random-bits SR, Fitzgibbon & Felix 2025;
+    Xia et al. 2020): ``bits`` holds an ``rand_bits``-bit value in its low
+    bits and the uniform is ``(b + ½)·2^-r`` — the half-ulp offset centres
+    each probability cell, so the SR round-up probability becomes the
+    *nearest* r-bit quantization of ``frac`` and the residual bias is
+    bounded by ``2^-(r+1)`` ulp (vs ``2^-r`` for truncation).
+    """
+    if rand_bits == 32:
+        return (bits >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2.0 ** -24)
+    if rand_bits not in RAND_BITS_CHOICES:
+        raise ValueError(f"rand_bits must be one of {RAND_BITS_CHOICES}, "
+                         f"got {rand_bits}")
+    mask = jnp.uint32((1 << rand_bits) - 1)
+    return ((bits & mask).astype(jnp.float32) + jnp.float32(0.5)) \
+        * jnp.float32(2.0 ** -rand_bits)
 
 
 def round_to_format(
@@ -171,6 +215,7 @@ def round_to_format(
     eps: float = 0.0,
     v: Optional[jax.Array] = None,
     overflow: str = "saturate",
+    rand_bits: int = 32,
 ):
     """Round float32 array ``x`` onto the grid of ``fmt`` using ``mode``.
 
@@ -180,10 +225,13 @@ def round_to_format(
       mode: one of ``ALL_MODES``.
       key: PRNG key for stochastic modes (ignored if ``bits`` given).
       bits: uint32 array, same shape as x, of random bits (stochastic modes).
+        With ``rand_bits < 32`` only the low ``rand_bits`` bits are consumed.
       eps: the ε of SRε / signed-SRε (paper Definitions 2/3), in (0, 1).
       v: bias-direction array for signed-SRε (paper's ``v``; e.g. the gradient
         component matching each x element).  ``sign(v)==0`` degrades to SR.
       overflow: "saturate" (clamp to ±xmax; default) or "inf".
+      rand_bits: random bits consumed per element (32, 16 or 8); see
+        ``_uniform_from_bits`` for the few-random-bits SR semantics.
 
     Returns:
       float32 array of values exactly representable in ``fmt``.
@@ -198,7 +246,7 @@ def round_to_format(
             if key is None:
                 raise ValueError(f"mode {mode!r} needs `key` or `bits`")
             bits = jax.random.bits(key, x.shape, jnp.uint32)
-        u = _uniform_from_bits(bits)
+        u = _uniform_from_bits(bits, rand_bits)
     else:
         u = jnp.full(x.shape, 0.5, jnp.float32)
 
@@ -294,15 +342,27 @@ def predecessor(x, fmt):
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class RoundingSpec:
-    """A rounding policy: target format + scheme + ε.
+    """A rounding policy: target format + scheme + ε + randomness budget.
 
     ``fmt`` may be None meaning "keep full precision" (identity), which is how
     the fp32 baseline is expressed uniformly in the optimizer/trainer.
+
+    ``rand_bits`` is the number of random bits a *stochastic* mode consumes
+    per rounded element (32 = the legacy full-word streams; 16/8 = the
+    few-random-bits SR regime — the PRNG kernels then draw 2×/4× fewer PRF
+    words per output tile, at a residual bias ≤ ``2^-(rand_bits+1)`` ulp).
+    Deterministic modes ignore it.
     """
 
     fmt: Optional[str] = None
     mode: str = "rn"
     eps: float = 0.0
+    rand_bits: int = 32
+
+    def __post_init__(self):
+        if self.rand_bits not in RAND_BITS_CHOICES:
+            raise ValueError(f"rand_bits must be one of {RAND_BITS_CHOICES}, "
+                             f"got {self.rand_bits}")
 
     @property
     def is_identity(self) -> bool:
@@ -319,12 +379,14 @@ class RoundingSpec:
         if self.is_identity:
             return jnp.asarray(x, jnp.float32)
         return round_to_format(
-            x, self.fmt, self.mode, key=key, bits=bits, eps=self.eps, v=v)
+            x, self.fmt, self.mode, key=key, bits=bits, eps=self.eps, v=v,
+            rand_bits=self.rand_bits)
 
 
 IDENTITY = RoundingSpec(None)
 
 
-def spec(fmt=None, mode="rn", eps=0.0) -> RoundingSpec:
+def spec(fmt=None, mode="rn", eps=0.0, rand_bits: int = 32) -> RoundingSpec:
     """Convenience constructor."""
-    return RoundingSpec(None if fmt is None else get_format(fmt).name, mode, eps)
+    return RoundingSpec(None if fmt is None else get_format(fmt).name, mode,
+                        eps, rand_bits)

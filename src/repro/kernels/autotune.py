@@ -1,0 +1,255 @@
+"""Shape-keyed block-size autotuner for the qmatmul kernel family.
+
+The Pallas GEMM kernels are tiled by (bm, bn, bk) (plus a batch-block
+``be`` for the stacked variants), and the best tiling depends on the
+problem shape *and* the backend: under ``interpret=True`` (CPU CI) every
+grid step pays emulator overhead, so the optimum covers each dimension in
+as few blocks as possible; on real TPU the optimum saturates the MXU while
+keeping the working set inside VMEM.  This module is the single source of
+block defaults:
+
+* :func:`get_blocks` / :func:`get_batch_blocks` — what ``qdot`` /
+  ``qeinsum`` / ``kernels.ops`` call when the caller passes ``None`` block
+  sizes.  Lookup order: in-process cache (seeded from the JSON sidecar)
+  → backend heuristic.  Pure Python, zero tracing cost, and — because
+  ``None`` is a single static value — every caller of a given shape class
+  shares one jit trace (the former per-(bm, bn, bk) retrace bug).
+* :func:`autotune` — times a caller-supplied kernel launcher over the
+  candidate tilings for one shape, caches the winner in-process and
+  (via :func:`save_sidecar`) in ``AUTOTUNE_qmatmul.json``, committed
+  alongside ``BENCH_kernels.json`` by ``benchmarks/run.py --autotune``.
+
+Cache keys are exact ``(M, N, K, E, dtype, mode, backend)`` tuples —
+rounded-GEMM results in PRNG mode on real TPU depend on the block
+partition (the hardware PRNG is seeded per block index), so a cached
+entry must never silently apply to a *different* shape.
+
+Sidecar format (``qmatmul_autotune_v1``)::
+
+    {"schema": "qmatmul_autotune_v1",
+     "entries": {"M=512,N=512,K=512,E=0,dtype=float32,mode=sr,backend=interpret":
+                 {"blocks": [512, 512, 512], "us": 8123.4}}}
+
+(4-long ``blocks`` lists are batched entries: ``[be, bm, bn, bk]``.)
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+SCHEMA = "qmatmul_autotune_v1"
+DEFAULT_SIDECAR = "AUTOTUNE_qmatmul.json"
+
+# interpret mode: emulator overhead is per grid step, so cover each dim in
+# one block when possible; the caps bound the block working set for huge
+# problems (2048² f32 accumulator = 16 MiB — fine for a host CPU).
+_INTERPRET_CAP_MN = 2048
+_INTERPRET_CAP_K = 4096
+_INTERPRET_CAP_BATCH_ELTS = 1 << 24   # be*bm*bn accumulator budget (64 MiB)
+
+# Mosaic/TPU: MXU-saturating tiles with (bm*bk + bk*bn + 2*bm*bn)·4 B of
+# VMEM working set ≲ 2 MiB; block dims that don't divide the problem are
+# handled by the kernels' masked edge blocks.
+_TPU_BM = _TPU_BN = 256
+_TPU_BK = 512
+
+_CACHE: Dict[str, Tuple[int, ...]] = {}
+_TIMES: Dict[str, float] = {}
+_SIDECAR_TRIED = False
+
+
+def _default_interpret() -> bool:
+    from repro.kernels.common import default_interpret
+    return default_interpret()
+
+
+def backend_name(interpret: Optional[bool] = None) -> str:
+    if interpret is None:
+        interpret = _default_interpret()
+    return "interpret" if interpret else "mosaic"
+
+
+def block_key(M: int, N: int, K: int, *, E: int = 0, dtype: str = "float32",
+              mode: str = "sr", interpret: Optional[bool] = None) -> str:
+    """Canonical cache/sidecar key for one GEMM shape class (E=0: 2-D)."""
+    return (f"M={M},N={N},K={K},E={E},dtype={dtype},mode={mode},"
+            f"backend={backend_name(interpret)}")
+
+
+# ---------------------------------------------------------------------------
+# Heuristic defaults (used when nothing was autotuned for the shape).
+# ---------------------------------------------------------------------------
+def heuristic_blocks(M: int, N: int, K: int, *,
+                     interpret: Optional[bool] = None
+                     ) -> Tuple[int, int, int]:
+    if interpret is None:
+        interpret = _default_interpret()
+    if interpret:
+        return (min(M, _INTERPRET_CAP_MN), min(N, _INTERPRET_CAP_MN),
+                min(K, _INTERPRET_CAP_K))
+    return (min(M, _TPU_BM), min(N, _TPU_BN), min(K, _TPU_BK))
+
+
+def heuristic_batch_blocks(E: int, M: int, N: int, K: int, *,
+                           interpret: Optional[bool] = None
+                           ) -> Tuple[int, int, int, int]:
+    """(be, bm, bn, bk) for the stacked kernels.  ``be > 1`` collapses
+    several batch slices into one grid step — a pure win under interpret
+    (fewer emulated steps); on real TPU the per-slice hardware-PRNG seeding
+    needs one grid step per slice, so ``be`` is pinned to 1 there."""
+    if interpret is None:
+        interpret = _default_interpret()
+    bm, bn, bk = heuristic_blocks(M, N, K, interpret=interpret)
+    if not interpret:
+        return (1, bm, bn, bk)
+    be = max(1, min(E, _INTERPRET_CAP_BATCH_ELTS // max(bm * bn, 1)))
+    return (be, bm, bn, bk)
+
+
+def get_blocks(M: int, N: int, K: int, *, dtype: str = "float32",
+               mode: str = "sr", interpret: Optional[bool] = None
+               ) -> Tuple[int, int, int]:
+    """Autotuned-or-heuristic (bm, bn, bk) for a 2-D rounded GEMM."""
+    _maybe_load_default_sidecar()
+    hit = _CACHE.get(block_key(M, N, K, dtype=dtype, mode=mode,
+                               interpret=interpret))
+    if hit is not None:
+        return tuple(hit[-3:])
+    return heuristic_blocks(M, N, K, interpret=interpret)
+
+
+def get_batch_blocks(E: int, M: int, N: int, K: int, *,
+                     dtype: str = "float32", mode: str = "sr",
+                     interpret: Optional[bool] = None
+                     ) -> Tuple[int, int, int, int]:
+    """Autotuned-or-heuristic (be, bm, bn, bk) for a stacked rounded GEMM."""
+    _maybe_load_default_sidecar()
+    hit = _CACHE.get(block_key(M, N, K, E=E, dtype=dtype, mode=mode,
+                               interpret=interpret))
+    if hit is not None and len(hit) == 4:
+        return tuple(hit)
+    return heuristic_batch_blocks(E, M, N, K, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Timing autotune.
+# ---------------------------------------------------------------------------
+def candidate_blocks(M: int, N: int, K: int, *, E: int = 0,
+                     interpret: Optional[bool] = None
+                     ) -> List[Tuple[int, ...]]:
+    """Distinct candidate tilings for one shape (heuristic included)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    cands = set()
+    sizes = (128, 256, 512, 1024, 2048)
+    for c in sizes:
+        cands.add((min(M, c), min(N, c), min(K, max(c, 256))))
+    cands.add(heuristic_blocks(M, N, K, interpret=interpret))
+    if E:
+        out = set()
+        for bm, bn, bk in cands:
+            bes = {1, E} if interpret else {1}
+            for be in bes:
+                if be * bm * bn <= _INTERPRET_CAP_BATCH_ELTS or be == 1:
+                    out.add((be, bm, bn, bk))
+        out.add(heuristic_batch_blocks(E, M, N, K, interpret=interpret))
+        return sorted(out)
+    return sorted(cands)
+
+
+def autotune(launcher: Callable[[Tuple[int, ...]], Callable[[], object]],
+             M: int, N: int, K: int, *, E: int = 0, dtype: str = "float32",
+             mode: str = "sr", interpret: Optional[bool] = None,
+             iters: int = 3,
+             candidates: Optional[Sequence[Tuple[int, ...]]] = None
+             ) -> Tuple[int, ...]:
+    """Time ``launcher(blocks)()`` over the candidate tilings; cache the
+    winner under this shape's key and return it.
+
+    ``launcher`` maps a blocks tuple — (bm, bn, bk), or (be, bm, bn, bk)
+    when ``E`` is set — to a zero-arg callable that runs the kernel and
+    blocks until the result is ready (compile cost excluded: one warmup
+    call per candidate).
+    """
+    import jax
+    key = block_key(M, N, K, E=E, dtype=dtype, mode=mode, interpret=interpret)
+    best_blocks: Optional[Tuple[int, ...]] = None
+    best_us = float("inf")
+    for blocks in (candidates if candidates is not None
+                   else candidate_blocks(M, N, K, E=E, interpret=interpret)):
+        fn = launcher(tuple(blocks))
+        try:
+            jax.block_until_ready(fn())          # compile + warmup
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                jax.block_until_ready(fn())
+            us = (time.perf_counter() - t0) / iters * 1e6
+        except Exception:
+            continue                             # infeasible tiling
+        if us < best_us:
+            best_us, best_blocks = us, tuple(blocks)
+    if best_blocks is None:
+        raise RuntimeError(f"autotune: no feasible candidate for {key}")
+    _CACHE[key] = best_blocks
+    _TIMES[key] = best_us
+    return best_blocks
+
+
+# ---------------------------------------------------------------------------
+# Persistence (JSON sidecar).
+# ---------------------------------------------------------------------------
+def load_sidecar(path: str = DEFAULT_SIDECAR, *, missing_ok: bool = True) -> int:
+    """Merge a sidecar file into the in-process cache; returns entry count."""
+    if not os.path.exists(path):
+        if missing_ok:
+            return 0
+        raise FileNotFoundError(path)
+    with open(path) as f:
+        payload = json.load(f)
+    if payload.get("schema") != SCHEMA:
+        raise ValueError(f"{path}: expected schema {SCHEMA!r}, "
+                         f"got {payload.get('schema')!r}")
+    n = 0
+    for key, ent in payload.get("entries", {}).items():
+        _CACHE[key] = tuple(int(b) for b in ent["blocks"])
+        if "us" in ent:
+            _TIMES[key] = float(ent["us"])
+        n += 1
+    return n
+
+
+def save_sidecar(path: str = DEFAULT_SIDECAR) -> None:
+    """Write every cached (incl. freshly autotuned) entry to ``path``."""
+    payload = {
+        "schema": SCHEMA,
+        "entries": {
+            key: ({"blocks": list(blocks), "us": round(_TIMES[key], 3)}
+                  if key in _TIMES else {"blocks": list(blocks)})
+            for key, blocks in sorted(_CACHE.items())
+        },
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def _maybe_load_default_sidecar() -> None:
+    """Lazily pick up a committed sidecar from the CWD, once per process."""
+    global _SIDECAR_TRIED
+    if _SIDECAR_TRIED:
+        return
+    _SIDECAR_TRIED = True
+    try:
+        load_sidecar(DEFAULT_SIDECAR, missing_ok=True)
+    except Exception:
+        pass                                     # a bad sidecar never breaks
+
+
+def clear_cache() -> None:
+    """Drop every cached entry (tests)."""
+    global _SIDECAR_TRIED
+    _CACHE.clear()
+    _TIMES.clear()
+    _SIDECAR_TRIED = True

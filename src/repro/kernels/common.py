@@ -32,32 +32,46 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.formats import FPFormat, get_format
 from repro.core.rounding import (RoundingSpec, _ceil_from_decompose,
-                                 _p_round_up, _uniform_from_bits,
-                                 magnitude_decompose)
+                                 _exact_scale, _float_exponent, _p_round_up,
+                                 _uniform_from_bits, magnitude_decompose)
 
 
-def round_block(x, bits, fmt: FPFormat, mode: str, eps: float, v=None):
+def round_block(x, bits, fmt: FPFormat, mode: str, eps: float, v=None,
+                rand_bits: int = 32):
     """Round one block of float32 values; identical math to round_to_format.
 
     ``bits`` may be None for deterministic modes.  ``v`` is the bias
-    direction for signed-SRε.  Saturating overflow policy.
+    direction for signed-SRε.  Saturating overflow policy.  With
+    ``rand_bits < 32`` the low ``rand_bits`` bits of each word are consumed
+    (few-random-bits SR; see rounding._uniform_from_bits).
     """
     x = x.astype(jnp.float32)
     x = jnp.where(jnp.abs(x) < jnp.float32(2.0 ** -126), x * 0.0, x)
 
-    floor_mag, _, frac, fy = magnitude_decompose(x, fmt)
-    ceil_mag = _ceil_from_decompose(x, fy, fmt)
+    floor_mag, quantum, frac, fy = magnitude_decompose(x, fmt)
     sign_x = jnp.sign(x)
-    sign_v = jnp.sign(v.astype(jnp.float32)) if v is not None else jnp.zeros_like(x)
-    p_up = _p_round_up(mode, frac, fy, sign_x, jnp.float32(eps), sign_v)
 
     if bits is None:
         u = jnp.full(x.shape, 0.5, jnp.float32)
     else:
-        u = _uniform_from_bits(bits)
+        u = _uniform_from_bits(bits, rand_bits)
 
-    mag = jnp.where(u < p_up, ceil_mag, floor_mag)
-    mag = jnp.where(frac == 0.0, jnp.abs(x), mag)
+    if mode == "sr" and fmt.quantum_min_exp >= -126:
+        # pure-SR fast path (the GEMM-epilogue hot case): the ceil
+        # neighbour is floor_mag + quantum — exact, because both are
+        # multiples of the same power of two and fy+1 <= 2^precision —
+        # and p_up == frac makes the frac == 0 fix-up a no-op (u >= 0
+        # never rounds up).  Bit-identical to the generic path below;
+        # restricted to formats whose quantum stays f32-normal
+        # (bfloat16's subnormal-range quantum would flush to zero).
+        mag = jnp.where(u < frac, floor_mag + quantum, floor_mag)
+    else:
+        ceil_mag = _ceil_from_decompose(x, fy, fmt)
+        sign_v = jnp.sign(v.astype(jnp.float32)) if v is not None \
+            else jnp.zeros_like(x)
+        p_up = _p_round_up(mode, frac, fy, sign_x, jnp.float32(eps), sign_v)
+        mag = jnp.where(u < p_up, ceil_mag, floor_mag)
+        mag = jnp.where(frac == 0.0, jnp.abs(x), mag)
     mag = jnp.minimum(mag, jnp.float32(fmt.xmax))
     out = jnp.where(sign_x < 0, -mag, mag)
     # negative-zero fix-up (matches round_to_format): sign(-0.0) == 0, so
@@ -71,7 +85,98 @@ def apply_spec_block(spec: RoundingSpec, x, bits, v=None):
     if spec.is_identity:
         return x.astype(jnp.float32)
     return round_block(x, bits if spec.stochastic else None,
-                       get_format(spec.fmt), spec.mode, spec.eps, v=v)
+                       get_format(spec.fmt), spec.mode, spec.eps, v=v,
+                       rand_bits=spec.rand_bits)
+
+
+# ---------------------------------------------------------------------------
+# Packed low-precision storage: format grid values <-> integer code words.
+# ---------------------------------------------------------------------------
+def pack_spec(fmt):
+    """(ebits, mbits, width_bytes, has_nonfinite_field) for a packable fmt.
+
+    The code word is the generic (sign | biased-exponent | mantissa) layout
+    with ``mbits = precision - 1`` mantissa bits and the smallest exponent
+    field that covers ``emin..emax`` plus the subnormal field 0 — for
+    binary8/E5M2, binary16 and bfloat16 this reproduces the IEEE bit layout
+    exactly; e4m3 uses all 16 exponent fields for finite values (the OCP
+    finite-max flavour), so non-finite inputs saturate to ±xmax on encode.
+    Raises for formats wider than 16 bits (nothing to pack).
+    """
+    fmt = get_format(fmt)
+    mbits = fmt.precision - 1
+    n_fields = fmt.emax - fmt.emin + 2          # subnormal field 0 included
+    ebits = max(1, (n_fields - 1).bit_length())
+    total = 1 + ebits + mbits
+    if total > 16:
+        raise ValueError(f"format {fmt.name!r} does not fit a packed "
+                         f"16-bit code word ({total} bits)")
+    width = 1 if total <= 8 else 2
+    has_nf = (1 << ebits) - 1 >= n_fields       # a spare all-ones field
+    return ebits, mbits, width, has_nf
+
+
+def pack_bytes(fmt) -> int:
+    """Bytes per element of the packed representation of ``fmt``."""
+    return pack_spec(fmt)[2]
+
+
+def pack_dtype(fmt):
+    return jnp.uint8 if pack_spec(fmt)[2] == 1 else jnp.uint16
+
+
+def pack_block(x, fmt):
+    """Encode float32 values *already on the fmt grid* as packed codes.
+
+    Inverse of :func:`unpack_block` on grid values.  Out-of-grid inputs are
+    undefined (the epilogues only ever feed it round_block outputs).
+    Non-finite values use the spare all-ones exponent field where the
+    format has one (binary8/bfloat16/binary16, matching IEEE), and
+    saturate to ±xmax for e4m3.
+    """
+    fmt = get_format(fmt)
+    ebits, mbits, width, has_nf = pack_spec(fmt)
+    x = x.astype(jnp.float32)
+    sign = jnp.signbit(x).astype(jnp.uint32)
+    mag = jnp.abs(x)
+    finite = jnp.isfinite(x)
+    mag_f = jnp.where(finite, mag, jnp.float32(fmt.xmax))
+    is_sub = mag_f < jnp.float32(fmt.xmin)
+    e = jnp.where(is_sub, jnp.int32(fmt.emin), _float_exponent(mag_f))
+    q = _exact_scale(mag_f, mbits - e)          # integer significand, exact
+    m = q.astype(jnp.uint32) & jnp.uint32((1 << mbits) - 1)
+    field = jnp.where(is_sub, jnp.uint32(0),
+                      (e - fmt.emin + 1).astype(jnp.uint32))
+    code = (sign << jnp.uint32(ebits + mbits)) | (field << jnp.uint32(mbits)) | m
+    if has_nf:
+        nf_field = jnp.uint32((1 << ebits) - 1)
+        m_nf = jnp.where(jnp.isnan(x), jnp.uint32((1 << mbits) - 1),
+                         jnp.uint32(0))
+        code_nf = (sign << jnp.uint32(ebits + mbits)) \
+            | (nf_field << jnp.uint32(mbits)) | m_nf
+        code = jnp.where(finite, code, code_nf)
+    return code.astype(jnp.uint8 if width == 1 else jnp.uint16)
+
+
+def unpack_block(codes, fmt):
+    """Decode packed code words back to exact float32 grid values."""
+    fmt = get_format(fmt)
+    ebits, mbits, _, has_nf = pack_spec(fmt)
+    c = codes.astype(jnp.uint32)
+    sign = (c >> jnp.uint32(ebits + mbits)) & jnp.uint32(1)
+    field = (c >> jnp.uint32(mbits)) & jnp.uint32((1 << ebits) - 1)
+    m = c & jnp.uint32((1 << mbits) - 1)
+    is_sub = field == 0
+    e = jnp.where(is_sub, jnp.int32(fmt.emin),
+                  field.astype(jnp.int32) - 1 + fmt.emin)
+    sig = jnp.where(is_sub, m, m + jnp.uint32(1 << mbits)).astype(jnp.float32)
+    mag = _exact_scale(sig, e - mbits)
+    out = jnp.where(sign == 1, -mag, mag)
+    if has_nf:
+        nf = field == (1 << ebits) - 1
+        inf = jnp.where(sign == 1, -jnp.inf, jnp.inf).astype(jnp.float32)
+        out = jnp.where(nf, jnp.where(m == 0, inf, jnp.float32(jnp.nan)), out)
+    return out
 
 
 def default_interpret() -> bool:
@@ -129,10 +234,132 @@ def counter_bits_pair(k0, k1, shape, row0=0, col0=0, stream: int = 0):
         k0, jnp.uint32(k1) + jnp.uint32(_GOLDEN) * jnp.uint32(stream), r, c)
 
 
+def _interleaved_words(k0, k1, shape, row0, col0, stream: int):
+    """One uint32 word per element of ``shape`` (last two dims = rows,
+    cols; an optional leading batch dim broadcasts through the keys) at
+    HALF the PRF cost: the Threefry counter grid covers column *pairs*
+    ``(row, col // 2)`` keyed by global coordinates, and both output words
+    are consumed (word ``col % 2`` of the pair).  Like every counter
+    derivation here it is partition-invariant and recomputable outside the
+    kernel; ``col0`` may be a traced block offset (dynamic lane
+    alignment)."""
+    *lead, rows, cols = shape
+    static_col = isinstance(col0, int)
+    if static_col:
+        off = col0 % 2
+        n_pairs = (off + cols + 1) // 2
+        cp0 = col0 // 2
+    else:
+        off = jnp.asarray(col0, jnp.int32) % 2
+        n_pairs = cols // 2 + 1                    # static upper bound
+        cp0 = jnp.asarray(col0, jnp.int32) // 2
+    wshape = tuple(lead) + (rows, n_pairs)
+    r = (jax.lax.broadcasted_iota(jnp.uint32, wshape, len(lead))
+         + jnp.uint32(row0))
+    c = (jax.lax.broadcasted_iota(jnp.uint32, wshape, len(lead) + 1)
+         + jnp.uint32(cp0))
+    x0, x1 = threefry2x32(
+        k0, jnp.uint32(k1) + jnp.uint32(_GOLDEN) * jnp.uint32(stream), r, c)
+    inter = jnp.stack([x0, x1], axis=-1).reshape(
+        tuple(lead) + (rows, 2 * n_pairs))
+    if static_col:
+        return inter[..., off:off + cols]
+    return jax.lax.dynamic_slice_in_dim(inter, off, cols, axis=-1)
+
+
 def counter_bits(k0, k1, shape, row0=0, col0=0, stream: int = 0):
-    """Single bit-plane convenience over counter_bits_pair."""
-    return counter_bits_pair(k0, k1, shape, row0=row0, col0=col0,
-                             stream=stream)[0]
+    """A uint32 bit-plane for one 2-D block, pure jnp — the canonical
+    interpret-mode/oracle bit derivation (see _interleaved_words)."""
+    return _interleaved_words(k0, k1, shape, row0, col0, stream)
+
+
+def _expand_reduced(words, shape, off: int, rand_bits: int):
+    """Spread packed ``rand_bits``-bit lanes of uint32 ``words`` over a
+    block whose *last* axis is columns: element (..., c) takes field
+    ``(off + c) % ratio`` of word ``(..., (off + c) // ratio)``.  The result
+    holds the r-bit value in the low bits of each uint32 (the round_block
+    contract)."""
+    ratio = 32 // rand_bits
+    rep = jnp.repeat(words, ratio, axis=-1)[..., off:off + shape[-1]]
+    sub = (jax.lax.broadcasted_iota(jnp.uint32, shape, len(shape) - 1)
+           + jnp.uint32(off)) % jnp.uint32(ratio)
+    return (rep >> (sub * jnp.uint32(rand_bits))) \
+        & jnp.uint32((1 << rand_bits) - 1)
+
+
+def counter_bits_reduced(k0, k1, shape, rand_bits: int, row0=0, col0=0,
+                         stream: int = 0):
+    """``rand_bits``-bit random fields for a 2-D block at 32/rand_bits of
+    the PRF cost (few-random-bits SR).
+
+    One Threefry word serves ``32/rand_bits`` consecutive columns: the word
+    grid is keyed by *global* (row, col // ratio) coordinates, so — like
+    ``counter_bits`` — the fields are independent of the block partition
+    and recomputable outside the kernel (the oracle derivation).  For
+    ``rand_bits == 32`` this is exactly ``counter_bits``.  ``col0`` may be
+    a traced value (a kernel block offset): the word count is then the
+    static upper bound and the lane alignment is a dynamic slice.
+    """
+    if rand_bits == 32:
+        return counter_bits(k0, k1, shape, row0=row0, col0=col0,
+                            stream=stream)
+    ratio = 32 // rand_bits
+    rows, cols = shape
+    if isinstance(col0, int):
+        off = col0 % ratio
+        n_words = (off + cols + ratio - 1) // ratio
+        words = counter_bits(k0, k1, (rows, n_words), row0=row0,
+                             col0=col0 // ratio, stream=stream)
+        return _expand_reduced(words, shape, off, rand_bits)
+    off = jnp.asarray(col0, jnp.int32) % ratio
+    # static upper bound covering any off <= ratio-1: ceil((cols +
+    # ratio-1) / ratio) words are enough for off + cols lanes
+    n_words = (cols + 2 * (ratio - 1)) // ratio
+    words = counter_bits(k0, k1, (rows, n_words), row0=row0,
+                         col0=jnp.asarray(col0, jnp.int32) // ratio,
+                         stream=stream)
+    rep = jax.lax.dynamic_slice_in_dim(
+        jnp.repeat(words, ratio, axis=-1), off, cols, axis=-1)
+    sub = (jax.lax.broadcasted_iota(jnp.uint32, shape, 1)
+           + off.astype(jnp.uint32)) % jnp.uint32(ratio)
+    return (rep >> (sub * jnp.uint32(rand_bits))) \
+        & jnp.uint32((1 << rand_bits) - 1)
+
+
+def counter_bits_batch(words, shape, rand_bits: int = 32, row0=0, col0=0,
+                       stream: int = 0):
+    """Per-slice counter bits for a (be, rows, cols) batch block, pure jnp.
+
+    ``words``: (be, 2) uint32 — one seed pair per batch slice (the
+    ``precision.policy.slice_words`` derivation).  Slice ``e`` draws exactly
+    the bits :func:`counter_bits_reduced` would produce from ``words[e]`` at
+    the same within-slice global coordinates, so batched results are
+    independent of the batch-block partition and recomputable slice-by-slice
+    outside the kernel (the oracle derivation).
+    """
+    be, rows, cols = shape
+    k0 = words[:, 0][:, None, None]
+    k1 = words[:, 1][:, None, None]
+    if rand_bits == 32:
+        return _interleaved_words(k0, k1, shape, row0, col0, stream)
+    ratio = 32 // rand_bits
+    static_col = isinstance(col0, int)
+    if static_col:
+        off = col0 % ratio
+        n_words = (off + cols + ratio - 1) // ratio
+        w = _interleaved_words(k0, k1, (be, rows, n_words), row0,
+                               col0 // ratio, stream)
+        return _expand_reduced(w, shape, off, rand_bits)
+    off = jnp.asarray(col0, jnp.int32) % ratio
+    n_words = (cols + 2 * (ratio - 1)) // ratio    # static upper bound
+    w = _interleaved_words(k0, k1, (be, rows, n_words), row0,
+                           jnp.asarray(col0, jnp.int32) // ratio, stream)
+    rep = jax.lax.dynamic_slice_in_dim(
+        jnp.repeat(w, ratio, axis=-1), off, cols, axis=-1)
+    sub = (jax.lax.broadcasted_iota(jnp.uint32, shape, 2)
+           + off.astype(jnp.uint32)) % jnp.uint32(ratio)
+    return (rep >> (sub * jnp.uint32(rand_bits))) \
+        & jnp.uint32((1 << rand_bits) - 1)
 
 
 def seed_kernel_prng_words(w0, w1, block_id, *, interpret: bool) -> None:
@@ -146,12 +373,22 @@ def seed_kernel_prng_words(w0, w1, block_id, *, interpret: bool) -> None:
 
 
 def kernel_bits_words(w0, w1, shape, row0=0, col0=0, stream: int = 0,
-                      *, interpret: bool):
-    """kernel_bits on explicit seed words (see seed_kernel_prng_words)."""
+                      rand_bits: int = 32, *, interpret: bool):
+    """kernel_bits on explicit seed words (see seed_kernel_prng_words).
+
+    ``rand_bits < 32`` draws ``rand_bits/32`` as many PRF/hardware words
+    per block and spreads their packed lanes over the block
+    (few-random-bits SR; the r-bit value lands in the low bits of each
+    uint32, matching ``round_block(..., rand_bits=r)``)."""
     if interpret:
-        return counter_bits(w0, w1, shape, row0=row0, col0=col0,
-                            stream=stream)
-    return pltpu.prng_random_bits(shape)
+        return counter_bits_reduced(w0, w1, shape, rand_bits, row0=row0,
+                                    col0=col0, stream=stream)
+    if rand_bits == 32:
+        return pltpu.prng_random_bits(shape)
+    ratio = 32 // rand_bits
+    n_words = (shape[1] + ratio - 1) // ratio
+    words = pltpu.prng_random_bits((shape[0], n_words))
+    return _expand_reduced(words, shape, 0, rand_bits)
 
 
 def seed_kernel_prng(seed_ref, block_id, *, interpret: bool) -> None:
@@ -163,7 +400,7 @@ def seed_kernel_prng(seed_ref, block_id, *, interpret: bool) -> None:
 
 
 def kernel_bits(seed_ref, shape, row0=0, col0=0, stream: int = 0,
-                *, interpret: bool):
+                rand_bits: int = 32, *, interpret: bool):
     """Draw a block of uint32 random bits inside a kernel body.
 
     ``interpret=True``: counter-based Threefry in plain jnp (CPU CI path).
@@ -173,7 +410,8 @@ def kernel_bits(seed_ref, shape, row0=0, col0=0, stream: int = 0,
     interpret path (where draws are stateless).
     """
     return kernel_bits_words(seed_ref[0], seed_ref[1], shape, row0=row0,
-                             col0=col0, stream=stream, interpret=interpret)
+                             col0=col0, stream=stream, rand_bits=rand_bits,
+                             interpret=interpret)
 
 
 def kernel_bits3(seed_ref, shape, row0, need, *, interpret: bool):

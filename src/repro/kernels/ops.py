@@ -62,9 +62,16 @@ def fused_qupdate_prng(x, g, t, key, cfg: GDRounding,
                    static_argnames=("fmt", "mode", "eps", "bm", "bn", "bk",
                                     "interpret"))
 def qmatmul_lowp(a, b, key, fmt, mode: str = "sr", eps: float = 0.0,
-                 bm: int = 256, bn: int = 256, bk: int = 256,
+                 bm: Optional[int] = None, bn: Optional[int] = None,
+                 bk: Optional[int] = None,
                  interpret: Optional[bool] = None):
-    """Low-precision-output GEMM via the Pallas kernel."""
+    """Low-precision-output GEMM via the Pallas kernel.
+
+    ``bm/bn/bk=None`` (the default) resolves through the shape-keyed
+    autotuner inside the trace — callers that don't pin an explicit tiling
+    all share ONE jit trace per shape class instead of retracing per
+    (bm, bn, bk) triple.
+    """
     a = jnp.asarray(a, jnp.float32)
     b = jnp.asarray(b, jnp.float32)
     bits = jax.random.bits(key, (a.shape[0], b.shape[1]), jnp.uint32)
@@ -76,9 +83,11 @@ def qmatmul_lowp(a, b, key, fmt, mode: str = "sr", eps: float = 0.0,
                    static_argnames=("fmt", "mode", "eps", "bm", "bn", "bk",
                                     "interpret"))
 def qmatmul_lowp_prng(a, b, key, fmt, mode: str = "sr", eps: float = 0.0,
-                      bm: int = 256, bn: int = 256, bk: int = 256,
+                      bm: Optional[int] = None, bn: Optional[int] = None,
+                      bk: Optional[int] = None,
                       interpret: Optional[bool] = None):
-    """Low-precision-output GEMM with in-kernel randomness."""
+    """Low-precision-output GEMM with in-kernel randomness (autotuned
+    default block sizes; see :func:`qmatmul_lowp`)."""
     a = jnp.asarray(a, jnp.float32)
     b = jnp.asarray(b, jnp.float32)
     return qmatmul_prng_p(a, b, common.derive_seed(key), fmt, mode, eps,

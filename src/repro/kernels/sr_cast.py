@@ -48,8 +48,9 @@ def pick_block_rows(n_elements: int, interpret: bool,
     return max(8, min(rows, MAX_INTERPRET_ROWS))
 
 
-def _sr_cast_kernel(x_ref, bits_ref, o_ref, *, fmt, mode, eps):
-    o_ref[...] = common.round_block(x_ref[...], bits_ref[...], fmt, mode, eps)
+def _sr_cast_kernel(x_ref, bits_ref, o_ref, *, fmt, mode, eps, rand_bits):
+    o_ref[...] = common.round_block(x_ref[...], bits_ref[...], fmt, mode, eps,
+                                    rand_bits=rand_bits)
 
 
 def _signed_sr_cast_kernel(x_ref, bits_ref, v_ref, o_ref, *, fmt, eps):
@@ -66,10 +67,11 @@ def _pad_2d(flat, block_rows):
 
 
 def sr_cast_p(x, bits, fmt, mode: str, eps: float = 0.0, v=None,
-              *, block_rows=None, interpret=None):
+              *, block_rows=None, rand_bits: int = 32, interpret=None):
     """Stochastic-round ``x`` onto ``fmt`` with a Pallas kernel.
 
-    x: float32 array (any shape); bits: uint32, same shape; v: bias
+    x: float32 array (any shape); bits: uint32, same shape (with
+    ``rand_bits < 32`` only the low bits are consumed); v: bias
     direction (same shape) — required iff mode == 'signed_sr_eps'.
     """
     fmt = get_format(fmt)
@@ -96,7 +98,8 @@ def sr_cast_p(x, bits, fmt, mode: str, eps: float = 0.0, v=None,
             interpret=interpret,
         )(xf, bitsf, vf)
     else:
-        kern = functools.partial(_sr_cast_kernel, fmt=fmt, mode=mode, eps=eps)
+        kern = functools.partial(_sr_cast_kernel, fmt=fmt, mode=mode, eps=eps,
+                                 rand_bits=rand_bits)
         out = pl.pallas_call(
             kern,
             grid=grid,
@@ -112,12 +115,15 @@ def sr_cast_p(x, bits, fmt, mode: str, eps: float = 0.0, v=None,
 # In-kernel PRNG variant: no bits operand (8 B/elt instead of 12).
 # ---------------------------------------------------------------------------
 def _sr_cast_prng_kernel(seed_ref, x_ref, o_ref,
-                         *, fmt, mode, eps, block_rows, interpret):
+                         *, fmt, mode, eps, block_rows, rand_bits,
+                         interpret):
     i = pl.program_id(0)
     common.seed_kernel_prng(seed_ref, i, interpret=interpret)
     bits = common.kernel_bits(seed_ref, x_ref.shape,
-                              row0=i * block_rows, interpret=interpret)
-    o_ref[...] = common.round_block(x_ref[...], bits, fmt, mode, eps)
+                              row0=i * block_rows, rand_bits=rand_bits,
+                              interpret=interpret)
+    o_ref[...] = common.round_block(x_ref[...], bits, fmt, mode, eps,
+                                    rand_bits=rand_bits)
 
 
 def _signed_sr_cast_prng_kernel(seed_ref, x_ref, v_ref, o_ref,
@@ -131,7 +137,7 @@ def _signed_sr_cast_prng_kernel(seed_ref, x_ref, v_ref, o_ref,
 
 
 def sr_cast_prng_p(x, seed, fmt, mode: str, eps: float = 0.0, v=None,
-                   *, block_rows=None, interpret=None):
+                   *, block_rows=None, rand_bits: int = 32, interpret=None):
     """Stochastic-round ``x`` onto ``fmt`` with in-kernel randomness.
 
     ``seed``: (2,) uint32 words (see common.derive_seed); the per-block
@@ -160,7 +166,7 @@ def sr_cast_prng_p(x, seed, fmt, mode: str, eps: float = 0.0, v=None,
     else:
         kern = functools.partial(_sr_cast_prng_kernel, fmt=fmt, mode=mode,
                                  eps=eps, block_rows=block_rows,
-                                 interpret=interpret)
+                                 rand_bits=rand_bits, interpret=interpret)
         operands, in_specs = (xf,), [bspec]
 
     out = pl.pallas_call(

@@ -6,6 +6,16 @@ policy's ``act`` rounding site (straight-through gradient).
 ``swiglu_apply`` is the single definition of the quantized SwiGLU
 sequence — the MoE routed experts reuse it so their rounding sites and
 tag order can never diverge from the dense FFN's.
+
+With an active policy whose ``fwd`` spec is non-identity, the GLU prefix
+(gate GEMM, up GEMM, activation, activation-site rounding) runs as ONE
+fused Pallas kernel (``precision.fused.qffn_glu``) — same per-site word
+folds as the unfused chain, but no elementwise HBM round trips between
+the projections, and (under ``policy.packed``) a packed uint8 hidden that
+the down GEMM decodes on load.  The non-GLU path fuses the up GEMM with
+its activation + activation rounding (``precision.fused.qdot_act``).
+``quant=None`` keeps the plain-jnp fast path bit-identical to the
+unquantized model.
 """
 from __future__ import annotations
 
@@ -14,6 +24,7 @@ import jax.numpy as jnp
 
 from repro.models import layers as L
 from repro.precision import policy as QP
+from repro.precision.fused import qdot_act, qffn_glu
 from repro.precision.policy import qact
 
 
@@ -26,8 +37,14 @@ def ffn_init(key, d_model: int, d_ff: int, act: str):
     return params
 
 
+def _fused_gemm_path(quant) -> bool:
+    return quant is not None and not quant.policy.fwd.is_identity
+
+
 def swiglu_apply(x, w_gate, w_up, w_down, quant=None):
     """Quantized SwiGLU: gate/up GEMMs -> act rounding -> down GEMM."""
+    if _fused_gemm_path(quant):
+        return qffn_glu(x, w_gate, w_up, w_down, quant, act="silu")
     gate = jax.nn.silu(L.qdense(x, w_gate, quant, QP.TAG_FFN_GATE))
     up = L.qdense(x, w_up, quant, QP.TAG_FFN_UP)
     h = qact(gate * up, quant, QP.TAG_FFN_ACT)
@@ -38,12 +55,20 @@ def ffn_apply(params, x, act: str, quant=None):
     if act == "swiglu":
         return swiglu_apply(x, params["w_gate"], params["w_up"],
                             params["w_down"], quant)
-    up = L.qdense(x, params["w_up"], quant, QP.TAG_FFN_UP)
     if act == "geglu":
+        if _fused_gemm_path(quant):
+            return qffn_glu(x, params["w_gate"], params["w_up"],
+                            params["w_down"], quant, act="gelu")
         gate = jax.nn.gelu(L.qdense(x, params["w_gate"], quant,
                                     QP.TAG_FFN_GATE))
-        h = gate * up
-    else:
-        h = L.ACT[act](up)
+        up = L.qdense(x, params["w_up"], quant, QP.TAG_FFN_UP)
+        h = qact(gate * up, quant, QP.TAG_FFN_ACT)
+        return L.qdense(h, params["w_down"], quant, QP.TAG_FFN_DOWN)
+    if _fused_gemm_path(quant):
+        h = qdot_act(x, params["w_up"].astype(x.dtype), quant,
+                     QP.TAG_FFN_UP, act)
+        return L.qdense(h, params["w_down"], quant, QP.TAG_FFN_DOWN)
+    up = L.qdense(x, params["w_up"], quant, QP.TAG_FFN_UP)
+    h = L.ACT[act](up)
     h = qact(h, quant, QP.TAG_FFN_ACT)
     return L.qdense(h, params["w_down"], quant, QP.TAG_FFN_DOWN)

@@ -7,8 +7,11 @@ functions.  Compute dtype is bfloat16 with fp32 params (the mixed-precision
 baseline).  With a ``QuantCtx`` (repro.precision) threaded in, each weight
 matmul becomes the paper's eq. (8a): the GEMM *result* is rounded onto the
 policy's low-precision grid — forward and both backward transpose GEMMs run
-through the Pallas qmatmul kernels.  Without a context (``quant=None``)
-``qdense`` is exactly ``x @ w`` — the fp32/bf16 baseline is untouched.
+through the Pallas qmatmul kernels (block sizes from the shape-keyed
+autotuner, ``kernels.autotune``).  The FFN stacks additionally fuse their
+activation + activation-rounding epilogues into the GEMM kernels
+(``precision.fused``).  Without a context (``quant=None``) ``qdense`` is
+exactly ``x @ w`` — the fp32/bf16 baseline is untouched.
 """
 from __future__ import annotations
 
@@ -19,14 +22,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.qmatmul import ACT_FNS
 from repro.precision.policy import qdot
 
-ACT = {
-    "silu": jax.nn.silu,
-    "gelu": jax.nn.gelu,
-    "relu": jax.nn.relu,
-    "relu_sq": lambda x: jnp.square(jax.nn.relu(x)),
-}
+# single source of truth with the fused-epilogue kernels: anything usable
+# as an FFN activation is also fusable into the GEMM epilogue
+ACT = ACT_FNS
 
 COMPUTE_DTYPE = jnp.bfloat16
 

@@ -1,4 +1,5 @@
 """Precision policies for quantized-GEMM model execution (paper eq. 8a)."""
+from repro.precision.fused import qdot_act, qffn_glu
 from repro.precision.policy import (PRESETS, QuantCtx, QuantPolicy, ctx_for,
                                     fold_ctx, fold_words, get_policy,
                                     make_ctx, make_policy, qact, qdot,
@@ -7,5 +8,5 @@ from repro.precision.policy import (PRESETS, QuantCtx, QuantPolicy, ctx_for,
 __all__ = [
     "PRESETS", "QuantCtx", "QuantPolicy", "ctx_for", "fold_ctx",
     "fold_words", "get_policy", "make_ctx", "make_policy", "qact", "qdot",
-    "qeinsum", "resolve_policy",
+    "qdot_act", "qeinsum", "qffn_glu", "resolve_policy",
 ]

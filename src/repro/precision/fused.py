@@ -1,0 +1,242 @@
+"""Fused quantized-FFN forward paths (paper eq. 8a, epilogue-fused).
+
+The unfused GLU FFN under a ``QuantPolicy`` issues, per token block: two
+rounded GEMMs (gate, up), an elementwise activation + product, an
+activation-site rounding cast, and the down-projection GEMM — five HBM
+round trips over the (M, d_ff) hidden.  :func:`qffn_glu` collapses the
+first four into ONE Pallas kernel (``kernels.qmatmul.qmatmul_swiglu_*``):
+the gate/up accumulators are rounded, activated, multiplied and re-rounded
+inside the last K grid step, and — under ``policy.packed`` — the hidden
+leaves the kernel as packed uint8 code words that the down-projection
+kernel decodes on load (1 B/elt instead of 4 across the widest tensor in
+the block).  :func:`qdot_act` is the single-GEMM analogue for non-GLU FFNs
+(up GEMM + activation + activation-site rounding fused).
+
+Semantics match the unfused chain site by site:
+
+* the gate/up GEMM-result roundings use the same tag/site word folds as
+  ``qdense(..., TAG_FFN_GATE/TAG_FFN_UP)`` — under interpret their rounding
+  decisions are *bit-identical* to the unfused kernels' (same counter
+  coordinates, same words);
+* the activation-site rounding uses the ``TAG_FFN_ACT``/``SITE_ACT`` fold
+  (its counter coordinates are the (row, col) of the hidden matrix rather
+  than the flattened sr_cast layout, so it is an equally independent but
+  differently-indexed stream — statistical equivalence, eqs. (3)-(5));
+* the backward pass is the exact unfused backward: straight-through
+  through both rounding sites, activation pullback in fp32, and the four
+  transpose GEMMs through ``site_matmul`` with the per-branch words — so
+  dgrad/wgrad streams are bit-identical to the unfused path's.
+
+Oracle mode (``policy.oracle``) feeds the kernels explicit
+counter-derived bits and is bit-exact against a pure-jnp reference
+(tests/test_qdot.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import common
+from repro.kernels.qmatmul import (ACT_FNS, STREAM_ACT, qmatmul_p,
+                                   qmatmul_prng_p, qmatmul_swiglu_p,
+                                   qmatmul_swiglu_prng_p)
+from repro.precision.policy import (QuantCtx, QuantPolicy, SITE_ACT,
+                                    SITE_DGRAD, SITE_FWD, SITE_WGRAD,
+                                    TAG_FFN_ACT, TAG_FFN_DOWN, TAG_FFN_GATE,
+                                    TAG_FFN_UP, fold_words, site_matmul)
+
+
+def _packable(fmt) -> bool:
+    try:
+        return common.pack_bytes(fmt) <= 2
+    except ValueError:
+        return False
+
+
+def _site_words(words, tag: int, site: int):
+    """The (call-site tag, site id) double fold — exactly the derivation
+    the unfused qdot/qact chain applies."""
+    return fold_words(fold_words(words, tag), site)
+
+
+def _h_pack_fmt(policy: QuantPolicy) -> Optional[str]:
+    """Format the fused hidden is packed to (None: stays float32)."""
+    if (policy.packed and not policy.act.is_identity
+            and _packable(policy.act.fmt)):
+        return policy.act.fmt
+    return None
+
+
+def _glu_kernel_call(policy: QuantPolicy, act: str, x2, wg, wu, words,
+                     residuals: bool):
+    """Run the fused GLU kernel with policy-derived seeds/bits."""
+    s = policy.fwd
+    act_spec = None if policy.act.is_identity else policy.act
+    w_gate = _site_words(words, TAG_FFN_GATE, SITE_FWD)
+    w_up = _site_words(words, TAG_FFN_UP, SITE_FWD)
+    w_act = _site_words(words, TAG_FFN_ACT, SITE_ACT)
+    pack_fmt = _h_pack_fmt(policy)
+    res_packed = policy.packed and _packable(s.fmt)
+    kw = dict(act=act, act_spec=act_spec, bm=policy.bm, bn=policy.bn,
+              bk=policy.bk, out_packed=pack_fmt is not None,
+              residuals=residuals, residuals_packed=res_packed,
+              rand_bits=s.rand_bits)
+    shape = (x2.shape[0], wg.shape[1])
+    if policy.oracle:
+        bits_g = common.counter_bits_reduced(w_gate[0], w_gate[1], shape,
+                                             s.rand_bits)
+        bits_u = common.counter_bits_reduced(w_up[0], w_up[1], shape,
+                                             s.rand_bits)
+        act_bits = None
+        if act_spec is not None and act_spec.stochastic:
+            act_bits = common.counter_bits_reduced(
+                w_act[0], w_act[1], shape, act_spec.rand_bits,
+                stream=STREAM_ACT)
+        out = qmatmul_swiglu_p(x2, wg, wu, bits_g, bits_u, s.fmt, s.mode,
+                               s.eps, act_bits=act_bits, **kw)
+    else:
+        seeds = jnp.stack([w_gate, w_up, w_act])
+        out = qmatmul_swiglu_prng_p(x2, wg, wu, seeds, s.fmt, s.mode,
+                                    s.eps, **kw)
+    return out, pack_fmt, (s.fmt if res_packed else None)
+
+
+def _down_matmul(policy: QuantPolicy, h, wd, words, h_fmt):
+    """The down-projection GEMM, decoding a packed hidden on load."""
+    return site_matmul(policy, SITE_FWD, h, wd,
+                       fold_words(words, TAG_FFN_DOWN), a_fmt=h_fmt)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _qffn_glu(policy: QuantPolicy, act: str, x2, wg, wu, wd, words):
+    (h,), h_fmt, _ = _glu_kernel_call(policy, act, x2, wg, wu, words,
+                                      residuals=False)
+    return _down_matmul(policy, h, wd, words, h_fmt)
+
+
+def _qffn_glu_fwd(policy, act, x2, wg, wu, wd, words):
+    (h, g_r, u_r), h_fmt, _ = _glu_kernel_call(
+        policy, act, x2, wg, wu, words, residuals=True)
+    out = _down_matmul(policy, h, wd, words, h_fmt)
+    return out, (x2, wg, wu, wd, words, h, g_r, u_r)
+
+
+def _qffn_glu_bwd(policy, act, res, g):
+    x2, wg, wu, wd, words, h, g_r, u_r = res
+    # the storage formats are a pure function of the (static) policy
+    h_fmt = _h_pack_fmt(policy)
+    res_fmt = policy.fwd.fmt if (policy.packed
+                                 and _packable(policy.fwd.fmt)) else None
+    g = g.astype(jnp.float32)
+    h_v = common.unpack_block(h, h_fmt) if h_fmt is not None else h
+    g_v = common.unpack_block(g_r, res_fmt) if res_fmt is not None else g_r
+    u_v = common.unpack_block(u_r, res_fmt) if res_fmt is not None else u_r
+    # down projection (straight-through across the fwd rounding, like qdot)
+    w_down = fold_words(words, TAG_FFN_DOWN)
+    dh = site_matmul(policy, SITE_DGRAD, g, wd.T, w_down)
+    dwd = site_matmul(policy, SITE_WGRAD, h_v.T, g, w_down)
+    # activation-site rounding is straight-through; activation pullback is
+    # the exact elementwise vjp at the *rounded* gate values
+    act_out, act_vjp = jax.vjp(ACT_FNS[act], g_v)
+    dgate = act_vjp(dh * u_v)[0]
+    dup = dh * act_out
+    w_gate = fold_words(words, TAG_FFN_GATE)
+    w_up = fold_words(words, TAG_FFN_UP)
+    dx = (site_matmul(policy, SITE_DGRAD, dgate, wg.T, w_gate)
+          + site_matmul(policy, SITE_DGRAD, dup, wu.T, w_up))
+    dwg = site_matmul(policy, SITE_WGRAD, x2.T, dgate, w_gate)
+    dwu = site_matmul(policy, SITE_WGRAD, x2.T, dup, w_up)
+    return dx, dwg, dwu, dwd, np.zeros(words.shape, jax.dtypes.float0)
+
+
+_qffn_glu.defvjp(_qffn_glu_fwd, _qffn_glu_bwd)
+
+
+def qffn_glu(x, w_gate, w_up, w_down, quant: Optional[QuantCtx],
+             act: str = "silu"):
+    """Policy-rounded differentiable GLU FFN:
+    ``round_act(act(round(x@w_gate)) * round(x@w_up)) @ w_down`` with the
+    down GEMM result-rounded too — one fused Pallas kernel for everything
+    up to the down projection.
+
+    Callers guard on an active, non-identity-fwd policy (models/ffn.py
+    keeps the plain-jnp fast path for ``quant=None``); ``x`` may carry
+    leading batch dims.
+    """
+    policy, words = quant
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+
+    def _w(w):
+        # qdense casts weights into the activation compute dtype before
+        # the GEMM (the mixed-precision baseline semantics) — mirror that
+        # exactly, then lift to the f32 kernel carrier
+        return w.astype(x.dtype).astype(jnp.float32)
+
+    out = _qffn_glu(policy, act, x2, _w(w_gate), _w(w_up), _w(w_down),
+                    words)
+    return out.reshape(lead + (w_down.shape[-1],)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Single-GEMM fused epilogue (non-GLU FFNs): up GEMM + act + act rounding.
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _qdot_act(policy: QuantPolicy, act: str, a2, b, words):
+    s = policy.fwd
+    act_spec = None if policy.act.is_identity else policy.act
+    w = fold_words(words, SITE_FWD)
+    shape = (a2.shape[0], b.shape[1])
+    kw = dict(act=act, act_spec=act_spec, bm=policy.bm, bn=policy.bn,
+              bk=policy.bk, rand_bits=s.rand_bits)
+    if policy.oracle:
+        bits = common.counter_bits_reduced(w[0], w[1], shape, s.rand_bits)
+        act_bits = None
+        if act_spec is not None and act_spec.stochastic:
+            act_bits = common.counter_bits_reduced(
+                w[0], w[1], shape, act_spec.rand_bits, stream=STREAM_ACT)
+        return qmatmul_p(a2, b, bits, s.fmt, s.mode, s.eps,
+                         act_bits=act_bits, **kw)
+    return qmatmul_prng_p(a2, b, w, s.fmt, s.mode, s.eps, **kw)
+
+
+def _qdot_act_fwd(policy, act, a2, b, words):
+    # rematerialize the rounded GEMM result for the activation pullback:
+    # the PRNG streams are deterministic in (words), so the fwd-site GEMM
+    # recomputes bit-identically in the backward pass
+    return _qdot_act(policy, act, a2, b, words), (a2, b, words)
+
+
+def _qdot_act_bwd(policy, act, res, g):
+    a2, b, words = res
+    g = g.astype(jnp.float32)
+    up_r = site_matmul(policy, SITE_FWD, a2, b, words)
+    _, act_vjp = jax.vjp(ACT_FNS[act], up_r)
+    dup = act_vjp(g)[0]
+    da = site_matmul(policy, SITE_DGRAD, dup, b.T, words)
+    db = site_matmul(policy, SITE_WGRAD, a2.T, dup, words)
+    return da, db, np.zeros(words.shape, jax.dtypes.float0)
+
+
+_qdot_act.defvjp(_qdot_act_fwd, _qdot_act_bwd)
+
+
+def qdot_act(a, b, quant: Optional[QuantCtx], tag: int, act: str):
+    """Policy-rounded ``act_round(act_fn(round(a @ b)))`` as one fused
+    kernel — the non-GLU FFN up-projection path.  The activation-site
+    rounding draws stream ``STREAM_ACT`` of the fwd-site words (the
+    single-seed kernel has no separate act word pair; an equally
+    independent, differently-indexed stream than the unfused ``qact``).
+    Callers guard on an active, non-identity-fwd policy.
+    """
+    policy, words = quant
+    words = fold_words(words, tag)
+    lead = a.shape[:-1]
+    a2 = a.reshape(-1, a.shape[-1]).astype(jnp.float32)
+    out = _qdot_act(policy, act, a2, b.astype(jnp.float32), words)
+    out_dtype = jnp.result_type(a.dtype, b.dtype)
+    return out.reshape(lead + (b.shape[-1],)).astype(out_dtype)

@@ -76,7 +76,12 @@ class QuantPolicy:
     ``oracle=True`` switches every site from the in-kernel-PRNG GEMM to the
     explicit-bits kernel fed counter-derived bits — the bit-exact audit
     mode (kernel == pure-jnp reference given the same words).
-    ``bm/bn/bk`` are the Pallas block sizes (clamped to the problem).
+    ``bm/bn/bk`` are the Pallas block sizes; ``None`` (the default) defers
+    to the shape-keyed autotuner (`kernels.autotune`), which also means
+    every call site of a given shape class shares one jit trace.
+    ``packed=True`` stores fused-FFN activations/outputs as packed code
+    words (uint8 for 8-bit grids) — 4x less HBM traffic between the fused
+    GLU kernel and the consuming down-projection, which decodes on load.
     """
 
     fwd: RoundingSpec = IDENTITY
@@ -84,9 +89,10 @@ class QuantPolicy:
     wgrad: RoundingSpec = IDENTITY
     act: RoundingSpec = IDENTITY
     oracle: bool = False
-    bm: int = 256
-    bn: int = 256
-    bk: int = 256
+    bm: Optional[int] = None
+    bn: Optional[int] = None
+    bk: Optional[int] = None
+    packed: bool = False
 
     @property
     def gemm_identity(self) -> bool:
@@ -114,13 +120,15 @@ def _check_gemm_spec(s: RoundingSpec, site: str) -> RoundingSpec:
 
 def make_policy(fwd=None, dgrad=None, wgrad=None, act=None, *,
                 fmt=None, mode: str = "sr", eps: float = 0.0,
-                oracle: bool = False) -> QuantPolicy:
+                oracle: bool = False, rand_bits: int = 32,
+                packed: bool = False) -> QuantPolicy:
     """Build a QuantPolicy; ``fmt`` fills every unspecified GEMM site.
 
     ``signed_sr_eps`` is rejected for every site: the GEMM kernels have no
     bias-direction operand, and ``qact``'s straight-through rounding never
-    supplies one either."""
-    default = spec(fmt, mode, eps) if fmt is not None else IDENTITY
+    supplies one either.  ``rand_bits`` applies to the fmt-filled sites
+    (few-random-bits SR); explicitly passed specs carry their own."""
+    default = spec(fmt, mode, eps, rand_bits) if fmt is not None else IDENTITY
     pol = QuantPolicy(
         fwd=_check_gemm_spec(fwd if fwd is not None else default, "fwd"),
         dgrad=_check_gemm_spec(dgrad if dgrad is not None else default,
@@ -128,7 +136,7 @@ def make_policy(fwd=None, dgrad=None, wgrad=None, act=None, *,
         wgrad=_check_gemm_spec(wgrad if wgrad is not None else default,
                                "wgrad"),
         act=_check_gemm_spec(act if act is not None else IDENTITY, "act"),
-        oracle=oracle)
+        oracle=oracle, packed=packed)
     return pol
 
 
@@ -136,12 +144,21 @@ def make_policy(fwd=None, dgrad=None, wgrad=None, act=None, *,
 # result and every stored activation lands on the binary8 (E5M2) grid via
 # SR; ``e4m3-sr`` is the OCP-FP8 production regime (activations kept high
 # precision); ``bf16-rn`` is the deterministic mixed-precision control.
+# ``binary8-paper-packed`` adds packed uint8 storage of the fused-FFN
+# activations/outputs; ``binary8-paper-r16`` draws 16 random bits per
+# rounded element (few-random-bits SR — half the PRF work, residual bias
+# ≤ 2^-17 ulp).
 PRESETS = {
     "fp32": QuantPolicy(),
     "bf16-rn": make_policy(fmt="bfloat16", mode="rn"),
     "e4m3-sr": make_policy(fmt="e4m3", mode="sr"),
     "binary8-paper": make_policy(fmt="binary8", mode="sr",
                                  act=spec("binary8", "sr")),
+    "binary8-paper-packed": make_policy(fmt="binary8", mode="sr",
+                                        act=spec("binary8", "sr"),
+                                        packed=True),
+    "binary8-paper-r16": make_policy(fmt="binary8", mode="sr", rand_bits=16,
+                                     act=spec("binary8", "sr", rand_bits=16)),
     "e4m3-sr-oracle": make_policy(fmt="e4m3", mode="sr", oracle=True),
 }
 
@@ -211,19 +228,32 @@ def fold_ctx(ctx: Optional[QuantCtx], tag: int) -> Optional[QuantCtx]:
 # ---------------------------------------------------------------------------
 # The differentiable rounded matmul.
 # ---------------------------------------------------------------------------
-def site_matmul(policy: QuantPolicy, site: int, a, b, words):
+def site_matmul(policy: QuantPolicy, site: int, a, b, words, *,
+                a_fmt=None, out_packed: bool = False):
     """One rounded 2-D GEMM at ``site`` (f32 in, f32 out) — the unit the
-    qdot forward/backward composes; public for benchmarks and audits."""
+    qdot forward/backward composes; public for benchmarks and audits.
+
+    ``a_fmt``: ``a`` holds packed code words of that format (decoded on
+    load inside the kernel); ``out_packed``: emit packed code words of the
+    site's format instead of float32.
+    """
     s: RoundingSpec = getattr(policy, _SITE_ATTR[site])
     if s.is_identity:
+        if a_fmt is not None:
+            a = common.unpack_block(a, a_fmt)
         return jnp.dot(a, b, preferred_element_type=jnp.float32)
     w = fold_words(words, site)
     if policy.oracle:
-        bits = common.counter_bits(w[0], w[1], (a.shape[0], b.shape[1]))
+        bits = common.counter_bits_reduced(
+            w[0], w[1], (a.shape[0], b.shape[1]), s.rand_bits)
         return qmatmul_p(a, b, bits, s.fmt, s.mode, s.eps,
-                         bm=policy.bm, bn=policy.bn, bk=policy.bk)
+                         bm=policy.bm, bn=policy.bn, bk=policy.bk,
+                         rand_bits=s.rand_bits, a_fmt=a_fmt,
+                         out_packed=out_packed)
     return qmatmul_prng_p(a, b, w, s.fmt, s.mode, s.eps,
-                          bm=policy.bm, bn=policy.bn, bk=policy.bk)
+                          bm=policy.bm, bn=policy.bn, bk=policy.bk,
+                          rand_bits=s.rand_bits, a_fmt=a_fmt,
+                          out_packed=out_packed)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
@@ -291,12 +321,14 @@ def batched_site_matmul(policy: QuantPolicy, site: int, a, b, words):
     w = fold_words(words, site)
     seeds = slice_words(w, a.shape[0])
     if policy.oracle:
-        bits = jax.vmap(lambda se: common.counter_bits(
-            se[0], se[1], (a.shape[1], b.shape[2])))(seeds)
+        bits = jax.vmap(lambda se: common.counter_bits_reduced(
+            se[0], se[1], (a.shape[1], b.shape[2]), s.rand_bits))(seeds)
         return qmatmul_batched_p(a, b, bits, s.fmt, s.mode, s.eps,
-                                 bm=policy.bm, bn=policy.bn, bk=policy.bk)
+                                 bm=policy.bm, bn=policy.bn, bk=policy.bk,
+                                 rand_bits=s.rand_bits)
     return qmatmul_batched_prng_p(a, b, seeds, s.fmt, s.mode, s.eps,
-                                  bm=policy.bm, bn=policy.bn, bk=policy.bk)
+                                  bm=policy.bm, bn=policy.bn, bk=policy.bk,
+                                  rand_bits=s.rand_bits)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
@@ -401,9 +433,12 @@ def _qact(policy: QuantPolicy, x, words):
     if policy.oracle:
         # one bit-word per element, keyed by the flat index (column iota is
         # constant so every element owns a distinct (row, col) counter)
-        bits = common.counter_bits(w[0], w[1], (x.size, 1)).reshape(x.shape)
-        return sr_cast_p(x, bits, s.fmt, s.mode, eps=s.eps)
-    return sr_cast_prng_p(x, w, s.fmt, s.mode, eps=s.eps)
+        bits = common.counter_bits_reduced(
+            w[0], w[1], (x.size, 1), s.rand_bits).reshape(x.shape)
+        return sr_cast_p(x, bits, s.fmt, s.mode, eps=s.eps,
+                         rand_bits=s.rand_bits)
+    return sr_cast_prng_p(x, w, s.fmt, s.mode, eps=s.eps,
+                          rand_bits=s.rand_bits)
 
 
 def _qact_fwd(policy, x, words):

@@ -1,0 +1,128 @@
+"""Tests for the shape-keyed block autotuner (kernels/autotune.py)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import autotune, common, ops
+from repro.kernels.qmatmul import qmatmul_prng_p
+
+KEY = jax.random.PRNGKey(5)
+
+
+@pytest.fixture(autouse=True)
+def _isolated_cache():
+    """Each test starts from an empty in-process cache (no sidecar)."""
+    autotune.clear_cache()
+    yield
+    autotune.clear_cache()
+
+
+def test_heuristic_covers_interpret_shapes():
+    """Under interpret the heuristic covers each dim in one block (up to
+    the caps): the emulator pays per grid step."""
+    assert autotune.heuristic_blocks(512, 512, 512, interpret=True) == \
+        (512, 512, 512)
+    bm, bn, bk = autotune.heuristic_blocks(10_000, 10_000, 10_000,
+                                           interpret=True)
+    assert bm <= 2048 and bn <= 2048 and bk <= 4096
+
+
+def test_heuristic_tpu_is_vmem_budgeted():
+    bm, bn, bk = autotune.heuristic_blocks(4096, 4096, 4096,
+                                           interpret=False)
+    # bm*bk + bk*bn + 2*bm*bn f32 working set stays within ~2 MiB
+    assert (bm * bk + bk * bn + 2 * bm * bn) * 4 <= 4 << 20
+    be, *_ = autotune.heuristic_batch_blocks(8, 256, 256, 256,
+                                             interpret=False)
+    assert be == 1        # hardware PRNG seeds one slice per grid step
+
+
+def test_batch_heuristic_collapses_grid_under_interpret():
+    be, bm, bn, bk = autotune.heuristic_batch_blocks(8, 256, 256, 256,
+                                                     interpret=True)
+    assert (be, bm, bn, bk) == (8, 256, 256, 256)
+
+
+def test_autotune_picks_fastest_candidate_and_caches():
+    calls = []
+
+    def launcher(blocks):
+        calls.append(blocks)
+        # fake workload: the (16, 16, 16) candidate is the fastest
+        delay = 0.0 if blocks == (16, 16, 16) else 0.005
+
+        def run():
+            time.sleep(delay)
+            return jnp.zeros(())
+        return run
+
+    cands = [(8, 8, 8), (16, 16, 16), (32, 32, 32)]
+    best = autotune.autotune(launcher, 16, 16, 16, mode="sr",
+                             interpret=True, iters=1, candidates=cands)
+    assert best == (16, 16, 16)
+    assert set(calls) == set(cands)
+    # the cache now feeds get_blocks for that exact shape key ...
+    assert autotune.get_blocks(16, 16, 16, mode="sr",
+                               interpret=True) == (16, 16, 16)
+    # ... and ONLY that key (shape-keyed, never silently reused)
+    assert autotune.get_blocks(17, 16, 16, mode="sr",
+                               interpret=True) == \
+        autotune.heuristic_blocks(17, 16, 16, interpret=True)
+
+
+def test_sidecar_roundtrip(tmp_path):
+    path = str(tmp_path / "autotune.json")
+
+    def launcher(blocks):
+        return lambda: jnp.zeros(())
+
+    autotune.autotune(launcher, 8, 8, 8, mode="sr", interpret=True,
+                      iters=1, candidates=[(8, 8, 8)])
+    autotune.save_sidecar(path)
+    autotune.clear_cache()
+    assert autotune.get_blocks(8, 8, 8, mode="sr", interpret=True) == \
+        autotune.heuristic_blocks(8, 8, 8, interpret=True)
+    n = autotune.load_sidecar(path)
+    assert n == 1
+    assert autotune.get_blocks(8, 8, 8, mode="sr", interpret=True) == \
+        (8, 8, 8)
+
+
+def test_sidecar_rejects_unknown_schema(tmp_path):
+    path = tmp_path / "bad.json"
+    path.write_text('{"schema": "other", "entries": {}}')
+    with pytest.raises(ValueError):
+        autotune.load_sidecar(str(path))
+
+
+def test_kernel_resolves_none_blocks_via_autotuner():
+    """qmatmul with bm/bn/bk=None uses the tuner default and matches an
+    explicit call with those blocks bit-for-bit."""
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(40, 24)) * 0.1, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(24, 56)) * 0.1, jnp.float32)
+    seed = common.derive_seed(KEY, 0)
+    bm, bn, bk = autotune.get_blocks(40, 56, 24, mode="sr", interpret=True)
+    got = qmatmul_prng_p(a, b, seed, "binary8", "sr", interpret=True)
+    want = qmatmul_prng_p(a, b, seed, "binary8", "sr", bm=bm, bn=bn, bk=bk,
+                          interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_ops_wrapper_shares_one_trace_per_shape_class():
+    """The former retrace bug: explicit (bm, bn, bk) triples each forced a
+    fresh jit trace.  With the None default every call of one shape class
+    hits the same trace."""
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.normal(size=(32, 16)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(16, 48)), jnp.float32)
+    ops.qmatmul_lowp_prng._clear_cache()
+    y1 = ops.qmatmul_lowp_prng(a, b, KEY, "binary8", "sr", interpret=True)
+    n1 = ops.qmatmul_lowp_prng._cache_size()
+    y2 = ops.qmatmul_lowp_prng(a, b, jax.random.fold_in(KEY, 1), "binary8",
+                               "sr", interpret=True)
+    assert ops.qmatmul_lowp_prng._cache_size() == n1
+    assert y1.shape == y2.shape == (32, 48)

@@ -148,6 +148,78 @@ def test_prng_bracketing_and_grid():
     assert bool(jnp.all(on_neighbour))
 
 
+# ------------------------------------------- few-random-bits SR (rand_bits) --
+def _mc_bias_rb(fmt, mode, rand_bits, eps=0.0, x0=X0):
+    x = jnp.full((N_MC,), x0, jnp.float32)
+    y = sr_cast_prng_p(x, SEED, fmt, mode, eps=eps, rand_bits=rand_bits,
+                       interpret=True)
+    err = np.asarray(y, np.float64) - x0
+    return err.mean(), err.var(), float(rounding.ulp(jnp.float32(x0), fmt))
+
+
+@pytest.mark.parametrize("rand_bits", [8, 16, 32])
+def test_prng_sr_bias_zero_at_every_rand_bits(rand_bits):
+    """Definition 1 under few-random-bits SR: the residual bias of the
+    r-bit uniform (half-offset) is bounded by 2^-(r+1) ulp — E[SR(x)-x]
+    stays within CLT noise + that quantization bound at every setting."""
+    mean, var, q = _mc_bias_rb("binary8", "sr", rand_bits)
+    assert abs(mean) < _clt_tol(var) + q * 2.0 ** -(rand_bits + 1)
+
+
+@pytest.mark.parametrize("rand_bits", [8, 16, 32])
+def test_prng_sr_variance_eq5_at_every_rand_bits(rand_bits):
+    mean, var, q = _mc_bias_rb("binary8", "sr", rand_bits)
+    _, _, frac_a, _ = rounding.magnitude_decompose(
+        jnp.float32(X0), rounding.get_format("binary8"))
+    frac = float(frac_a)
+    want = frac * (1.0 - frac) * q * q
+    assert abs(var - want) < 0.05 * want, (rand_bits, var, want)
+
+
+@pytest.mark.parametrize("rand_bits", [8, 16])
+def test_prng_sr_eps_bias_eq3_at_reduced_rand_bits(rand_bits):
+    eps = 0.2
+    for x0 in (X0, -X0):
+        mean, var, q = _mc_bias_rb("binary8", "sr_eps", rand_bits, eps=eps,
+                                   x0=x0)
+        want = np.sign(x0) * eps * q
+        tol = _clt_tol(var) + q * 2.0 ** -(rand_bits + 1)
+        assert abs(mean - want) < tol, (rand_bits, x0, mean, want)
+
+
+def test_reduced_counter_fields_uniform():
+    """chi-square uniformity of the 8-bit reduced fields over 256 bins
+    (same 0.1%-tail bound as the full-word byte-lane test)."""
+    fields = np.asarray(common.counter_bits_reduced(
+        jnp.uint32(0xABCD1234), jnp.uint32(0x9E3779B9), (2048, 128), 8))
+    assert fields.max() < 256
+    chi2 = _chi_square_uniform(fields.ravel().astype(np.int64), 256)
+    assert chi2 < 330.0, chi2
+
+
+def test_reduced_bits_partition_invariance():
+    """Reduced draws are keyed by global word coordinates: results are
+    independent of the block partition, like the full-word path."""
+    x = jax.random.normal(KEY, (5000,), jnp.float32)
+    outs = [np.asarray(sr_cast_prng_p(x, SEED, "binary8", "sr",
+                                      block_rows=br, rand_bits=8,
+                                      interpret=True))
+            for br in (8, 64, 512)]
+    np.testing.assert_array_equal(outs[0], outs[1])
+    np.testing.assert_array_equal(outs[0], outs[2])
+
+
+def test_reduced_bits_word_sharing_structure():
+    """One PRF word serves 32/r consecutive columns — the reduced plane is
+    exactly the byte/halfword expansion of the packed word grid."""
+    w0, w1 = jnp.uint32(11), jnp.uint32(22)
+    full = np.asarray(common.counter_bits(w0, w1, (4, 8)))
+    red = np.asarray(common.counter_bits_reduced(w0, w1, (4, 32), 8))
+    for c in range(32):
+        want = (full[:, c // 4] >> (8 * (c % 4))) & 0xFF
+        np.testing.assert_array_equal(red[:, c], want)
+
+
 # -------------------------------------------------- structural invariants --
 def test_prng_deterministic_in_key_step():
     x = jax.random.normal(KEY, (3000,), jnp.float32)

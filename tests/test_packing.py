@@ -1,0 +1,97 @@
+"""Packed low-precision storage codecs (kernels/common.pack_block).
+
+The packed code word is the generic (sign | biased exponent | mantissa)
+layout; for binary8/E5M2, binary16 and bfloat16 it reproduces the IEEE
+bit layout, e4m3 uses all exponent fields for finite values.  The
+contract: exact round-trip on every grid value (the epilogues only ever
+pack round_block outputs).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rounding
+from repro.kernels import common
+
+PACKABLE = ["binary8", "e4m3", "binary16", "bfloat16"]
+
+
+@pytest.mark.parametrize("fmt", PACKABLE)
+def test_pack_spec_layout(fmt):
+    ebits, mbits, width, _ = common.pack_spec(fmt)
+    f = rounding.get_format(fmt)
+    assert mbits == f.precision - 1
+    assert 1 + ebits + mbits == width * 8
+    assert common.pack_bytes(fmt) == width
+
+
+def test_pack_spec_matches_ieee_layouts():
+    assert common.pack_spec("binary8")[:3] == (5, 2, 1)     # E5M2
+    assert common.pack_spec("e4m3")[:3] == (4, 3, 1)
+    assert common.pack_spec("binary16")[:3] == (5, 10, 2)   # IEEE half
+    assert common.pack_spec("bfloat16")[:3] == (8, 7, 2)
+
+
+def test_pack_rejects_wide_formats():
+    with pytest.raises(ValueError):
+        common.pack_spec("fp32")
+
+
+@pytest.mark.parametrize("fmt", ["binary8", "e4m3", "binary16"])
+def test_all_codes_roundtrip(fmt):
+    """decode -> encode is the identity on every code word (NaN codes
+    canonicalize to the quiet-NaN pattern)."""
+    n = 1 << (8 * common.pack_bytes(fmt))
+    codes = jnp.arange(n, dtype=jnp.uint32).astype(common.pack_dtype(fmt))
+    vals = common.unpack_block(codes, fmt)
+    back = common.pack_block(vals, fmt)
+    v = np.asarray(vals)
+    ok = (np.asarray(back) == np.asarray(codes)) | np.isnan(v)
+    assert ok.all(), np.flatnonzero(~ok)[:8]
+
+
+def test_bfloat16_codes_roundtrip_within_carrier_domain():
+    """bfloat16 true subnormals lie below the float32-carrier FTZ line
+    (the documented emulation domain) — every other code round-trips."""
+    codes = jnp.arange(1 << 16, dtype=jnp.uint32).astype(jnp.uint16)
+    vals = common.unpack_block(codes, "bfloat16")
+    back = common.pack_block(vals, "bfloat16")
+    v = np.asarray(vals)
+    sub_carrier = (np.abs(v) < 2.0 ** -126) & (np.asarray(codes) & 0x7FFF > 0)
+    ok = (np.asarray(back) == np.asarray(codes)) | np.isnan(v) | sub_carrier
+    assert ok.all()
+
+
+@pytest.mark.parametrize("fmt", PACKABLE)
+def test_grid_values_roundtrip_exactly(fmt):
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=20000)
+                    * 10.0 ** rng.integers(-8, 8, 20000), jnp.float32)
+    r = rounding.round_to_format(x, fmt, "rn")
+    rt = common.unpack_block(common.pack_block(r, fmt), fmt)
+    np.testing.assert_array_equal(np.asarray(rt), np.asarray(r))
+    np.testing.assert_array_equal(np.signbit(np.asarray(rt)),
+                                  np.signbit(np.asarray(r)))
+
+
+def test_signed_zero_and_extremes():
+    f = rounding.get_format("binary8")
+    x = jnp.asarray([0.0, -0.0, f.xmax, -f.xmax, f.xmin, f.xmin_sub,
+                     -f.xmin_sub], jnp.float32)
+    rt = common.unpack_block(common.pack_block(x, "binary8"), "binary8")
+    np.testing.assert_array_equal(np.asarray(rt), np.asarray(x))
+    np.testing.assert_array_equal(np.signbit(np.asarray(rt)),
+                                  np.signbit(np.asarray(x)))
+
+
+def test_nonfinite_encoding():
+    x = jnp.asarray([jnp.inf, -jnp.inf, jnp.nan], jnp.float32)
+    # binary8 has the spare all-ones exponent field: IEEE-style inf/nan
+    rt8 = np.asarray(common.unpack_block(common.pack_block(x, "binary8"),
+                                         "binary8"))
+    assert rt8[0] == np.inf and rt8[1] == -np.inf and np.isnan(rt8[2])
+    # e4m3 has no spare field: non-finite saturates to +-xmax (documented)
+    rt4 = np.asarray(common.unpack_block(common.pack_block(x, "e4m3"),
+                                         "e4m3"))
+    xmax = rounding.get_format("e4m3").xmax
+    np.testing.assert_array_equal(rt4, [xmax, -xmax, xmax])

@@ -39,13 +39,15 @@ def _data(shape, seed=0, scale=0.1):
 # ----------------------------------------------------------- oracle mode --
 def _ref_site(spec, site, x, y, words):
     """Pure-jnp reference for one GEMM site with the same bits derivation
-    the oracle-mode kernel path uses."""
+    the oracle-mode kernel path uses (rand_bits-aware)."""
     if spec.is_identity:
         return x @ y
     w = P.fold_words(words, site)
-    bits = common.counter_bits(w[0], w[1], (x.shape[0], y.shape[1]))
+    bits = common.counter_bits_reduced(w[0], w[1],
+                                       (x.shape[0], y.shape[1]),
+                                       spec.rand_bits)
     return rounding.round_to_format(x @ y, spec.fmt, spec.mode, bits=bits,
-                                    eps=spec.eps)
+                                    eps=spec.eps, rand_bits=spec.rand_bits)
 
 
 def _ref_qdot_vjp(pol, a, b, words, g):
@@ -295,10 +297,12 @@ def _ref_bsite(spec, site, a3, b3, words):
     outs = []
     for e in range(a3.shape[0]):
         we = P.fold_words(w, e)
-        bits = common.counter_bits(we[0], we[1],
-                                   (a3.shape[1], b3.shape[2]))
+        bits = common.counter_bits_reduced(we[0], we[1],
+                                           (a3.shape[1], b3.shape[2]),
+                                           spec.rand_bits)
         outs.append(rounding.round_to_format(
-            a3[e] @ b3[e], spec.fmt, spec.mode, bits=bits, eps=spec.eps))
+            a3[e] @ b3[e], spec.fmt, spec.mode, bits=bits, eps=spec.eps,
+            rand_bits=spec.rand_bits))
     return jnp.stack(outs)
 
 
@@ -532,3 +536,139 @@ def test_serving_absorbed_mla_decode_honors_policy():
     assert np.all(np.isfinite(b1))
     corr = np.corrcoef(a1.ravel(), b1.ravel())[0, 1]
     assert corr > 0.7, corr
+
+
+# ------------------------------------------ fused GLU FFN (precision.fused) --
+def _glu_site_words(words, tag, site):
+    return P.fold_words(P.fold_words(words, tag), site)
+
+
+def test_qffn_glu_oracle_bitexact_vs_jnp_reference():
+    """The fused GLU-FFN kernel path (packed hidden + packed residuals +
+    decode-on-load down GEMM) is bit-exact against a pure-jnp reference
+    of the whole chain, forward AND backward."""
+    import repro.precision.fused as F
+    from repro.kernels.qmatmul import STREAM_ACT
+
+    pol = dataclasses.replace(P.get_policy("binary8-paper-packed"),
+                              oracle=True)
+    base = common.derive_seed(KEY, 12)
+    ctx = P.QuantCtx(pol, base)
+    M, K, N = 24, 16, 32
+    x = _data((M, K), seed=40)
+    wg, wu = _data((K, N), seed=41), _data((K, N), seed=42)
+    wd = _data((N, K), seed=43)
+    g = _data((M, K), seed=44)
+
+    out, vjp = jax.vjp(
+        lambda x_, wg_, wu_, wd_: F.qffn_glu(x_, wg_, wu_, wd_, ctx,
+                                             act="silu"),
+        x, wg, wu, wd)
+    dx, dwg, dwu, dwd = vjp(g)
+
+    def site_round(spec, prod, w, stream=0):
+        bits = common.counter_bits_reduced(w[0], w[1], prod.shape,
+                                           spec.rand_bits, stream=stream)
+        return rounding.round_to_format(prod, spec.fmt, spec.mode,
+                                        bits=bits, eps=spec.eps,
+                                        rand_bits=spec.rand_bits)
+
+    w_gate = _glu_site_words(base, P.TAG_FFN_GATE, P.SITE_FWD)
+    w_up = _glu_site_words(base, P.TAG_FFN_UP, P.SITE_FWD)
+    w_act = _glu_site_words(base, P.TAG_FFN_ACT, P.SITE_ACT)
+    gate_r = site_round(pol.fwd, x @ wg, w_gate)
+    up_r = site_round(pol.fwd, x @ wu, w_up)
+    h = site_round(pol.act, jax.nn.silu(gate_r) * up_r, w_act,
+                   stream=STREAM_ACT)
+    w_down = P.fold_words(base, P.TAG_FFN_DOWN)
+    want_out = site_round(pol.fwd, h @ wd,
+                          P.fold_words(w_down, P.SITE_FWD))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want_out))
+
+    # backward reference: STE through both rounding sites, silu pullback
+    # at the rounded gate, all transpose GEMMs result-rounded per site
+    gf = g.astype(jnp.float32)
+    dh = site_round(pol.dgrad, gf @ wd.T,
+                    P.fold_words(w_down, P.SITE_DGRAD))
+    want_dwd = site_round(pol.wgrad, h.T @ gf,
+                          P.fold_words(w_down, P.SITE_WGRAD))
+    _, silu_vjp = jax.vjp(jax.nn.silu, gate_r)
+    dgate = silu_vjp(dh * up_r)[0]
+    dup = dh * jax.nn.silu(gate_r)
+    wgt = P.fold_words(base, P.TAG_FFN_GATE)
+    wut = P.fold_words(base, P.TAG_FFN_UP)
+    want_dx = (site_round(pol.dgrad, dgate @ wg.T,
+                          P.fold_words(wgt, P.SITE_DGRAD))
+               + site_round(pol.dgrad, dup @ wu.T,
+                            P.fold_words(wut, P.SITE_DGRAD)))
+    want_dwg = site_round(pol.wgrad, x.T @ dgate,
+                          P.fold_words(wgt, P.SITE_WGRAD))
+    want_dwu = site_round(pol.wgrad, x.T @ dup,
+                          P.fold_words(wut, P.SITE_WGRAD))
+    np.testing.assert_array_equal(np.asarray(dwd), np.asarray(want_dwd))
+    np.testing.assert_array_equal(np.asarray(dx), np.asarray(want_dx))
+    np.testing.assert_array_equal(np.asarray(dwg), np.asarray(want_dwg))
+    np.testing.assert_array_equal(np.asarray(dwu), np.asarray(want_dwu))
+
+
+def test_qffn_glu_gate_up_streams_match_unfused_qdense():
+    """Under interpret the fused kernel's gate/up GEMM roundings are
+    bit-identical to the unfused qdense calls (same words, same counter
+    coordinates) — the fusion changes wall-clock, not the eq.-8a draws."""
+    from repro.precision import fused as F
+
+    pol = P.get_policy("binary8-paper")
+    base = common.derive_seed(KEY, 13)
+    x = _data((20, 12), seed=50)
+    wg, wu = _data((12, 28), seed=51), _data((12, 28), seed=52)
+    (h, g_r, u_r), h_fmt, res_fmt = F._glu_kernel_call(
+        pol, "silu", x, wg, wu, base, residuals=True)
+    # binary8-paper is unpacked: hidden and residuals stay float32
+    assert h.dtype == jnp.float32 and h_fmt is None and res_fmt is None
+    g_v = common.unpack_block(g_r, res_fmt) if res_fmt else g_r
+    u_v = common.unpack_block(u_r, res_fmt) if res_fmt else u_r
+    ctx = P.QuantCtx(pol, base)
+    gate_unfused = P.qdot(x, wg, ctx, tag=P.TAG_FFN_GATE)
+    up_unfused = P.qdot(x, wu, ctx, tag=P.TAG_FFN_UP)
+    np.testing.assert_array_equal(np.asarray(g_v),
+                                  np.asarray(gate_unfused, np.float32))
+    np.testing.assert_array_equal(np.asarray(u_v),
+                                  np.asarray(up_unfused, np.float32))
+
+
+@pytest.mark.parametrize("preset", ["binary8-paper-packed",
+                                    "binary8-paper-r16"])
+def test_new_preset_train_step_end_to_end(preset):
+    """Packed-storage and few-random-bits presets train end-to-end
+    through the fused FFN path (finite loss, params on the carrier
+    grid)."""
+    from repro.launch import steps as steps_lib
+    cfg = reduced(get_config("smollm-360m"))
+    model = build_model(cfg)
+    opt = steps_lib.paper_optimizer(lr=0.01)
+    params = model.init(jax.random.PRNGKey(0))
+    state = opt.init(params, jax.random.PRNGKey(1))
+    step = jax.jit(steps_lib.make_train_step(model, opt,
+                                             gemm_policy=preset))
+    batch = {"tokens": jnp.zeros((2, 8), jnp.int32),
+             "labels": jnp.zeros((2, 8), jnp.int32)}
+    params2, state2, metrics = step(params, state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(state2.step) == 1
+
+
+@pytest.mark.parametrize("rand_bits", [8, 16])
+def test_qdot_prng_sr_few_random_bits_eq5(rand_bits):
+    """Eqs. (3)/(5) per GEMM site survive the few-random-bits draw: bias
+    within CLT + the 2^-(r+1)-ulp quantization bound, variance within
+    5%."""
+    err = _site_samples("fwd", rounding.spec("binary8", "sr",
+                                             rand_bits=rand_bits)) - X0
+    q = float(rounding.ulp(jnp.float32(X0), "binary8"))
+    _, _, frac_a, _ = rounding.magnitude_decompose(
+        jnp.float32(X0), rounding.get_format("binary8"))
+    frac = float(frac_a)
+    want_var = frac * (1.0 - frac) * q * q
+    tol = _clt_tol(want_var, err.size) + q * 2.0 ** -(rand_bits + 1)
+    assert abs(err.mean()) < tol, (rand_bits, err.mean())
+    assert abs(err.var() - want_var) < 0.05 * want_var
