@@ -1,0 +1,95 @@
+"""Rounded-collective and gradient-accumulation microbenchmarks.
+
+Two row families feeding ``BENCH_kernels.json`` (and therefore the CI
+perf gate) alongside the kernel rows:
+
+* **accumulation throughput** — one microbatch-gradient add on a 1M-element
+  tree through each registered carry (fp32 exact, bf16-RN, bf16-SR,
+  compensated bf16-SR, binary8-SR).  Wall-clocks are CPU software-emulation
+  overhead; the derived columns are slowdown ratios vs the fp32 add of the
+  same shape (higher is worse — the perf-gate quantities).
+* **wire encode + wire-byte model** — the codec quantization cost of a 1M
+  payload (the compute each participant adds per hop), plus derived-only
+  rows for the reduce-scatter wire-byte model: an fp32 ring all-reduce
+  moves ``2·(p-1)/p·4`` B/elt per participant; the rounded reduce-scatter
+  topology moves the same pattern at codec width (int8/binary8/e4m3: 1 B →
+  ratio 0.25, bf16: 2 B → ratio 0.5) — EXPERIMENTS.md §Rounded distributed
+  training.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import codecs as codecs_lib
+from repro.dist.collectives import wire_bytes
+from repro.optim.accumulate import get_accumulator
+
+# wire-byte model at the production participant count
+WIRE_P = 8
+
+
+def _time_many(fns, iters):
+    from benchmarks.kernel_bench import _time_many as tm
+    return tm(fns, iters)
+
+
+def rows(n: int = 1 << 20, iters: int = 20):
+    key = jax.random.PRNGKey(0)
+    g = jax.random.normal(key, (n,), jnp.float32) * 1e-3
+    acc_presets = ["fp32", "bf16-rn", "bf16-sr", "bf16-sr-kahan",
+                   "binary8-sr"]
+
+    def make_add(preset):
+        acc = get_accumulator(preset)
+        words = acc.step_words(key, 0)
+
+        @jax.jit
+        def add(t, g_):
+            return acc.add(t, {"g": g_}, words, 1).total["g"]
+        total0 = acc.init({"g": g})
+        return lambda: add(total0, g)
+
+    adds = [make_add(p) for p in acc_presets]
+
+    # codec encode cost of one 1M-element wire payload
+    codec = codecs_lib.get_wire_codec("int8-sr")
+    words = codecs_lib.wire_words(key, 0)
+
+    @jax.jit
+    def encode(g_, w_):
+        bits = codecs_lib.codec_bits(codec, w_, g_.shape)
+        return codec.quantize(g_, bits=bits)
+
+    times = _time_many(adds + [lambda: encode(g, words)], iters)
+    us_acc, us_enc = times[:-1], times[-1]
+    melt = n / 1e6
+    us_fp32 = us_acc[0]
+
+    out = [("collective/accum_fp32_us_per_Melt", us_fp32 / melt, 1.0,
+            iters)]
+    out += [
+        (f"collective/accum_{p.replace('-', '_')}_us_per_Melt",
+         us / melt, us / us_fp32, iters)
+        for p, us in zip(acc_presets[1:], us_acc[1:])]
+    out.append(("collective/wire_encode_int8_sr_us_per_Melt",
+                us_enc / melt, us_enc / us_fp32, iters))
+
+    # derived-only wire-byte model rows (us == 0: excluded from the gate);
+    # see collectives.wire_bytes for the ring model
+    tree = {"g": g}
+    for name in (None, "int8-sr", "e4m3-sr", "bf16-sr"):
+        total, ratio = wire_bytes(tree, name, WIRE_P)
+        tag = (name or "fp32").replace("-", "_")
+        out.append((f"collective/wire_{tag}_B_per_elt", 0.0, total / n, 0))
+        out.append((f"collective/wire_{tag}_traffic_ratio_vs_fp32", 0.0,
+                    ratio, 0))
+    # the quantized all-reduce ships fp32 partial means on the gather
+    # phase — the contrast that motivates the reduce-scatter topology
+    total_ar, ratio_ar = wire_bytes(tree, "int8-sr", WIRE_P,
+                                    topology="allreduce")
+    out.append(("collective/wire_int8_sr_allreduce_B_per_elt", 0.0,
+                total_ar / n, 0))
+    out.append(("collective/wire_int8_sr_allreduce_ratio_vs_fp32", 0.0,
+                ratio_ar, 0))
+    return out

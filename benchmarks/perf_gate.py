@@ -8,10 +8,12 @@ Which rows are guarded: every row present in BOTH files whose fresh
 ``us > 0`` **and** ``derived > 0`` — by the bench_kernels_v2 contract
 (benchmarks/kernel_bench.py) those derived columns are slowdown ratios vs
 an fp32 baseline measured *in the same run*, so machine-speed variance
-cancels and higher is strictly worse.  Derived-only model rows (traffic
-bytes, roofline bounds; ``us == 0``) and the speedup row are excluded.
-Accepts both the v1 and v2 schemas so the gate works across the schema
-bump.
+cancels and higher is strictly worse.  This covers the ``kernel/*`` rows
+and the ``collective/*`` accumulation-throughput / wire-encode rows
+(benchmarks/collective_bench.py) alike.  Derived-only model rows (traffic
+bytes, wire-byte ratios, roofline bounds; ``us == 0``) and the speedup
+row are excluded.  Accepts both the v1 and v2 schemas so the gate works
+across the schema bump.
 
 Usage::
 

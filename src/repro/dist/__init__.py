@@ -1,18 +1,27 @@
-"""Distribution utilities: sharding rules, mesh-axes plumbing, collectives.
+"""Distribution utilities: sharding rules, mesh-axes plumbing, rounded
+collectives and wire codecs.
 
 ``sharding`` holds the declarative parameter/activation partitioning rules
 (GSPMD specs keyed by parameter path) plus the ambient-mesh context the
-model code consults through ``shard_act``; ``collectives`` holds the
-hierarchical (pod-aware) gradient reduction used on multi-pod meshes.
+model code consults through ``shard_act``; ``codecs`` is the wire-codec
+registry (rounded quantization of collective payloads through
+``core.rounding.RoundingSpec``); ``collectives`` holds the rounded
+reduction topologies (reduce-scatter wire, all-reduce, the hierarchical
+pod path) built on those codecs.
 """
-from repro.dist import collectives, sharding
+from repro.dist import codecs, collectives, sharding
+from repro.dist.codecs import WireCodec, get_wire_codec, wire_codec_names
+from repro.dist.collectives import (hierarchical_grad_reduce, wire_bytes,
+                                    wire_reduce)
 from repro.dist.sharding import (MeshAxes, activation_spec,
                                  build_param_shardings,
                                  evenly_divisible_spec, param_spec_for_path,
                                  set_mesh_axes, shard_act)
 
 __all__ = [
-    "MeshAxes", "activation_spec", "build_param_shardings", "collectives",
-    "evenly_divisible_spec", "param_spec_for_path", "set_mesh_axes",
-    "shard_act", "sharding",
+    "MeshAxes", "WireCodec", "activation_spec", "build_param_shardings",
+    "codecs", "collectives", "evenly_divisible_spec", "get_wire_codec",
+    "hierarchical_grad_reduce", "param_spec_for_path", "set_mesh_axes",
+    "shard_act", "sharding", "wire_bytes", "wire_codec_names",
+    "wire_reduce",
 ]

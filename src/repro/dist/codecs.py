@@ -1,0 +1,192 @@
+"""Wire codecs: rounded quantization of collective payloads.
+
+The paper's stagnation mechanism applies to the *wire* exactly as it does
+to the optimizer update: a deterministically-rounded (RN) quantizer on the
+gradient all-reduce zeroes every entry below half a wire quantum on every
+participant, so small gradient signal never crosses the network — the
+eq. 8a residual moves onto the interconnect.  Stochastic rounding keeps
+each entry alive in expectation; the paper's biased schemes (SRε /
+signed-SRε) carry their bias onto the wire unchanged.
+
+A :class:`WireCodec` bundles the quantization grid and the rounding scheme
+for one collective payload:
+
+* **float-format codecs** (``binary8``/``e4m3``/``bfloat16``/``binary16``)
+  round every element onto the format grid through
+  :func:`repro.core.rounding.round_to_format` — the identical bit-exact
+  engine the kernels use; wire bytes come from the packed code-word width
+  (:func:`repro.kernels.common.pack_bytes`).
+* the **int8 block codec** scales by the (participant-shared) absmax/127
+  and rounds onto the integer grid with the same unified p-round-up rule
+  (``core.rounding._p_round_up``), so RN/SR/SRε/signed-SRε all apply.
+  ``int8-rn`` reproduces the historical ``jnp.round`` wire bit-for-bit —
+  kept only as the explicitly-named stagnation baseline.
+
+Randomness is drawn from the counter-based Threefry PRF
+(``kernels.common.counter_bits``) keyed by seed words derived via the
+``derive_seed``/``fold_words`` tag-fold scheme: base words =
+``derive_seed(key, step, _WIRE_SALT)``, then per-leaf, per-stage and
+per-participant (``lax.axis_index``) folds — so draws are decorrelated
+across tree leaves, wire hops and mesh participants, and bit-reproducible
+under checkpoint resume (the whole wire is a deterministic function of the
+checkpointed ``(key, step)``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rounding import (RoundingSpec, _p_round_up,
+                                 _uniform_from_bits, spec as rspec)
+
+_WIRE_SALT = 0x77697265          # "wire": context salt for derive_seed
+_STAGE_STREAM = 0x5A17           # fold distance between wire stages
+
+
+# ---------------------------------------------------------------------------
+# Codec type.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class WireCodec:
+    """Quantizer for one collective payload.
+
+    ``kind``: "float" (spec.fmt grid) or "int8" (absmax-scaled integer
+    grid; ``spec.fmt`` is unused, ``spec.mode``/``spec.eps`` select the
+    rounding scheme).
+    """
+
+    name: str
+    kind: str                    # "float" | "int8"
+    spec: RoundingSpec
+
+    @property
+    def stochastic(self) -> bool:
+        return self.spec.mode in ("sr", "sr_eps", "signed_sr_eps")
+
+    @property
+    def bytes_per_elt(self) -> float:
+        """Wire bytes per payload element (the packed code-word width)."""
+        if self.kind == "int8":
+            return 1.0
+        from repro.kernels.common import pack_bytes
+        return float(pack_bytes(self.spec.fmt))
+
+    def quantize(self, g, *, bits=None, axis_name=None):
+        """Project ``g`` onto the codec grid (float32 carrier in/out).
+
+        ``bits``: uint32 array like ``g`` for the stochastic schemes.
+        ``axis_name``: inside ``shard_map``, share the int8 absmax scale
+        grid across the named participants (the codec of an all-reduce
+        payload must use one grid per reduction group).
+        """
+        g = jnp.asarray(g, jnp.float32)
+        if self.kind == "float":
+            # signed-SRε bias direction: the payload *is* the gradient
+            v = g if self.spec.mode == "signed_sr_eps" else None
+            return self.spec(g, bits=bits, v=v)
+        # int8 block codec: absmax/127 scale, rounded integer grid.
+        scale = jnp.max(jnp.abs(g)) / jnp.float32(127.0)
+        if axis_name is not None:
+            scale = jax.lax.pmax(scale, axis_name)
+        scale = jnp.maximum(scale, jnp.float32(1e-30))
+        y = g / scale
+        m = jnp.minimum(jnp.abs(y), jnp.float32(127.0))
+        fm = jnp.floor(m)
+        frac = m - fm
+        if bits is None:
+            u = jnp.full(g.shape, 0.5, jnp.float32)
+        else:
+            u = _uniform_from_bits(bits, self.spec.rand_bits)
+        sign = jnp.sign(y)
+        # signed-SRε on the wire: the payload *is* the gradient, so the
+        # bias direction v == g and sign(x)·sign(v) == 1 for every nonzero
+        # entry — the paper's Definition-3 shrink-toward-zero bias.
+        p_up = _p_round_up(self.spec.mode, frac, fm, sign,
+                           jnp.float32(self.spec.eps), sign)
+        q = jnp.minimum(fm + (u < p_up).astype(jnp.float32),
+                        jnp.float32(127.0))
+        return sign * q * scale
+
+
+# ---------------------------------------------------------------------------
+# Registry.  Names: "<carrier>-<scheme>" with carrier in {int8, bf16, fp16,
+# e4m3, binary8} and scheme in {rn, sr, sr_eps, ssr}; "fp32"/"none" = no
+# quantization.  SRε/signed-SRε use the paper's ε = 0.1.
+# ---------------------------------------------------------------------------
+_CARRIERS = {"int8": None, "bf16": "bfloat16", "fp16": "binary16",
+             "e4m3": "e4m3", "binary8": "binary8"}
+_SCHEMES = {"rn": ("rn", 0.0), "sr": ("sr", 0.0),
+            "sr_eps": ("sr_eps", 0.1), "ssr": ("signed_sr_eps", 0.1)}
+_IDENTITY_NAMES = (None, "fp32", "none")
+
+
+def wire_codec_names():
+    """Every registered codec name (the CLI choices)."""
+    return sorted(f"{c}-{s}" for c in _CARRIERS for s in _SCHEMES) + ["fp32"]
+
+
+def get_wire_codec(
+        codec: Union[None, str, WireCodec]) -> Optional[WireCodec]:
+    """None | name | WireCodec -> Optional[WireCodec] (None = fp32 wire)."""
+    if codec is None or isinstance(codec, WireCodec):
+        return codec
+    if codec in _IDENTITY_NAMES:
+        return None
+    parts = codec.split("-", 1)
+    if len(parts) == 2 and parts[0] in _CARRIERS and parts[1] in _SCHEMES:
+        carrier, (mode, eps) = parts[0], _SCHEMES[parts[1]]
+        fmt = _CARRIERS[carrier]
+        if fmt is None:
+            return WireCodec(codec, "int8",
+                             RoundingSpec(None, mode, eps))
+        return WireCodec(codec, "float", rspec(fmt, mode, eps))
+    raise ValueError(
+        f"unknown wire codec {codec!r}; known: {wire_codec_names()}")
+
+
+# ---------------------------------------------------------------------------
+# Seed plumbing (mirrors precision.policy: derive once, fold in-graph).
+# ---------------------------------------------------------------------------
+def wire_words(key, step=None):
+    """(2,) uint32 base seed words for the wire of one optimizer step."""
+    from repro.kernels.common import derive_seed
+    return derive_seed(key, step, _WIRE_SALT)
+
+
+def fold_wire(words, tag):
+    """Fold a (possibly traced) tag into seed words — one Threefry eval."""
+    from repro.precision.policy import fold_words
+    return fold_words(words, tag)
+
+
+def participant_words(words, axis_name):
+    """Fold this participant's mesh position into the seed words.
+
+    Inside ``shard_map`` every participant sees the same *local*
+    coordinates for its shard, so — exactly as with the batched-GEMM slice
+    seeds (``precision.policy.slice_words``) — decorrelation across
+    participants must come from the seed, not the counter.
+    """
+    if axis_name is None:
+        return words
+    return fold_wire(words, jax.lax.axis_index(axis_name).astype(jnp.uint32))
+
+
+def codec_bits(codec: Optional[WireCodec], words, shape, stage: int = 0):
+    """uint32 bit-plane for one payload of ``shape`` (None if not needed).
+
+    ``stage`` separates the draws of the reduce-scatter and all-gather
+    legs of one reduction (distinct PRF streams).
+    """
+    if codec is None or not codec.stochastic:
+        return None
+    from repro.kernels.common import counter_bits
+    n = 1
+    for d in shape:
+        n *= int(d)
+    bits = counter_bits(words[0], words[1], (1, max(n, 1)),
+                        stream=_STAGE_STREAM * stage)
+    return bits.reshape(shape) if n else bits[:0].reshape(shape)

@@ -10,10 +10,17 @@ from __future__ import annotations
 import jax
 
 
-def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True,
+              auto: frozenset = frozenset()):
+    """``auto``: mesh axis names left to the compiler (GSPMD) — the body is
+    manual only over the remaining axes.  Used by the rounded-wire train
+    step: manual over the data axes (explicit rounded collectives), auto
+    over ``model`` so tensor parallelism keeps partitioning itself."""
     if hasattr(jax, "shard_map"):
+        kw = {"auto": auto} if auto else {}
         return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=check_vma)
+                             out_specs=out_specs, check_vma=check_vma, **kw)
     from jax.experimental.shard_map import shard_map as _sm
+    kw = {"auto": auto} if auto else {}
     return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-               check_rep=check_vma)
+               check_rep=check_vma, **kw)

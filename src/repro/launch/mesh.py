@@ -30,6 +30,34 @@ def make_local_mesh(model_axis: int = 1):
     return jax.make_mesh((data, model_axis), ("data", "model"))
 
 
+def parse_mesh(spec: str):
+    """'DPxTP' (e.g. "4x2") or 'PODxDPxTP' -> a named host-device mesh.
+
+    Axis names: ("data", "model") for two factors, ("pod", "data",
+    "model") for three.  The factor product must equal the local device
+    count (on CPU use ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    to fake an N-device host).
+    """
+    try:
+        dims = tuple(int(d) for d in spec.lower().replace("×", "x").split("x"))
+    except ValueError as exc:
+        raise ValueError(f"bad mesh spec {spec!r}; want e.g. '4x2'") from exc
+    if len(dims) not in (2, 3) or any(d < 1 for d in dims):
+        raise ValueError(f"bad mesh spec {spec!r}; want 'DPxTP' or "
+                         "'PODxDPxTP' with positive factors")
+    n = len(jax.devices())
+    prod = 1
+    for d in dims:
+        prod *= d
+    if prod != n:
+        raise ValueError(
+            f"mesh {spec!r} needs {prod} devices but the host has {n}; "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{prod} (CPU) or pick a matching topology")
+    axes = ("data", "model") if len(dims) == 2 else ("pod", "data", "model")
+    return jax.make_mesh(dims, axes)
+
+
 def mesh_axes_for(mesh, *, batch_size: Optional[int] = None) -> MeshAxes:
     """MeshAxes bound to a mesh; batch axes shrink to () for batch=1 cells
     (long-context decode replicates the single sequence and shards heads)."""

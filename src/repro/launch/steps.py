@@ -51,8 +51,25 @@ def baseline_optimizer(lr: float = 1e-3):
 
 
 # ------------------------------------------------------------ step makers --
+def _microbatch_split(batch, accum_steps: int):
+    """(B, ...) leaves -> (accum_steps, B/accum_steps, ...) scan stacks."""
+    def split(x):
+        b = x.shape[0]
+        if b % accum_steps != 0:
+            raise ValueError(
+                f"batch {b} not divisible by accum_steps={accum_steps} "
+                "(under the rounded wire the split applies to each "
+                "participant's local shard: global batch = dp x "
+                "accum_steps x microbatch)")
+        return x.reshape((accum_steps, b // accum_steps) + x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
 def make_train_step(model, optimizer, *, grad_dtype=jnp.bfloat16,
-                    gemm_policy=None):
+                    gemm_policy=None, accum_steps: int = 1,
+                    accum_spec=None, wire_spec=None, mesh=None,
+                    ax: Optional[MeshAxes] = None,
+                    wire_topology: str = "reduce_scatter"):
     """Mixed-precision train step: the loss is differentiated w.r.t.
     bf16-cast params so gradients (and their cross-device reductions) are
     bf16; the optimizer applies them to the fp32/low-precision master
@@ -62,28 +79,137 @@ def make_train_step(model, optimizer, *, grad_dtype=jnp.bfloat16,
     config's quantized-GEMM policy: every forward/dgrad/wgrad GEMM of the
     step then runs through the rounded Pallas kernels (repro.precision),
     seeded per (step, layer, call site) from the checkpointed optimizer
-    key — the end-to-end low-precision training regime of eq. (8a)."""
+    key — the end-to-end low-precision training regime of eq. (8a).
+
+    ``accum_steps > 1`` splits the global batch into that many
+    microbatches and accumulates their gradients in a ``lax.scan``; the
+    running sum is carried on ``accum_spec``'s grid (preset name,
+    GradAccumulator, or None = exact fp32; repro.optim.accumulate) —
+    bf16-RN is the paper's swamping baseline, the SR carries avoid it.
+
+    ``wire_spec`` (codec name or WireCodec; repro.dist.codecs) turns on
+    the explicit rounded gradient wire: the gradient computation then runs
+    under ``shard_map`` over the mesh's batch axes, with each participant
+    computing microbatch gradients on its local batch shard, accumulating
+    locally, and mean-reducing through the rounded collective
+    (``wire_topology``: reduce-scatter → rounded shard wire → all-gather,
+    or plain all-reduce).  Requires ``mesh`` and ``ax`` (the MeshAxes
+    whose ``batch`` axes carry the data-parallel split).  Wire draws are
+    seeded per (leaf, step, shard) from the checkpointed optimizer key,
+    so sharded resume stays bit-exact.
+    """
     if gemm_policy is not None:
         model = build_model(dataclasses.replace(model.cfg,
                                                 gemm_policy=gemm_policy))
+    from repro.optim.accumulate import get_accumulator
+    accumulator = get_accumulator(accum_spec)
+
+    def cast(p):
+        return jax.tree.map(
+            lambda x: x.astype(grad_dtype)
+            if x.dtype == jnp.float32 else x, p)
+
+    def grads_and_metrics(params, key, step, batch, participant_axes=None):
+        """Microbatch-accumulated fp32 grads + mean metrics on ``batch``
+        (the whole global batch, or one participant's shard of it).
+
+        ``participant_axes``: inside the wire ``shard_map``, the manual
+        axes whose ``lax.axis_index`` must fold into the accumulator seed
+        words so each participant's carry rounds with an independent
+        stream (same decorrelation rule as the wire codec itself)."""
+        base_rng = jax.random.fold_in(key, step)
+
+        def one_microbatch(mb, rng):
+            def loss_fn(p):
+                return model.loss_fn(p, mb, rng=rng)
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(cast(params))
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            metrics = dict(metrics)
+            metrics["loss"] = loss
+            return grads, metrics
+
+        if accum_steps == 1:
+            return one_microbatch(batch, base_rng)
+
+        micro = _microbatch_split(batch, accum_steps)
+        words = accumulator.step_words(key, step)
+        if participant_axes is not None and accumulator.stochastic:
+            from repro.dist import codecs as codecs_lib
+            words = codecs_lib.participant_words(words, participant_axes)
+
+        def scan_body(acc, idx_mb):
+            idx, mb = idx_mb
+            grads, metrics = one_microbatch(
+                mb, jax.random.fold_in(base_rng, idx))
+            acc = accumulator.add(acc, grads, words, idx)
+            return acc, metrics
+
+        # grads mirror the param tree (f32), so init the carry from params
+        acc0 = accumulator.init(params)
+        acc, metrics = jax.lax.scan(
+            scan_body, acc0,
+            (jnp.arange(accum_steps), micro))
+        grads = accumulator.finalize(acc, accum_steps)
+        metrics = jax.tree.map(lambda m: jnp.mean(m, axis=0), metrics)
+        return grads, metrics
+
+    codec = None
+    batch_axes: Tuple[str, ...] = ()
+    if wire_spec is not None:
+        from repro.dist.codecs import get_wire_codec
+        codec = get_wire_codec(wire_spec)
+    if codec is not None:
+        if mesh is None or ax is None:
+            raise ValueError("wire_spec needs a mesh and MeshAxes "
+                             "(the data-parallel axes to reduce over)")
+        batch_axes = tuple(a for a in ax.batch if mesh.shape[a] > 1)
+        if not batch_axes:
+            codec = None     # single-participant wire: nothing to round
+
+    if codec is None:
+        def train_step(params, opt_state, batch):
+            grads, metrics = grads_and_metrics(
+                params, opt_state.key, opt_state.step, batch)
+            new_params, new_state = optimizer.apply(params, grads, opt_state)
+            return new_params, new_state, metrics
+        return train_step
+
+    # -- explicit rounded-wire path (shard_map over the batch axes) --------
+    # The body is *manual over every mesh axis*: batch axes carry the
+    # data-parallel split and the explicit rounded collectives; the other
+    # axes (``model``) see replicated operands, so the per-shard loss/grad
+    # computation is redundantly replicated across them — semantically
+    # exact, and the robust choice on current jax (sharding constraints
+    # inside a partially-``auto`` manual region abort the XLA CPU
+    # partitioner; ``compat.shard_map(auto=...)`` is ready once that
+    # lands).  The ambient shard_act constraints are therefore disabled
+    # inside (a manual region may not mention manual axes).
+    from repro.dist import codecs as codecs_lib, compat
+    from repro.dist.collectives import wire_reduce
+
+    def wire_body(params, key, step, batch, words):
+        with set_mesh_axes(MeshAxes()):
+            grads, metrics = grads_and_metrics(
+                params, key, step, batch, participant_axes=batch_axes)
+        grads = wire_reduce(grads, batch_axes, codec=codec, words=words,
+                            topology=wire_topology)
+        metrics = jax.tree.map(
+            lambda m: jax.lax.pmean(m, batch_axes), metrics)
+        return grads, metrics
 
     def train_step(params, opt_state, batch):
-        rng = jax.random.fold_in(opt_state.key, opt_state.step)
-
-        def cast(p):
-            return jax.tree.map(
-                lambda x: x.astype(grad_dtype)
-                if x.dtype == jnp.float32 else x, p)
-
-        def loss_fn(p):
-            return model.loss_fn(p, batch, rng=rng)
-
-        (loss, metrics), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(cast(params))
-        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        words = codecs_lib.wire_words(opt_state.key, opt_state.step)
+        batch_spec = jax.tree.map(lambda _: P(batch_axes), batch)
+        sharded = compat.shard_map(
+            wire_body, mesh=mesh,
+            in_specs=(jax.tree.map(lambda _: P(), params), P(), P(),
+                      batch_spec, P()),
+            out_specs=(jax.tree.map(lambda _: P(), params), P()),
+            check_vma=False)
+        grads, metrics = sharded(params, opt_state.key, opt_state.step,
+                                 batch, words)
         new_params, new_state = optimizer.apply(params, grads, opt_state)
-        metrics = dict(metrics)
-        metrics["loss"] = loss
         return new_params, new_state, metrics
 
     return train_step

@@ -1,7 +1,9 @@
 """End-to-end training driver.
 
 Composes: arch config → model → paper-rounded optimizer → synthetic token
-pipeline → fault-tolerant TrainLoop (checkpoints, restart, elastic resume).
+pipeline → fault-tolerant TrainLoop (checkpoints, restart, elastic resume),
+optionally sharded over an explicit dp×tp mesh with the rounded gradient
+wire and low-precision microbatch accumulation.
 
 Examples:
   # CPU-sized smoke run of the full stack
@@ -11,6 +13,14 @@ Examples:
   # paper-faithful rounding ablation
   PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b --reduced \
       --steps 100 --rounding signed_sr_eps --fmt binary8
+
+  # sharded end-to-end low-precision training: dp=4 x tp=2 host-device
+  # mesh, e4m3-SR rounded gradient wire (reduce-scatter topology), 4-way
+  # microbatch accumulation, quantized GEMMs
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+    python -m repro.launch.train --arch smollm-360m --reduced --steps 10 \
+      --mesh 4x2 --gemm-policy binary8-paper --wire-spec e4m3-sr \
+      --accum-steps 4 --accum-spec bf16-sr
 """
 from __future__ import annotations
 
@@ -20,13 +30,15 @@ import time
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config, reduced as reduce_cfg
 from repro.core import gd, rounding
 from repro.data import ShardedPipeline, make_token_pipeline
 from repro.launch import steps as steps_lib
-from repro.launch.mesh import make_local_mesh, mesh_axes_for
-from repro.dist.sharding import set_mesh_axes
+from repro.launch.mesh import make_local_mesh, mesh_axes_for, parse_mesh
+from repro.dist.sharding import (build_param_shardings,
+                                 evenly_divisible_spec, set_mesh_axes)
 from repro.models import build_model
 from repro.optim import base as optim_base, qsgd
 from repro.train import TrainLoop, TrainLoopConfig
@@ -51,10 +63,30 @@ def rounding_config(kind: str, fmt: str, eps: float) -> gd.GDRounding:
     raise ValueError(kind)
 
 
+def _state_shardings(params, opt_state, mesh, ax):
+    """(param, opt-state) NamedSharding trees: params/momentum by the
+    declarative rules, scalars and keys replicated."""
+    p_sh = build_param_shardings(params, mesh, ax)
+    rep = NamedSharding(mesh, P())
+    mom = opt_state.momentum
+    m_sh = build_param_shardings(mom, mesh, ax) if mom != () else ()
+    o_sh = opt_state._replace(
+        step=rep, key=rep, momentum=m_sh)
+    return p_sh, o_sh
+
+
 def run(arch: str, *, reduced: bool, steps: int, batch: int, seq: int,
         lr: float, rounding_kind: str, fmt: str, eps: float,
         ckpt_dir: str, log_every: int = 10, momentum: float = 0.9,
-        update_path: str = "jnp", gemm_policy: str = None):
+        update_path: str = "jnp", gemm_policy: str = None,
+        mesh_spec: str = None, wire_spec: str = None,
+        accum_steps: int = 1, accum_spec: str = None,
+        wire_topology: str = "reduce_scatter"):
+    # partition-invariant jax.random streams: the rounded update/wire/
+    # accumulator draws must not change with the mesh placement, or the
+    # sharded run would silently diverge from the single-device one and
+    # elastic resume onto a different topology would lose bit-exactness
+    jax.config.update("jax_threefry_partitionable", True)
     cfg = get_config(arch)
     if reduced:
         cfg = reduce_cfg(cfg)
@@ -68,16 +100,34 @@ def run(arch: str, *, reduced: bool, steps: int, batch: int, seq: int,
                cfg=rounding_config(rounding_kind, fmt, eps),
                update_path=update_path)
 
-    mesh = make_local_mesh()
+    mesh = parse_mesh(mesh_spec) if mesh_spec else make_local_mesh()
     ax = mesh_axes_for(mesh, batch_size=batch)
     params = model.init(jax.random.PRNGKey(0))
     opt_state = opt.init(params, jax.random.PRNGKey(1))
 
-    pipe = ShardedPipeline(make_token_pipeline(
-        cfg.vocab_size, seq, batch, seed=0))
+    # explicit sharded placement (and the resume path: jit in_shardings
+    # re-place checkpoint-restored host arrays onto the same layout)
+    p_sh, o_sh = _state_shardings(params, opt_state, mesh, ax)
+    params = jax.device_put(params, p_sh)
+    opt_state = jax.device_put(opt_state, o_sh)
+    bt = tuple(ax.batch) if ax.batch else None
 
-    train_step = steps_lib.make_train_step(model, opt)
-    jitted = jax.jit(train_step)
+    def batch_shardings(b):
+        return jax.tree.map(
+            lambda x: NamedSharding(mesh, evenly_divisible_spec(
+                P(bt), x.shape, mesh)), b)
+
+    pipe_src = make_token_pipeline(cfg.vocab_size, seq, batch, seed=0)
+    pipe = ShardedPipeline(pipe_src,
+                           sharding=batch_shardings(pipe_src.batch_at(0)))
+
+    train_step = steps_lib.make_train_step(
+        model, opt, accum_steps=accum_steps, accum_spec=accum_spec,
+        wire_spec=wire_spec, mesh=mesh, ax=ax,
+        wire_topology=wire_topology)
+    with set_mesh_axes(ax), mesh:
+        jitted = jax.jit(train_step, in_shardings=(
+            p_sh, o_sh, batch_shardings(pipe_src.batch_at(0))))
 
     def step_fn(state, batch_):
         params_, opt_ = state
@@ -89,13 +139,17 @@ def run(arch: str, *, reduced: bool, steps: int, batch: int, seq: int,
                      TrainLoopConfig(total_steps=steps,
                                      checkpoint_every=max(10, steps // 5),
                                      checkpoint_dir=ckpt_dir,
-                                     log_every=log_every))
+                                     log_every=log_every),
+                     state_sharding=(p_sh, o_sh))
     t0 = time.time()
     out = loop.run()
     dt = time.time() - t0
     n_params = model.param_count(params)
     print(f"arch={cfg.name} params={n_params/1e6:.1f}M steps={out['final_step']} "
-          f"wall={dt:.1f}s restarts={out['restarts']}")
+          f"wall={dt:.1f}s restarts={out['restarts']} "
+          f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
+          f"wire={wire_spec or 'fp32'} accum={accum_steps}x"
+          f"{'/' + accum_spec if accum_spec else ''}")
     for h in out["history"]:
         print(f"  step {h['step']:>5}  loss {h['loss']:.4f}  ce {h.get('ce', float('nan')):.4f}")
     return out
@@ -126,11 +180,38 @@ def main():
                          "every forward/dgrad/wgrad GEMM result onto the "
                          "preset's low-precision grid via the Pallas "
                          "kernels; default: full-precision GEMMs")
+    from repro.dist.codecs import wire_codec_names
+    from repro.optim.accumulate import ACCUM_PRESETS
+    ap.add_argument("--mesh", default=None, metavar="DPxTP",
+                    help="explicit mesh topology, e.g. 4x2 (data x model) "
+                         "or 2x2x2 (pod x data x model); default: all "
+                         "devices on the data axis")
+    ap.add_argument("--wire-spec", default=None,
+                    choices=wire_codec_names(),
+                    help="gradient-wire codec: quantize the cross-device "
+                         "gradient reduction payload through this rounded "
+                         "grid (dist/codecs.py); default: fp32 wire")
+    ap.add_argument("--wire-topology", default="reduce_scatter",
+                    choices=["reduce_scatter", "allreduce"],
+                    help="rounded-reduction topology: reduce-scatter + "
+                         "rounded shard wire + all-gather (half the wire "
+                         "bytes), or quantized all-reduce")
+    ap.add_argument("--accum-steps", type=int, default=1,
+                    help="microbatch gradient-accumulation factor (the "
+                         "global batch is split this many ways)")
+    ap.add_argument("--accum-spec", default=None,
+                    choices=sorted(ACCUM_PRESETS),
+                    help="accumulator carry grid (optim/accumulate.py): "
+                         "bf16-rn is the swamping baseline, the -sr "
+                         "carries keep small microbatch gradients alive; "
+                         "default: exact fp32")
     args = ap.parse_args()
     run(args.arch, reduced=args.reduced, steps=args.steps, batch=args.batch,
         seq=args.seq, lr=args.lr, rounding_kind=args.rounding, fmt=args.fmt,
         eps=args.eps, ckpt_dir=args.ckpt_dir, update_path=args.update_path,
-        gemm_policy=args.gemm_policy)
+        gemm_policy=args.gemm_policy, mesh_spec=args.mesh,
+        wire_spec=args.wire_spec, accum_steps=args.accum_steps,
+        accum_spec=args.accum_spec, wire_topology=args.wire_topology)
 
 
 if __name__ == "__main__":

@@ -4,10 +4,13 @@ from repro.optim.adam import QAdam, qadam
 from repro.optim.scale import DynamicLossScale, dynamic_loss_scale
 from repro.optim.compress import (ef_compress_int8, ef_decompress_int8,
                                   ErrorFeedbackState, init_error_feedback)
+from repro.optim.accumulate import (ACCUM_PRESETS, AccumState,
+                                    GradAccumulator, get_accumulator)
 
 __all__ = [
     "QSGD", "qsgd", "QAdam", "qadam",
     "DynamicLossScale", "dynamic_loss_scale",
     "ef_compress_int8", "ef_decompress_int8", "ErrorFeedbackState",
     "init_error_feedback",
+    "ACCUM_PRESETS", "AccumState", "GradAccumulator", "get_accumulator",
 ]

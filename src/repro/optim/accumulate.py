@@ -1,0 +1,144 @@
+"""Low-precision microbatch gradient accumulation.
+
+Long low-precision sums are the canonical *swamping* setting (paper
+§3.2; Improved stochastic rounding, arXiv:2006.00489): once the running
+sum grows past ``microbatch-grad / (ulp/2)``, deterministic RN rounds
+every further addend away and the accumulator stagnates — the gradient
+signal of most of the batch is silently dropped.  Stochastic rounding
+keeps each addend alive in expectation (unbiased, eq. 3), at a CLT-sized
+noise (eq. 4-5); compensated (Kahan) summation shrinks even that to a few
+ulps of the carry format.
+
+:class:`GradAccumulator` carries the running sum on a configurable
+:class:`~repro.core.rounding.RoundingSpec` grid — fp32 (identity),
+bf16-RN (the stagnation baseline), bf16-SR, binary8-SR, each optionally
+compensated.  The accumulation is a deterministic function of the step's
+seed words: per-(leaf, microstep) streams come from the same
+Threefry tag-fold scheme as the GEMM/wire seeds, so checkpoint resume is
+bit-exact and draws decorrelate across leaves and microsteps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rounding import IDENTITY, RoundingSpec, spec as rspec
+
+_ACCUM_SALT = 0x616363         # "acc": context salt for derive_seed
+
+
+class AccumState(NamedTuple):
+    """Running microbatch-gradient sum (and its Kahan compensation)."""
+    total: Any                  # pytree like grads, on the carry grid
+    comp: Any                   # compensation pytree, or () if uncompensated
+
+
+@dataclasses.dataclass(frozen=True)
+class GradAccumulator:
+    """Gradient accumulator with a rounded carry.
+
+    ``spec``: the carry grid + rounding scheme (IDENTITY = exact fp32).
+    ``compensated``: Kahan summation — the compensation term rides in
+    fp32 beside the rounded carry and re-injects the rounding residual
+    into the next add (the "compensated-SR" variant of 2006.00489).
+    """
+
+    spec: RoundingSpec = IDENTITY
+    compensated: bool = False
+
+    @property
+    def stochastic(self) -> bool:
+        return self.spec.stochastic
+
+    def init(self, grads) -> AccumState:
+        total = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                             grads)
+        comp = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                            grads) if self.compensated else ()
+        return AccumState(total=total, comp=comp)
+
+    # -- seeding -----------------------------------------------------------
+    def step_words(self, key, step=None):
+        """(2,) uint32 base seed words for one optimizer step's adds."""
+        from repro.kernels.common import derive_seed
+        return derive_seed(key, step, _ACCUM_SALT)
+
+    def _leaf_bits(self, words, leaf_idx: int, microstep, shape):
+        if not self.stochastic:
+            return None
+        from repro.kernels.common import counter_bits
+        from repro.precision.policy import fold_words
+        w = fold_words(fold_words(words, leaf_idx),
+                       jnp.asarray(microstep, jnp.uint32))
+        n = 1
+        for d in shape:
+            n *= int(d)
+        bits = counter_bits(w[0], w[1], (1, max(n, 1)))
+        return bits.reshape(shape) if n else bits[:, :0].reshape(shape)
+
+    # -- the add -----------------------------------------------------------
+    def add(self, state: AccumState, grads, words=None,
+            microstep=0) -> AccumState:
+        """``state + grads`` with the sum rounded onto the carry grid.
+
+        ``words``/``microstep`` seed the stochastic carry rounding
+        (``step_words``); ignored for deterministic carries.
+        """
+        if self.stochastic and words is None:
+            raise ValueError(f"accumulator carry {self.spec} is stochastic "
+                             "and needs seed `words` (step_words)")
+        t_leaves, treedef = jax.tree_util.tree_flatten(state.total)
+        g_leaves = treedef.flatten_up_to(grads)
+        c_leaves = (treedef.flatten_up_to(state.comp)
+                    if self.compensated else [None] * len(t_leaves))
+        new_t, new_c = [], []
+        for i, (t, g, c) in enumerate(zip(t_leaves, g_leaves, c_leaves)):
+            g = jnp.asarray(g, jnp.float32)
+            bits = self._leaf_bits(words, i, microstep, t.shape)
+            if self.compensated:
+                y = g - c
+                s = self.spec(t + y, bits=bits)
+                new_c.append((s - t) - y)
+            else:
+                s = self.spec(t + g, bits=bits)
+            new_t.append(s)
+        total = jax.tree_util.tree_unflatten(treedef, new_t)
+        comp = (jax.tree_util.tree_unflatten(treedef, new_c)
+                if self.compensated else ())
+        return AccumState(total=total, comp=comp)
+
+    def finalize(self, state: AccumState, n_microbatches):
+        """Mean gradient over the accumulated microbatches (fp32)."""
+        inv = jnp.float32(1.0) / jnp.float32(n_microbatches)
+        return jax.tree.map(lambda t: t * inv, state.total)
+
+
+# ---------------------------------------------------------------------------
+# Registry.
+# ---------------------------------------------------------------------------
+ACCUM_PRESETS = {
+    "fp32": GradAccumulator(),
+    "bf16-rn": GradAccumulator(rspec("bfloat16", "rn")),
+    "bf16-sr": GradAccumulator(rspec("bfloat16", "sr")),
+    "bf16-sr-kahan": GradAccumulator(rspec("bfloat16", "sr"),
+                                     compensated=True),
+    "binary8-sr": GradAccumulator(rspec("binary8", "sr")),
+    "e4m3-sr": GradAccumulator(rspec("e4m3", "sr")),
+}
+
+
+def get_accumulator(
+        a: Union[None, str, GradAccumulator]) -> GradAccumulator:
+    """None | preset name | GradAccumulator -> GradAccumulator."""
+    if a is None:
+        return ACCUM_PRESETS["fp32"]
+    if isinstance(a, GradAccumulator):
+        return a
+    try:
+        return ACCUM_PRESETS[a]
+    except KeyError as exc:
+        raise ValueError(f"unknown accumulator preset {a!r}; "
+                         f"known: {sorted(ACCUM_PRESETS)}") from exc

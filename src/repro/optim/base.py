@@ -74,14 +74,32 @@ def tree_rounded_update(params, grads, t, cfg: GDRounding, key, step,
         return jax.tree.map(
             lambda p, g, k: rounded_param_update(p, g, t, cfg, k),
             params, grads, keys)
+    if update_path not in ("fused", "fused_bits"):
+        raise ValueError(f"unknown update_path {update_path!r}; "
+                         f"known: {UPDATE_PATHS}")
     # lazy import: keeps Pallas out of the optimizer's import graph unless
     # a kernel path is actually selected
     from repro.kernels.tree_update import fused_tree_update
-    if update_path == "fused":
-        return fused_tree_update(params, grads, t, cfg, key, step,
-                                 mode="prng", interpret=interpret)
-    if update_path == "fused_bits":
-        return fused_tree_update(params, grads, t, cfg, key, step,
-                                 mode="bits", interpret=interpret)
-    raise ValueError(f"unknown update_path {update_path!r}; "
-                     f"known: {UPDATE_PATHS}")
+    mode = "prng" if update_path == "fused" else "bits"
+
+    def run(p, g, k, s):
+        return fused_tree_update(p, g, t, cfg, k, s, mode=mode,
+                                 interpret=interpret)
+
+    # Under an ambient mesh the whole-tree pallas_call must not be handed
+    # sharded operands: GSPMD has no partitioning rule for it and would
+    # feed local shards into a kernel that indexes the global flat tree.
+    # Run it inside a replicated shard_map instead — every participant
+    # gathers the tree and computes the identical update (the counter-
+    # keyed PRNG makes this bitwise equal to the single-device step).
+    from repro.dist.sharding import _axes
+    ax = _axes()
+    if ax.active:
+        from jax.sharding import PartitionSpec as P
+        from repro.dist import compat
+        pspec = jax.tree.map(lambda _: P(), params)
+        return compat.shard_map(
+            run, mesh=ax.mesh,
+            in_specs=(pspec, pspec, P(), P()), out_specs=pspec,
+            check_vma=False)(params, grads, key, step)
+    return run(params, grads, key, step)

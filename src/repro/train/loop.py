@@ -42,11 +42,19 @@ class TrainLoop:
     def __init__(self, step_fn: Callable, pipeline, init_state,
                  config: TrainLoopConfig,
                  fault_hook: Optional[Callable[[int], None]] = None,
-                 metrics_hook: Optional[Callable[[int, Dict], None]] = None):
-        """step_fn(state, batch) -> (state, metrics dict of scalars)."""
+                 metrics_hook: Optional[Callable[[int, Dict], None]] = None,
+                 state_sharding=None):
+        """step_fn(state, batch) -> (state, metrics dict of scalars).
+
+        ``state_sharding``: optional pytree of shardings matching
+        ``init_state`` — checkpoint restores then re-place the host
+        arrays directly onto the mesh layout (sharded resume), instead
+        of bouncing them through the default device.
+        """
         self.step_fn = step_fn
         self.pipeline = pipeline
         self.state = init_state
+        self.state_sharding = state_sharding
         # pristine snapshot for checkpoint-less restarts: jax arrays are
         # immutable, so holding the initial tree is enough; the pipeline
         # state dict is copied because pipelines mutate in place
@@ -77,7 +85,12 @@ class TrainLoop:
             resumed = 0
         else:
             _, payload, _ = self.ckpt.restore(latest)
-            self.state = jax.tree.map(jax.numpy.asarray, payload["state"])
+            if self.state_sharding is not None:
+                self.state = jax.device_put(payload["state"],
+                                            self.state_sharding)
+            else:
+                self.state = jax.tree.map(jax.numpy.asarray,
+                                          payload["state"])
             self.pipeline.load_state_dict(payload["pipeline"])
             resumed = latest
         # drop history from the discarded run segment: the replayed steps

@@ -12,3 +12,9 @@ here so tier-1 is bit-deterministic everywhere.
 import jax
 
 jax.config.update("jax_default_prng_impl", "threefry2x32")
+# Partition-invariant key-stream derivation: without this, GSPMD re-shards
+# the legacy Threefry counter layout and every jax.random draw inside a
+# sharded jit changes with the mesh placement — which would silently break
+# the sharded-vs-unsharded bit-parity guarantees of the rounded optimizer
+# update (tests/test_wire_accum.py) and sharded checkpoint resume.
+jax.config.update("jax_threefry_partitionable", True)
