@@ -15,10 +15,19 @@ bytes, wire-byte ratios, roofline bounds; ``us == 0``) and the speedup
 row are excluded.  Accepts both the v1 and v2 schemas so the gate works
 across the schema bump.
 
+Besides the relative gate, repeatable ``--max NAME=VALUE`` arguments put
+an *absolute* cap on a fresh row's derived column — used for ratios with
+a contract-level budget regardless of baseline drift, e.g. the health
+watchdog's telemetry overhead (``--max
+health/telemetry_step_overhead_ratio=1.15``).  A ``--max`` for a row
+missing from the fresh JSON is an error (a silently dropped row must not
+pass its own gate).
+
 Usage::
 
     python benchmarks/perf_gate.py --baseline BENCH_kernels.json \
-        --fresh BENCH_kernels.fresh.json [--tol 0.2]
+        --fresh BENCH_kernels.fresh.json [--tol 0.2] \
+        [--max NAME=VALUE ...]
 """
 from __future__ import annotations
 
@@ -53,6 +62,36 @@ def gate(baseline_rows: dict, fresh_rows: dict, tol: float):
     return failures, compared
 
 
+def gate_caps(fresh_rows: dict, caps: dict):
+    """Absolute caps on fresh derived values: (failures, compared).
+
+    Every capped row must exist in the fresh JSON — raises SystemExit
+    otherwise, so a bench that silently stops emitting its row cannot
+    sail past its own budget.
+    """
+    failures, compared = [], []
+    for name, cap in sorted(caps.items()):
+        row = fresh_rows.get(name)
+        if row is None:
+            raise SystemExit(
+                f"perf gate: --max row {name!r} missing from fresh JSON")
+        compared.append((name, cap, row.get("derived", 0.0)))
+        if row.get("derived", 0.0) > cap:
+            failures.append((name, cap, row["derived"]))
+    return failures, compared
+
+
+def _parse_caps(pairs) -> dict:
+    caps = {}
+    for pair in pairs or []:
+        name, _, value = pair.partition("=")
+        if not name or not value:
+            raise SystemExit(f"perf gate: bad --max {pair!r} "
+                             "(expected NAME=VALUE)")
+        caps[name] = float(value)
+    return caps
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default="BENCH_kernels.json",
@@ -62,6 +101,10 @@ def main() -> None:
     ap.add_argument("--tol", type=float, default=0.20,
                     help="allowed relative regression of any slowdown "
                          "ratio (default 0.20 = 20%%)")
+    ap.add_argument("--max", action="append", metavar="NAME=VALUE",
+                    dest="caps",
+                    help="absolute cap on a fresh row's derived value; "
+                         "repeatable")
     args = ap.parse_args()
 
     baseline, fresh = _load(args.baseline), _load(args.fresh)
@@ -79,13 +122,24 @@ def main() -> None:
     if not compared:
         raise SystemExit("perf gate: no comparable slowdown-ratio rows "
                          "between baseline and fresh JSON")
+    cap_failures, cap_compared = gate_caps(fresh["rows"],
+                                           _parse_caps(args.caps))
+    for name, cap, new in cap_compared:
+        flag = "FAIL" if (name, cap, new) in cap_failures else "ok"
+        print(f"{flag:4s} {name}: {new:.3f} (absolute cap {cap:.3f})")
     if failures:
         print(f"perf gate: {len(failures)} row(s) regressed more than "
               f"{args.tol * 100:.0f}% vs the committed baseline",
               file=sys.stderr)
+    if cap_failures:
+        print(f"perf gate: {len(cap_failures)} row(s) over their "
+              "absolute --max cap", file=sys.stderr)
+    if failures or cap_failures:
         raise SystemExit(1)
     print(f"perf gate: {len(compared)} slowdown ratios within "
-          f"{args.tol * 100:.0f}% of the committed baseline")
+          f"{args.tol * 100:.0f}% of the committed baseline"
+          + (f"; {len(cap_compared)} absolute caps honoured"
+             if cap_compared else ""))
 
 
 if __name__ == "__main__":

@@ -72,7 +72,8 @@ def main() -> None:
 
     from benchmarks import (collective_bench, fig2_stagnation,
                             fig3_quadratic, fig4_mlr, fig5_mlr_lr, fig6_nn,
-                            kernel_bench, roofline_report, table_formats)
+                            health_bench, kernel_bench, roofline_report,
+                            table_formats)
 
     benches = {
         "table2": lambda: table_formats.run(),
@@ -89,11 +90,12 @@ def main() -> None:
         "fig6": lambda: fig6_nn.run(
             epochs=15 if q else 50, sims=1 if q else 2,
             n_train=1000 if q else 3000, n_test=400 if q else 800),
-        # collective/accumulation rows ride in the kernels JSON so the
-        # perf gate guards them too
+        # collective/accumulation and health-telemetry rows ride in the
+        # kernels JSON so the perf gate guards them too
         "kernels": lambda: (kernel_bench.run(n=n_kernels)
                             + collective_bench.rows(
-                                n=n_kernels, iters=5 if q else 20)),
+                                n=n_kernels, iters=5 if q else 20)
+                            + health_bench.rows(iters=10 if q else 30)),
         "roofline": lambda: roofline_report.run(),
     }
     only = set(args.only.split(",")) if args.only else None

@@ -1,0 +1,38 @@
+"""Numeric-health + fault-tolerance subsystem.
+
+Three layers, threaded through the training stack (ISSUE 6 tentpole):
+
+* ``monitor``  — cheap in-step telemetry (jnp reductions inside the jit'd
+  train step): deadband fraction (the paper's §3.2 RN-stagnation predicate
+  lifted from the toy GD path to arbitrary pytrees), saturation/underflow
+  counts against the active format's limits, grad/update norms, and
+  non-finite flags, carried as a ``HealthState`` in the train-step carry.
+* ``watchdog`` — a host-side policy state machine consuming the telemetry:
+  sustained deadband escalates the run along a precision ladder
+  (binary8-rn → binary8-sr → e4m3-sr → bf16-sr → fp32), sustained
+  non-finite gradients trigger a checkpoint rollback; every transition is
+  logged with step + trigger so a run explains its own precision history.
+* ``inject``   — deterministic, seed-keyed fault schedules (bit flips,
+  NaN/Inf injection, simulated preemption / SIGKILL, checkpoint
+  corruption) for chaos testing the two layers above.
+"""
+from repro.health.monitor import (HealthConfig, HealthState,
+                                  health_metrics, init_health_state,
+                                  observe_health, resolve_health,
+                                  update_health)
+from repro.health.watchdog import (DEFAULT_LADDER, Escalate, LEVELS,
+                                   PrecisionLevel, Rollback, Watchdog,
+                                   WatchdogConfig, initial_level,
+                                   rounding_for_level)
+from repro.health.inject import (FaultEvent, FaultInjector,
+                                 corrupt_checkpoint, flip_bit,
+                                 parse_fault_schedule)
+
+__all__ = [
+    "HealthConfig", "HealthState", "health_metrics", "init_health_state",
+    "observe_health", "resolve_health", "update_health",
+    "DEFAULT_LADDER", "Escalate", "LEVELS", "PrecisionLevel", "Rollback",
+    "Watchdog", "WatchdogConfig", "initial_level", "rounding_for_level",
+    "FaultEvent", "FaultInjector", "corrupt_checkpoint", "flip_bit",
+    "parse_fault_schedule",
+]

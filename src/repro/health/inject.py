@@ -1,0 +1,225 @@
+"""Deterministic, seed-keyed fault injection for chaos testing.
+
+Replaces the ad-hoc ``fault_hook`` closures the tests used to hand-roll:
+a :class:`FaultInjector` is a schedule of :class:`FaultEvent`\\ s, each
+keyed by (seed, step, event index) through a ``numpy`` PRNG so unspecified
+choices (which leaf, which bit, which element) are reproducible across
+runs and processes — the chaos CI lane replays the same faults for a
+fixed ``CHAOS_SEED``.
+
+Supported fault kinds:
+
+* ``bitflip`` — XOR one bit of one float32 element of the live train
+  state (params / optimizer state / carried gradients alike — any float32
+  leaf of ``loop.state``).  Flipping a high exponent bit models a wire /
+  memory corruption that reached the parameters; the resulting loss blows
+  up non-finite and must be survived via checkpoint rollback.
+* ``nan`` / ``inf`` — overwrite one element with NaN/Inf (any float leaf).
+* ``preempt`` — raise ``RuntimeError`` from the fault hook (the exception
+  flavour of preemption; exercises TrainLoop's restart path in-process).
+* ``sigkill`` — ``SIGKILL`` the current process (the hard flavour; used
+  by the subprocess resume tests — nothing below the OS gets to clean up,
+  exactly like a preempted spot instance).
+* ``corrupt`` — truncate or garble the newest checkpoint's
+  ``leaves.npz`` (exercises the checksum-verified restore fallback).
+
+Each event fires **once** (recorded in ``fired``), so replayed steps
+after a rollback do not re-fire it — otherwise a fault that triggers a
+restore of its own step would loop forever.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import signal
+from typing import Iterable, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FAULT_KINDS = ("bitflip", "nan", "inf", "preempt", "sigkill", "corrupt")
+CORRUPT_MODES = ("truncate", "garble")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault.  ``leaf``/``bit``/``index`` default to a
+    seed-keyed draw when left ``None`` (deterministic given the injector
+    seed); ``mode`` applies to ``corrupt`` only."""
+
+    step: int
+    kind: str
+    leaf: Optional[int] = None
+    bit: Optional[int] = None
+    index: Optional[int] = None
+    mode: str = "truncate"
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"known: {FAULT_KINDS}")
+        if self.mode not in CORRUPT_MODES:
+            raise ValueError(f"unknown corrupt mode {self.mode!r}; "
+                             f"known: {CORRUPT_MODES}")
+
+
+def parse_fault_schedule(spec: str) -> Tuple[FaultEvent, ...]:
+    """Parse the CLI schedule grammar into events.
+
+    Grammar: comma-separated ``kind@step[:key=value...]``, e.g.::
+
+        bitflip@20:leaf=0:bit=30,nan@35,preempt@40,corrupt@60:mode=garble
+    """
+    events: List[FaultEvent] = []
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        fields = part.split(":")
+        try:
+            kind, at = fields[0].split("@")
+        except ValueError as exc:
+            raise ValueError(
+                f"fault event {part!r} must look like 'kind@step'") from exc
+        kwargs = {}
+        for f in fields[1:]:
+            k, _, v = f.partition("=")
+            if k not in ("leaf", "bit", "index", "mode"):
+                raise ValueError(f"unknown fault field {k!r} in {part!r}")
+            kwargs[k] = v if k == "mode" else int(v)
+        events.append(FaultEvent(step=int(at), kind=kind, **kwargs))
+    return tuple(sorted(events, key=lambda e: e.step))
+
+
+# ------------------------------------------------------------- low level --
+def flip_bit(arr: np.ndarray, index: int, bit: int) -> np.ndarray:
+    """Return a copy of a float32 array with one bit of one element
+    XOR-flipped (``index`` into the flattened array, ``bit`` ∈ [0, 32))."""
+    a = np.array(arr, dtype=np.float32, copy=True)
+    flat = a.reshape(-1).view(np.uint32)
+    flat[index % flat.size] ^= np.uint32(1) << np.uint32(bit % 32)
+    return a
+
+
+def corrupt_checkpoint(directory: str, step: Optional[int] = None,
+                       mode: str = "truncate") -> int:
+    """Corrupt a checkpoint's ``leaves.npz`` (newest step when ``None``).
+
+    ``truncate`` halves the file (unloadable); ``garble`` XORs one byte
+    mid-file keeping the size (only checksum verification catches it).
+    Returns the corrupted step number.
+    """
+    if step is None:
+        steps = [int(n[5:]) for n in os.listdir(directory)
+                 if n.startswith("step_") and not n.endswith(".tmp")
+                 and n[5:].isdigit()]
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+        step = max(steps)
+    path = os.path.join(directory, f"step_{step}", "leaves.npz")
+    size = os.path.getsize(path)
+    if mode == "truncate":
+        with open(path, "r+b") as f:
+            f.truncate(max(size // 2, 1))
+    elif mode == "garble":
+        with open(path, "r+b") as f:
+            f.seek(size // 2)
+            byte = f.read(1)
+            f.seek(size // 2)
+            f.write(bytes([byte[0] ^ 0xFF]))
+    else:
+        raise ValueError(f"unknown corrupt mode {mode!r}")
+    return step
+
+
+# -------------------------------------------------------------- injector --
+class FaultInjector:
+    """A `TrainLoop`-compatible fault hook driven by a schedule.
+
+    Construct with a schedule (events, or the CLI grammar string) and a
+    seed; pass as ``TrainLoop(fault_hook=...)`` — the loop calls
+    ``attach(self)`` so state-tampering faults can reach ``loop.state``
+    and checkpoint faults the loop's checkpoint directory.  ``log``
+    records every fired fault (step, kind, leaf, bit, index) for test
+    assertions and post-mortems.
+    """
+
+    def __init__(self, schedule: Union[str, Iterable[FaultEvent]],
+                 seed: int = 0):
+        if isinstance(schedule, str):
+            schedule = parse_fault_schedule(schedule)
+        self.schedule: Tuple[FaultEvent, ...] = tuple(schedule)
+        self.seed = int(seed)
+        self.loop = None
+        self.fired: set = set()
+        self.log: List[dict] = []
+
+    def attach(self, loop) -> None:
+        self.loop = loop
+
+    def __call__(self, step: int) -> None:
+        for i, ev in enumerate(self.schedule):
+            if ev.step == step and i not in self.fired:
+                self.fired.add(i)
+                self._fire(i, ev)
+
+    # ------------------------------------------------------------ faults --
+    def _rng(self, i: int, ev: FaultEvent) -> np.random.Generator:
+        # keyed by (seed, step, event index): reproducible across
+        # processes and independent of everything jax.random does
+        return np.random.default_rng([self.seed, ev.step, i])
+
+    def _fire(self, i: int, ev: FaultEvent) -> None:
+        entry = {"step": ev.step, "kind": ev.kind}
+        if ev.kind == "preempt":
+            self.log.append(entry)
+            raise RuntimeError(f"injected preemption at step {ev.step}")
+        if ev.kind == "sigkill":
+            self.log.append(entry)
+            os.kill(os.getpid(), signal.SIGKILL)
+        if ev.kind == "corrupt":
+            # fence in-flight async saves first: "newest checkpoint" must
+            # be deterministic for a schedule to be replayable — without
+            # it the target depends on whether the background writer won
+            # the race to disk
+            self.loop.ckpt.wait()
+            entry["ckpt_step"] = corrupt_checkpoint(
+                self.loop.ckpt.directory, mode=ev.mode)
+            entry["mode"] = ev.mode
+            self.log.append(entry)
+            return
+        self._tamper_state(i, ev, entry)
+        self.log.append(entry)
+
+    def _tamper_state(self, i: int, ev: FaultEvent, entry: dict) -> None:
+        leaves, treedef = jax.tree_util.tree_flatten(self.loop.state)
+        candidates = [
+            j for j, l in enumerate(leaves)
+            if hasattr(l, "dtype") and getattr(l, "size", 0) > 0
+            and (l.dtype == jnp.float32 if ev.kind == "bitflip"
+                 else jnp.issubdtype(l.dtype, jnp.floating))]
+        if not candidates:
+            raise ValueError(f"no float leaves to inject {ev.kind!r} into")
+        rng = self._rng(i, ev)
+        j = (candidates[ev.leaf % len(candidates)] if ev.leaf is not None
+             else candidates[int(rng.integers(len(candidates)))])
+        leaf = leaves[j]
+        host = np.array(jax.device_get(leaf), copy=True)
+        idx = (ev.index if ev.index is not None
+               else int(rng.integers(host.size))) % host.size
+        if ev.kind == "bitflip":
+            bit = (ev.bit if ev.bit is not None
+                   else int(rng.integers(32))) % 32
+            host = flip_bit(host, idx, bit)
+            entry["bit"] = bit
+        elif ev.kind == "nan":
+            host.reshape(-1)[idx] = np.nan
+        elif ev.kind == "inf":
+            host.reshape(-1)[idx] = np.inf
+        entry["leaf"] = j
+        entry["index"] = idx
+        sharding = getattr(leaf, "sharding", None)
+        leaves[j] = (jax.device_put(host, sharding) if sharding is not None
+                     else jnp.asarray(host))
+        self.loop.state = jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,195 @@
+"""Watchdog: graceful precision degradation driven by health telemetry.
+
+A host-side policy state machine.  It consumes the per-step metrics dict
+the monitor emits (``h_deadband_frac``, ``h_sat_frac``, ``h_nonfinite``)
+and decides, *outside* jit:
+
+* **deadband escalation** — deadband fraction above threshold for K
+  consecutive steps means the run has entered the paper's Scenario-2
+  stagnation (RN rounds every update away); the watchdog escalates the
+  run one rung up the precision ladder
+
+      binary8-rn → binary8-sr → e4m3-sr → bf16-sr → fp32
+
+  (RN→SR first: the paper's central result is that *stochastic* rounding
+  on the same grid breaks stagnation in expectation; only if SR at the
+  current width still deadbands does the ladder widen the format).  The
+  escalation rebuilds the train step — a retrace, so it is deliberately
+  rare (patience + cooldown) and logged.
+* **rollback** — sustained non-finite gradients mean the live state is
+  likely corrupt (overflowed binary8 GEMM, flipped exponent bit, …); the
+  watchdog asks the TrainLoop to restore the newest intact checkpoint.
+* **overflow warning** — sustained saturation is surfaced as an event;
+  the in-step backoff itself is `DynamicLossScale`'s job (wired through
+  ``make_train_step(loss_scale=...)``), not the watchdog's.
+
+Every transition is recorded in ``Watchdog.events`` as
+``{"step", "trigger", "action", ...}`` so a finished run explains its own
+precision history (`TrainLoop.run()` returns them as
+``out["watchdog_events"]``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
+
+from repro.core.formats import get_format
+
+
+# --------------------------------------------------------------- ladder --
+class PrecisionLevel(NamedTuple):
+    """One rung: the update-path format/scheme + the GEMM policy preset."""
+
+    name: str
+    fmt: Optional[str]        # None = full precision
+    scheme: Optional[str]     # "rn" | "sr" | None (fp32)
+    gemm_policy: Optional[str]
+
+
+DEFAULT_LADDER: Tuple[str, ...] = (
+    "binary8-rn", "binary8-sr", "e4m3-sr", "bf16-sr", "fp32")
+
+LEVELS: Dict[str, PrecisionLevel] = {
+    "binary8-rn": PrecisionLevel("binary8-rn", "binary8", "rn",
+                                 "binary8-rn"),
+    "binary8-sr": PrecisionLevel("binary8-sr", "binary8", "sr",
+                                 "binary8-sr"),
+    "e4m3-sr": PrecisionLevel("e4m3-sr", "e4m3", "sr", "e4m3-sr"),
+    "bf16-sr": PrecisionLevel("bf16-sr", "bfloat16", "sr", "bf16-sr"),
+    "fp32": PrecisionLevel("fp32", None, None, "fp32"),
+}
+
+# canonical format name -> the short name the ladder levels use
+_FMT_SHORT = {"binary8": "binary8", "e4m3": "e4m3", "bfloat16": "bf16",
+              "binary16": "bf16", "binary32": "fp32"}
+
+
+def initial_level(fmt, rounding_kind: str,
+                  ladder: Tuple[str, ...] = DEFAULT_LADDER) -> str:
+    """Best-matching ladder rung for a run's starting (fmt, scheme).
+
+    ``rounding_kind`` is the trainer's scheme name ("rn", "sr",
+    "sr_eps", "signed_sr_eps", "fp32"); anything stochastic maps to the
+    "-sr" rung.  Falls back to the bottom rung when nothing matches (the
+    watchdog can then only escalate upward, which is safe).
+    """
+    if rounding_kind == "fp32":
+        return "fp32" if "fp32" in ladder else ladder[-1]
+    short = _FMT_SHORT.get(get_format(fmt).name)
+    suffix = "rn" if rounding_kind == "rn" else "sr"
+    name = "fp32" if short == "fp32" else f"{short}-{suffix}"
+    if name in ladder:
+        return name
+    return ladder[0]
+
+
+def rounding_for_level(level: str):
+    """The GDRounding config of a ladder rung (for the trainer rebuild)."""
+    from repro.core import gd     # lazy: keep jax out of pure-policy use
+    lvl = LEVELS[level]
+    if lvl.fmt is None:
+        return gd.GDRounding()
+    if lvl.scheme == "rn":
+        return gd.make_config(lvl.fmt, "rn", "rn", "rn")
+    return gd.make_config(lvl.fmt, "rn", "sr", "sr")
+
+
+# -------------------------------------------------------------- actions --
+class Escalate(NamedTuple):
+    level: str                 # the new ladder rung
+    trigger: str
+    step_fn: Any = None        # rebuilt step fn (None if no rebuild hook)
+
+
+class Rollback(NamedTuple):
+    trigger: str
+
+
+@dataclasses.dataclass
+class WatchdogConfig:
+    deadband_threshold: float = 0.9   # fraction of deadbanded coordinates
+    deadband_patience: int = 5        # consecutive steps before escalating
+    overflow_threshold: float = 0.0   # saturated fraction that counts
+    overflow_patience: int = 25       # consecutive steps before warning
+    nonfinite_patience: int = 2       # consecutive steps before rollback
+    cooldown: int = 10                # steps after an escalation before the
+                                      # deadband trigger may fire again
+    ladder: Tuple[str, ...] = DEFAULT_LADDER
+
+
+class Watchdog:
+    """The state machine.  ``observe(step, metrics)`` per completed step.
+
+    ``rebuild``: optional ``Callable[[level_name], step_fn]`` — the
+    trainer's hook that builds (and jits) the train step for a ladder
+    rung; its result rides back on the ``Escalate`` action so `TrainLoop`
+    can swap ``step_fn`` in place without knowing how steps are built.
+    """
+
+    def __init__(self, config: Optional[WatchdogConfig] = None,
+                 level: Optional[str] = None,
+                 rebuild: Optional[Callable[[str], Any]] = None):
+        self.config = config or WatchdogConfig()
+        self.level = level or self.config.ladder[0]
+        self.rebuild = rebuild
+        self.events: List[Dict[str, Any]] = []
+        self._deadband = 0
+        self._overflow = 0
+        self._nonfinite = 0
+        self._cooldown = 0
+
+    # ------------------------------------------------------------ state --
+    def next_level(self) -> Optional[str]:
+        ladder = self.config.ladder
+        if self.level in ladder:
+            i = ladder.index(self.level)
+            if i + 1 < len(ladder):
+                return ladder[i + 1]
+        return None
+
+    def _metric(self, metrics, key) -> Optional[float]:
+        v = metrics.get(key)
+        return None if v is None else float(v)
+
+    # ---------------------------------------------------------- observe --
+    def observe(self, step: int, metrics: Dict[str, Any]):
+        """Feed one completed step's metrics; returns an action or None."""
+        cfg = self.config
+        if self._cooldown > 0:
+            self._cooldown -= 1
+
+        nf = self._metric(metrics, "h_nonfinite")
+        if nf is not None:
+            self._nonfinite = self._nonfinite + 1 if nf > 0 else 0
+            if self._nonfinite >= cfg.nonfinite_patience:
+                self._nonfinite = 0
+                self.events.append({"step": step, "trigger": "nonfinite",
+                                    "action": "rollback"})
+                return Rollback("nonfinite")
+
+        db = self._metric(metrics, "h_deadband_frac")
+        if db is not None:
+            self._deadband = (self._deadband + 1
+                              if db >= cfg.deadband_threshold else 0)
+            if self._deadband >= cfg.deadband_patience and self._cooldown == 0:
+                nxt = self.next_level()
+                if nxt is not None:
+                    prev, self.level = self.level, nxt
+                    self._deadband = 0
+                    self._cooldown = cfg.cooldown
+                    self.events.append({
+                        "step": step, "trigger": "deadband",
+                        "action": "escalate", "from": prev, "to": nxt,
+                        "deadband_frac": db})
+                    fn = self.rebuild(nxt) if self.rebuild else None
+                    return Escalate(nxt, "deadband", fn)
+
+        sat = self._metric(metrics, "h_sat_frac")
+        if sat is not None:
+            self._overflow = (self._overflow + 1
+                              if sat > cfg.overflow_threshold else 0)
+            if self._overflow >= cfg.overflow_patience:
+                self._overflow = 0
+                self.events.append({"step": step, "trigger": "overflow",
+                                    "action": "warn", "sat_frac": sat})
+        return None

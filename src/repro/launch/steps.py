@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -50,6 +50,29 @@ def baseline_optimizer(lr: float = 1e-3):
     return qsgd(lr=lr, momentum=0.9)
 
 
+# -------------------------------------------------------------- step carry --
+class StepCarry(NamedTuple):
+    """Auxiliary per-step state threaded through the extended train step
+    (`make_train_step(loss_scale=..., health=...)`): the dynamic
+    loss-scale state and the numeric-health streak counters.  Unused
+    slots hold ``()`` (an empty pytree), so the carry checkpoints and
+    shards like any other state tree."""
+
+    scale: Any = ()
+    health: Any = ()
+
+
+def init_step_carry(loss_scale=None, health=None) -> StepCarry:
+    """Initial carry matching `make_train_step`'s loss_scale/health args."""
+    from repro.health import monitor as health_lib
+    from repro.optim import scale as scale_lib
+    s = scale_lib.resolve_loss_scale(loss_scale)
+    h = health_lib.resolve_health(health)
+    return StepCarry(
+        scale=s if s is not None else (),
+        health=health_lib.init_health_state() if h is not None else ())
+
+
 # ------------------------------------------------------------ step makers --
 def _microbatch_split(batch, accum_steps: int):
     """(B, ...) leaves -> (accum_steps, B/accum_steps, ...) scan stacks."""
@@ -69,7 +92,8 @@ def make_train_step(model, optimizer, *, grad_dtype=jnp.bfloat16,
                     gemm_policy=None, accum_steps: int = 1,
                     accum_spec=None, wire_spec=None, mesh=None,
                     ax: Optional[MeshAxes] = None,
-                    wire_topology: str = "reduce_scatter"):
+                    wire_topology: str = "reduce_scatter",
+                    loss_scale=None, health=None):
     """Mixed-precision train step: the loss is differentiated w.r.t.
     bf16-cast params so gradients (and their cross-device reductions) are
     bf16; the optimizer applies them to the fp32/low-precision master
@@ -97,19 +121,37 @@ def make_train_step(model, optimizer, *, grad_dtype=jnp.bfloat16,
     whose ``batch`` axes carry the data-parallel split).  Wire draws are
     seeded per (leaf, step, shard) from the checkpointed optimizer key,
     so sharded resume stays bit-exact.
+
+    ``loss_scale`` (None | initial scale | DynamicLossScale) and
+    ``health`` (None | format name | HealthConfig) switch the step to the
+    *extended* signature ``(params, opt_state, carry, batch) ->
+    (params, opt_state, carry, metrics)`` where ``carry`` is a
+    `StepCarry` from `init_step_carry` — the loss is multiplied by the
+    carried dynamic scale before differentiation, gradients are unscaled
+    after the (accumulated / wire-reduced) sum, overflowed steps are
+    skipped with a scale backoff (`optim/scale.py` finally wired in), and
+    the numeric-health telemetry of `health/monitor.py` rides the metrics
+    dict (``h_*`` keys).  With both left ``None`` the classic 3-arg step
+    is returned, bit-identical to before.
     """
     if gemm_policy is not None:
         model = build_model(dataclasses.replace(model.cfg,
                                                 gemm_policy=gemm_policy))
     from repro.optim.accumulate import get_accumulator
     accumulator = get_accumulator(accum_spec)
+    from repro.health import monitor as health_lib
+    from repro.optim import scale as scale_lib
+    scale_on = scale_lib.resolve_loss_scale(loss_scale) is not None
+    health_cfg = health_lib.resolve_health(health)
+    extras = scale_on or health_cfg is not None
 
     def cast(p):
         return jax.tree.map(
             lambda x: x.astype(grad_dtype)
             if x.dtype == jnp.float32 else x, p)
 
-    def grads_and_metrics(params, key, step, batch, participant_axes=None):
+    def grads_and_metrics(params, key, step, batch, participant_axes=None,
+                          scale=None):
         """Microbatch-accumulated fp32 grads + mean metrics on ``batch``
         (the whole global batch, or one participant's shard of it).
 
@@ -121,8 +163,11 @@ def make_train_step(model, optimizer, *, grad_dtype=jnp.bfloat16,
 
         def one_microbatch(mb, rng):
             def loss_fn(p):
-                return model.loss_fn(p, mb, rng=rng)
-            (loss, metrics), grads = jax.value_and_grad(
+                loss, aux = model.loss_fn(p, mb, rng=rng)
+                # differentiate the *scaled* loss; report the true one
+                out = loss if scale is None else loss * scale
+                return out, (loss, aux)
+            (_, (loss, metrics)), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(cast(params))
             grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
             metrics = dict(metrics)
@@ -167,13 +212,53 @@ def make_train_step(model, optimizer, *, grad_dtype=jnp.bfloat16,
         if not batch_axes:
             codec = None     # single-participant wire: nothing to round
 
+    def apply_update(params, opt_state, carry, grads, metrics):
+        """Extended-step tail shared by the plain and wire paths:
+        unscale → overflow skip-step + scale update → health telemetry →
+        optimizer apply."""
+        new_scale = carry.scale
+        if scale_on:
+            grads = scale_lib.unscale_grads(carry.scale, grads)
+        new_params, new_state = optimizer.apply(params, grads, opt_state)
+        if scale_on:
+            finite = scale_lib.all_finite(grads)
+            # overflowed step: keep params + momentum, but advance the
+            # step counter / rng key so the retry draws fresh rounding bits
+            new_params = scale_lib.maybe_skip_update(finite, new_params,
+                                                     params)
+            merged = scale_lib.maybe_skip_update(finite, new_state,
+                                                 opt_state)
+            new_state = merged._replace(step=new_state.step,
+                                        key=new_state.key)
+            new_scale = scale_lib.update_scale(carry.scale, finite)
+            metrics["h_loss_scale"] = carry.scale.scale
+            metrics["h_grads_finite"] = finite.astype(jnp.float32)
+            metrics["h_skipped"] = (~finite).astype(jnp.float32)
+        new_health = carry.health
+        if health_cfg is not None:
+            new_health, hmetrics = health_lib.observe_health(
+                carry.health, params, grads,
+                getattr(optimizer, "lr", 1.0), health_cfg)
+            metrics.update(hmetrics)
+        return (new_params, new_state,
+                StepCarry(scale=new_scale, health=new_health), metrics)
+
     if codec is None:
         def train_step(params, opt_state, batch):
             grads, metrics = grads_and_metrics(
                 params, opt_state.key, opt_state.step, batch)
             new_params, new_state = optimizer.apply(params, grads, opt_state)
             return new_params, new_state, metrics
-        return train_step
+
+        if not extras:
+            return train_step
+
+        def train_step_ex(params, opt_state, carry, batch):
+            s = carry.scale.scale if scale_on else None
+            grads, metrics = grads_and_metrics(
+                params, opt_state.key, opt_state.step, batch, scale=s)
+            return apply_update(params, opt_state, carry, grads, metrics)
+        return train_step_ex
 
     # -- explicit rounded-wire path (shard_map over the batch axes) --------
     # The body is *manual over every mesh axis*: batch axes carry the
@@ -188,31 +273,43 @@ def make_train_step(model, optimizer, *, grad_dtype=jnp.bfloat16,
     from repro.dist import codecs as codecs_lib, compat
     from repro.dist.collectives import wire_reduce
 
-    def wire_body(params, key, step, batch, words):
+    def wire_body(params, key, step, batch, words, scale):
         with set_mesh_axes(MeshAxes()):
             grads, metrics = grads_and_metrics(
-                params, key, step, batch, participant_axes=batch_axes)
+                params, key, step, batch, participant_axes=batch_axes,
+                scale=scale if scale_on else None)
         grads = wire_reduce(grads, batch_axes, codec=codec, words=words,
                             topology=wire_topology)
         metrics = jax.tree.map(
             lambda m: jax.lax.pmean(m, batch_axes), metrics)
         return grads, metrics
 
-    def train_step(params, opt_state, batch):
+    def run_wire(params, opt_state, batch, scale):
         words = codecs_lib.wire_words(opt_state.key, opt_state.step)
         batch_spec = jax.tree.map(lambda _: P(batch_axes), batch)
         sharded = compat.shard_map(
             wire_body, mesh=mesh,
             in_specs=(jax.tree.map(lambda _: P(), params), P(), P(),
-                      batch_spec, P()),
+                      batch_spec, P(), P()),
             out_specs=(jax.tree.map(lambda _: P(), params), P()),
             check_vma=False)
-        grads, metrics = sharded(params, opt_state.key, opt_state.step,
-                                 batch, words)
+        return sharded(params, opt_state.key, opt_state.step, batch, words,
+                       scale)
+
+    def train_step(params, opt_state, batch):
+        grads, metrics = run_wire(params, opt_state, batch,
+                                  jnp.float32(1.0))
         new_params, new_state = optimizer.apply(params, grads, opt_state)
         return new_params, new_state, metrics
 
-    return train_step
+    if not extras:
+        return train_step
+
+    def train_step_ex(params, opt_state, carry, batch):
+        s = carry.scale.scale if scale_on else jnp.float32(1.0)
+        grads, metrics = run_wire(params, opt_state, batch, s)
+        return apply_update(params, opt_state, carry, grads, metrics)
+    return train_step_ex
 
 
 def make_prefill_step(model):

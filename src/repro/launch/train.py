@@ -81,7 +81,10 @@ def run(arch: str, *, reduced: bool, steps: int, batch: int, seq: int,
         update_path: str = "jnp", gemm_policy: str = None,
         mesh_spec: str = None, wire_spec: str = None,
         accum_steps: int = 1, accum_spec: str = None,
-        wire_topology: str = "reduce_scatter"):
+        wire_topology: str = "reduce_scatter",
+        loss_scale: float = 0.0, watchdog: bool = False,
+        health_fmt: str = None, fault_schedule: str = None,
+        fault_seed: int = 0, restart_window: int = 1000):
     # partition-invariant jax.random streams: the rounded update/wire/
     # accumulator draws must not change with the mesh placement, or the
     # sharded run would silently diverge from the single-device one and
@@ -121,26 +124,82 @@ def run(arch: str, *, reduced: bool, steps: int, batch: int, seq: int,
     pipe = ShardedPipeline(pipe_src,
                            sharding=batch_shardings(pipe_src.batch_at(0)))
 
-    train_step = steps_lib.make_train_step(
-        model, opt, accum_steps=accum_steps, accum_spec=accum_spec,
-        wire_spec=wire_spec, mesh=mesh, ax=ax,
-        wire_topology=wire_topology)
-    with set_mesh_axes(ax), mesh:
-        jitted = jax.jit(train_step, in_shardings=(
-            p_sh, o_sh, batch_shardings(pipe_src.batch_at(0))))
+    # ---- numeric-health / loss-scale extras (health/ subsystem) ----------
+    health_cfg = None
+    if watchdog:
+        from repro.health import monitor as health_mon
+        health_cfg = health_mon.resolve_health(health_fmt or fmt)
+    ls = loss_scale if loss_scale and loss_scale > 0 else None
+    extras = ls is not None or health_cfg is not None
 
-    def step_fn(state, batch_):
-        params_, opt_ = state
+    carry0 = steps_lib.init_step_carry(loss_scale=ls, health=health_cfg)
+    c_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), carry0)
+    batch_sh = batch_shardings(pipe_src.batch_at(0))
+
+    def build_step_fn(level_name=None):
+        """Build (and jit) the train step — the initial one, or a
+        precision-ladder rung's (the watchdog escalation rebuild hook)."""
+        if level_name is None:
+            opt_l = opt
+            g_pol = None          # model already carries cfg.gemm_policy
+        else:
+            from repro.health import watchdog as wd_lib
+            lvl = wd_lib.LEVELS[level_name]
+            opt_l = qsgd(lr=lr, momentum=momentum,
+                         cfg=wd_lib.rounding_for_level(level_name),
+                         update_path=update_path)
+            # only escalate the GEMM policy if the run quantized GEMMs
+            g_pol = lvl.gemm_policy if cfg.gemm_policy is not None else None
+        train_step = steps_lib.make_train_step(
+            model, opt_l, accum_steps=accum_steps, accum_spec=accum_spec,
+            wire_spec=wire_spec, mesh=mesh, ax=ax,
+            wire_topology=wire_topology, gemm_policy=g_pol,
+            loss_scale=ls, health=health_cfg)
         with set_mesh_axes(ax), mesh:
-            params_, opt_, metrics = jitted(params_, opt_, batch_)
-        return (params_, opt_), metrics
+            if extras:
+                jitted = jax.jit(train_step, in_shardings=(
+                    p_sh, o_sh, c_sh, batch_sh))
 
-    loop = TrainLoop(step_fn, pipe, (params, opt_state),
+                def step_fn(state, batch_):
+                    params_, opt_, carry_ = state
+                    with set_mesh_axes(ax), mesh:
+                        params_, opt_, carry_, metrics = jitted(
+                            params_, opt_, carry_, batch_)
+                    return (params_, opt_, carry_), metrics
+            else:
+                jitted = jax.jit(train_step, in_shardings=(
+                    p_sh, o_sh, batch_sh))
+
+                def step_fn(state, batch_):
+                    params_, opt_ = state
+                    with set_mesh_axes(ax), mesh:
+                        params_, opt_, metrics = jitted(
+                            params_, opt_, batch_)
+                    return (params_, opt_), metrics
+        return step_fn
+
+    wd = None
+    if watchdog:
+        from repro.health import watchdog as wd_lib
+        wd = wd_lib.Watchdog(level=wd_lib.initial_level(fmt, rounding_kind),
+                             rebuild=build_step_fn)
+
+    fault_hook = None
+    if fault_schedule:
+        from repro.health.inject import FaultInjector
+        fault_hook = FaultInjector(fault_schedule, seed=fault_seed)
+
+    init_state = ((params, opt_state, carry0) if extras
+                  else (params, opt_state))
+    state_sharding = (p_sh, o_sh, c_sh) if extras else (p_sh, o_sh)
+    loop = TrainLoop(build_step_fn(), pipe, init_state,
                      TrainLoopConfig(total_steps=steps,
                                      checkpoint_every=max(10, steps // 5),
                                      checkpoint_dir=ckpt_dir,
-                                     log_every=log_every),
-                     state_sharding=(p_sh, o_sh))
+                                     log_every=log_every,
+                                     restart_window=restart_window),
+                     fault_hook=fault_hook,
+                     state_sharding=state_sharding, watchdog=wd)
     t0 = time.time()
     out = loop.run()
     dt = time.time() - t0
@@ -152,6 +211,10 @@ def run(arch: str, *, reduced: bool, steps: int, batch: int, seq: int,
           f"{'/' + accum_spec if accum_spec else ''}")
     for h in out["history"]:
         print(f"  step {h['step']:>5}  loss {h['loss']:.4f}  ce {h.get('ce', float('nan')):.4f}")
+    for ev in out.get("watchdog_events", []):
+        detail = (f" {ev['from']} -> {ev['to']}" if "to" in ev else "")
+        print(f"  watchdog: step {ev['step']} trigger={ev['trigger']} "
+              f"action={ev['action']}{detail}")
     return out
 
 
@@ -205,13 +268,39 @@ def main():
                          "bf16-rn is the swamping baseline, the -sr "
                          "carries keep small microbatch gradients alive; "
                          "default: exact fp32")
+    ap.add_argument("--loss-scale", type=float, default=0.0,
+                    help="initial dynamic loss scale (optim/scale.py): "
+                         "scale the loss before backprop, unscale the "
+                         "reduced grads, skip + back off on overflow; "
+                         "0 = off (bit-identical to the unscaled step)")
+    ap.add_argument("--watchdog", action="store_true",
+                    help="numeric-health telemetry + watchdog: detect "
+                         "RN-stagnation deadband / overflow / non-finite "
+                         "streaks and escalate the precision ladder "
+                         "(health/watchdog.py)")
+    ap.add_argument("--health-fmt", default=None,
+                    help="format grid the health telemetry measures "
+                         "against (default: --fmt)")
+    ap.add_argument("--fault-schedule", default=None,
+                    help="chaos-testing fault schedule, e.g. "
+                         "'bitflip@20:bit=30,preempt@40,corrupt@60' "
+                         "(health/inject.py)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for unspecified fault-schedule choices")
+    ap.add_argument("--restart-window", type=int, default=1000,
+                    help="sliding step window the restart budget is "
+                         "counted over (0 = run-lifetime budget)")
     args = ap.parse_args()
     run(args.arch, reduced=args.reduced, steps=args.steps, batch=args.batch,
         seq=args.seq, lr=args.lr, rounding_kind=args.rounding, fmt=args.fmt,
         eps=args.eps, ckpt_dir=args.ckpt_dir, update_path=args.update_path,
         gemm_policy=args.gemm_policy, mesh_spec=args.mesh,
         wire_spec=args.wire_spec, accum_steps=args.accum_steps,
-        accum_spec=args.accum_spec, wire_topology=args.wire_topology)
+        accum_spec=args.accum_spec, wire_topology=args.wire_topology,
+        loss_scale=args.loss_scale, watchdog=args.watchdog,
+        health_fmt=args.health_fmt, fault_schedule=args.fault_schedule,
+        fault_seed=args.fault_seed,
+        restart_window=args.restart_window or None)
 
 
 if __name__ == "__main__":

@@ -1,7 +1,8 @@
 """Low-precision optimizers with paper-faithful rounded update paths."""
 from repro.optim.sgd import QSGD, qsgd
 from repro.optim.adam import QAdam, qadam
-from repro.optim.scale import DynamicLossScale, dynamic_loss_scale
+from repro.optim.scale import (DynamicLossScale, dynamic_loss_scale,
+                               resolve_loss_scale)
 from repro.optim.compress import (ef_compress_int8, ef_decompress_int8,
                                   ErrorFeedbackState, init_error_feedback)
 from repro.optim.accumulate import (ACCUM_PRESETS, AccumState,
@@ -9,7 +10,7 @@ from repro.optim.accumulate import (ACCUM_PRESETS, AccumState,
 
 __all__ = [
     "QSGD", "qsgd", "QAdam", "qadam",
-    "DynamicLossScale", "dynamic_loss_scale",
+    "DynamicLossScale", "dynamic_loss_scale", "resolve_loss_scale",
     "ef_compress_int8", "ef_decompress_int8", "ErrorFeedbackState",
     "init_error_feedback",
     "ACCUM_PRESETS", "AccumState", "GradAccumulator", "get_accumulator",

@@ -33,6 +33,22 @@ def dynamic_loss_scale(initial: float = 2.0 ** 7, growth_interval: int = 200,
         max_scale=max_scale)
 
 
+def resolve_loss_scale(x) -> "DynamicLossScale | None":
+    """None | bool | initial scale | DynamicLossScale -> Optional state.
+
+    The `make_train_step(loss_scale=...)` argument resolver: ``None``,
+    ``False`` and non-positive numbers mean *off* (the step stays
+    bit-identical to the unscaled path); ``True`` means the default
+    initial scale; a positive number is the initial scale."""
+    if x is None or isinstance(x, DynamicLossScale):
+        return x
+    if isinstance(x, bool):
+        return dynamic_loss_scale() if x else None
+    if x <= 0:
+        return None
+    return dynamic_loss_scale(initial=float(x))
+
+
 def scale_loss(state: DynamicLossScale, loss):
     return loss * state.scale
 

@@ -160,6 +160,15 @@ PRESETS = {
     "binary8-paper-r16": make_policy(fmt="binary8", mode="sr", rand_bits=16,
                                      act=spec("binary8", "sr", rand_bits=16)),
     "e4m3-sr-oracle": make_policy(fmt="e4m3", mode="sr", oracle=True),
+    # watchdog precision ladder rungs (health/watchdog.py): "binary8-sr"
+    # is the paper regime under its ladder name, "binary8-rn" its
+    # deterministic control (the rung that silently stagnates), "bf16-sr"
+    # the widest rounded rung before full fp32
+    "binary8-rn": make_policy(fmt="binary8", mode="rn",
+                              act=spec("binary8", "rn")),
+    "binary8-sr": make_policy(fmt="binary8", mode="sr",
+                              act=spec("binary8", "sr")),
+    "bf16-sr": make_policy(fmt="bfloat16", mode="sr"),
 }
 
 

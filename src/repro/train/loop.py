@@ -4,23 +4,38 @@ Composes: a jit'd step function, a checkpointable data pipeline, the
 CheckpointManager, and failure handling:
 
 * periodic async checkpoints (params + optimizer state + pipeline step);
-* automatic resume from the latest checkpoint (``run`` is re-entrant: a
-  crashed/preempted process restarts and continues bit-exactly);
-* a fault-injection hook used by the tests to simulate preemption;
+* automatic resume from the latest *intact* checkpoint (``run`` is
+  re-entrant: a crashed/preempted process restarts and continues
+  bit-exactly; a corrupted latest checkpoint falls back to the previous
+  verified one);
+* a fault-injection hook (see `health/inject.FaultInjector` for the
+  schedule-driven implementation; any ``step -> None`` callable works,
+  and callables with an ``attach`` method are handed the loop so they
+  can tamper with live state / checkpoints);
 * non-finite-loss / runtime-error circuit breaker: restore the latest
   checkpoint, or — when nothing has been checkpointed yet — the pristine
   *initial* state snapshotted at construction (the in-flight ``self.state``
   may hold a half-applied, corrupted update).  Loss scaling is the
   optimizer's concern, not the loop's.  The practical straggler/failure
   posture for SPMD jobs is checkpoint-restart, since a lock-step
-  collective cannot outrun its slowest participant (see DESIGN.md §5).
+  collective cannot outrun its slowest participant (see DESIGN.md §5);
+* an optional `health/watchdog.Watchdog`: fed each completed step's
+  metrics; its ``Escalate`` actions swap ``step_fn`` in place (graceful
+  precision degradation) and its ``Rollback`` actions reuse the circuit
+  breaker's restore path.
+
+The restart budget is *windowed*: ``config.restart_window`` bounds how
+many failures may land within any sliding span of that many steps, so a
+transient fault at step 10 doesn't consume the budget of a million-step
+run while ``max_restarts`` back-to-back failures still abort
+(``restart_window=None`` keeps the legacy run-lifetime budget).
 """
 from __future__ import annotations
 
 import copy
 import dataclasses
 import time
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import numpy as np
@@ -36,6 +51,9 @@ class TrainLoopConfig:
     keep_checkpoints: int = 3
     log_every: int = 10
     max_restarts: int = 3
+    # sliding step window the restart budget is counted over; None = the
+    # legacy behaviour (max_restarts over the whole run's lifetime)
+    restart_window: Optional[int] = None
 
 
 class TrainLoop:
@@ -43,18 +61,23 @@ class TrainLoop:
                  config: TrainLoopConfig,
                  fault_hook: Optional[Callable[[int], None]] = None,
                  metrics_hook: Optional[Callable[[int, Dict], None]] = None,
-                 state_sharding=None):
+                 state_sharding=None, watchdog=None):
         """step_fn(state, batch) -> (state, metrics dict of scalars).
 
         ``state_sharding``: optional pytree of shardings matching
         ``init_state`` — checkpoint restores then re-place the host
         arrays directly onto the mesh layout (sharded resume), instead
         of bouncing them through the default device.
+
+        ``watchdog``: optional `health/watchdog.Watchdog` — observes each
+        completed step's metrics and may escalate precision (swapping
+        ``step_fn`` via its rebuild hook) or demand a rollback.
         """
         self.step_fn = step_fn
         self.pipeline = pipeline
         self.state = init_state
         self.state_sharding = state_sharding
+        self.watchdog = watchdog
         # pristine snapshot for checkpoint-less restarts: jax arrays are
         # immutable, so holding the initial tree is enough; the pipeline
         # state dict is copied because pipelines mutate in place
@@ -62,6 +85,8 @@ class TrainLoop:
         self._init_pipeline = copy.deepcopy(pipeline.state_dict())
         self.config = config
         self.fault_hook = fault_hook
+        if fault_hook is not None and hasattr(fault_hook, "attach"):
+            fault_hook.attach(self)
         self.metrics_hook = metrics_hook
         self.ckpt = CheckpointManager(config.checkpoint_dir,
                                       keep=config.keep_checkpoints)
@@ -74,17 +99,20 @@ class TrainLoop:
         self.ckpt.save(step, payload, blocking=blocking)
 
     def _try_resume(self) -> int:
-        latest = self.ckpt.latest_step()
-        if latest is None:
-            # nothing checkpointed yet: restore the pristine initial state —
+        try:
+            # newest *intact* checkpoint: restore() checksum-verifies and
+            # falls back past corrupted steps on its own
+            latest, payload, _ = self.ckpt.restore()
+        except FileNotFoundError:
+            # nothing restorable: fall back to the pristine initial state —
             # the in-flight self.state may be a corrupted half-step
-            if self._init_state is not None:
-                self.state = self._init_state
-                self.pipeline.load_state_dict(
-                    copy.deepcopy(self._init_pipeline))
+            if self._init_state is None:
+                raise
+            self.state = self._init_state
+            self.pipeline.load_state_dict(
+                copy.deepcopy(self._init_pipeline))
             resumed = 0
         else:
-            _, payload, _ = self.ckpt.restore(latest)
             if self.state_sharding is not None:
                 self.state = jax.device_put(payload["state"],
                                             self.state_sharding)
@@ -100,11 +128,25 @@ class TrainLoop:
         return resumed
 
     # ----------------------------------------------------------------- run
+    def _charge_restart(self, restart_log: List[int], step: int) -> None:
+        """Windowed restart budget; raises via the caller when exceeded."""
+        window = self.config.restart_window
+        if window:
+            # keep only failures within the trailing window of *steps*
+            restart_log[:] = [s for s in restart_log if s > step - window]
+        restart_log.append(step)
+        if len(restart_log) > self.config.max_restarts:
+            raise RuntimeError(
+                f"restart budget exhausted: {len(restart_log)} failures "
+                + (f"within {window} steps" if window else "this run")
+                + f" (max_restarts={self.config.max_restarts})")
+
     def run(self) -> Dict[str, Any]:
         cfg = self.config
         start = self._try_resume()
         step = start
-        restarts = 0
+        restart_log: List[int] = []   # in-window step numbers of failures
+        restarts_total = 0
         # wall-time accounting: feeds the step_ms column in the history and
         # the perf trajectory in BENCH_kernels.json (benchmarks/run.py)
         window_t, window_n = 0.0, 0
@@ -126,6 +168,7 @@ class TrainLoop:
                 if not np.isfinite(loss):
                     raise FloatingPointError(f"non-finite loss at {step}")
                 step += 1
+                self._observe_watchdog(step, metrics)
                 if step % cfg.log_every == 0 or step == cfg.total_steps:
                     self.history.append({
                         "step": step,
@@ -145,9 +188,8 @@ class TrainLoop:
                         self._init_state = None
                         self._init_pipeline = None
             except (FloatingPointError, RuntimeError) as e:
-                restarts += 1
-                if restarts > cfg.max_restarts:
-                    raise
+                restarts_total += 1
+                self._charge_restart(restart_log, step)
                 resumed = self._try_resume()
                 step = resumed
                 # the interrupted window's timings belong to discarded steps
@@ -155,6 +197,24 @@ class TrainLoop:
                 continue
         self._save(step, blocking=True)
         self.ckpt.wait()
-        return {"final_step": step, "restarts": restarts,
-                "history": self.history,
-                "mean_step_ms": 1e3 * total_t / max(total_n, 1)}
+        out = {"final_step": step, "restarts": restarts_total,
+               "history": self.history,
+               "mean_step_ms": 1e3 * total_t / max(total_n, 1)}
+        if self.watchdog is not None:
+            out["watchdog_events"] = list(self.watchdog.events)
+        return out
+
+    def _observe_watchdog(self, step: int, metrics: Dict[str, Any]) -> None:
+        if self.watchdog is None:
+            return
+        from repro.health.watchdog import Escalate, Rollback
+        action = self.watchdog.observe(step, metrics)
+        if isinstance(action, Escalate):
+            if action.step_fn is not None:
+                self.step_fn = action.step_fn
+        elif isinstance(action, Rollback):
+            # reuse the circuit breaker: the raise lands in run()'s except
+            # handler, which charges the restart budget and restores the
+            # newest intact checkpoint (or the pristine init state)
+            raise FloatingPointError(
+                f"watchdog rollback at step {step}: {action.trigger}")

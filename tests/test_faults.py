@@ -1,0 +1,291 @@
+"""Chaos suite: deterministic fault injection (health/inject.py) against
+the hardened CheckpointManager + TrainLoop — bit flips survived via
+rollback, corrupted checkpoints skipped by checksum verification, SIGKILL
+preemption mid-async-save resumed bit-exactly, windowed restart budget."""
+import os
+import signal
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.checkpoint import CheckpointManager
+from repro.data import ShardedPipeline, make_token_pipeline
+from repro.health.inject import (FaultInjector, corrupt_checkpoint,
+                                 flip_bit, parse_fault_schedule)
+from repro.train import TrainLoop, TrainLoopConfig
+
+CHAOS_SEED = int(os.environ.get("CHAOS_SEED", "0"))
+_SRC = os.path.dirname(os.path.dirname(os.path.abspath(repro.__file__)))
+
+
+# ----------------------------------------------------------- primitives ---
+def test_flip_bit_is_involutive_and_targets_one_bit():
+    a = np.linspace(1.0, 2.0, 8).astype(np.float32)
+    b = flip_bit(a, 3, 31)
+    assert b[3] == -a[3] and np.array_equal(np.delete(a, 3), np.delete(b, 3))
+    np.testing.assert_array_equal(flip_bit(b, 3, 31), a)
+
+
+def test_parse_fault_schedule_grammar():
+    evs = parse_fault_schedule("nan@35,bitflip@20:leaf=1:bit=30,"
+                               "corrupt@60:mode=garble,sigkill@50")
+    assert [e.step for e in evs] == [20, 35, 50, 60]   # sorted
+    assert evs[0].kind == "bitflip" and evs[0].leaf == 1 and evs[0].bit == 30
+    assert evs[3].mode == "garble"
+    with pytest.raises(ValueError):
+        parse_fault_schedule("meteor@3")
+    with pytest.raises(ValueError):
+        parse_fault_schedule("nan@3:planet=9")
+
+
+# ---------------------------------------------------------------- toy loop -
+def _toy_setup(ckpt_dir, total=20, ckpt_every=5, max_restarts=3,
+               restart_window=None):
+    src = make_token_pipeline(vocab_size=50, seq_len=4, global_batch=2)
+    pipe = ShardedPipeline(src)
+    w0 = jnp.ones((4,), jnp.float32)
+
+    @jax.jit
+    def step_fn(state, batch):
+        w, n = state
+        tgt = batch["tokens"][0, :4].astype(jnp.float32) / 50.0
+        g = w - tgt
+        w = w - 0.1 * g
+        return (w, n + 1), {"loss": jnp.sum(g * g)}
+
+    cfg = TrainLoopConfig(total_steps=total, checkpoint_every=ckpt_every,
+                          checkpoint_dir=str(ckpt_dir), log_every=5,
+                          max_restarts=max_restarts,
+                          restart_window=restart_window)
+    return step_fn, pipe, (w0, jnp.zeros((), jnp.int32)), cfg
+
+
+def _clean_final_w(tmp_path, total=20):
+    step_fn, pipe, state, cfg = _toy_setup(tmp_path / "ck_clean", total)
+    loop = TrainLoop(step_fn, pipe, state, cfg)
+    loop.run()
+    return np.asarray(loop.state[0])
+
+
+# ------------------------------------------------------------- injector ---
+def test_injector_is_deterministic():
+    def run_one():
+        # leaf/bit/index left unspecified: drawn from (seed, step, i)
+        step_fn, pipe, state, cfg = _toy_setup("/tmp/unused_faults_ck")
+        inj = FaultInjector("bitflip@3:bit=3,nan@7", seed=CHAOS_SEED)
+        loop = TrainLoop(step_fn, pipe, state, cfg)
+        loop.fault_hook = None          # drive the injector by hand
+        inj.attach(loop)
+        inj(3), inj(7)
+        return inj.log, np.asarray(loop.state[0])
+
+    log1, w1 = run_one()
+    log2, w2 = run_one()
+    assert log1 == log2
+    np.testing.assert_array_equal(w1, w2)
+    assert log1[0]["kind"] == "bitflip" and "index" in log1[0]
+
+
+def test_injector_fires_each_event_once():
+    step_fn, pipe, state, cfg = _toy_setup("/tmp/unused_faults_ck2")
+    inj = FaultInjector("nan@4", seed=CHAOS_SEED)
+    loop = TrainLoop(step_fn, pipe, state, cfg)
+    inj.attach(loop)
+    inj(4)
+    w_after = np.asarray(loop.state[0])
+    inj(4)                              # replayed step: no second firing
+    np.testing.assert_array_equal(w_after, np.asarray(loop.state[0]))
+    assert len(inj.log) == 1
+
+
+# ----------------------------------------------------- checkpoint manager --
+def test_corrupted_latest_falls_back_to_intact_step(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, {"x": jnp.arange(8.0)}, blocking=True)
+    mgr.save(2, {"x": jnp.arange(8.0) * 2}, blocking=True)
+    # garble keeps the file size: only the checksum can catch it
+    assert corrupt_checkpoint(str(tmp_path), mode="garble") == 2
+    assert not mgr.verify(2) and mgr.verify(1)
+    step, tree, _ = mgr.restore()
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(tree["x"]), np.arange(8.0))
+    # asking for the corrupt step explicitly is an error, not a substitute
+    with pytest.raises(IOError):
+        mgr.restore(2)
+
+
+def test_truncated_checkpoint_detected(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(5, {"x": jnp.zeros(1000)}, blocking=True)
+    corrupt_checkpoint(str(tmp_path), mode="truncate")
+    assert not mgr.verify(5)
+    with pytest.raises(FileNotFoundError):
+        mgr.restore()
+
+
+def test_latest_step_blocks_on_pending_async_write(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(7, {"x": jnp.zeros(300_000)})       # async
+    assert mgr.latest_step() == 7                # must fence, not race
+
+
+def test_save_retries_transient_io_errors(tmp_path, monkeypatch):
+    import repro.checkpoint.manager as mgr_mod
+    real_savez = mgr_mod.np.savez
+    calls = {"n": 0}
+
+    def flaky_savez(*a, **k):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise OSError("transient NFS hiccup")
+        return real_savez(*a, **k)
+
+    monkeypatch.setattr(mgr_mod.np, "savez", flaky_savez)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"x": jnp.ones(4)}, blocking=True)
+    assert calls["n"] == 2 and mgr.verify(1)
+
+
+def test_atexit_fence_flushes_async_save(tmp_path):
+    script = (
+        "import sys\n"
+        "import numpy as np\n"
+        "from repro.checkpoint import CheckpointManager\n"
+        "mgr = CheckpointManager(sys.argv[1])\n"
+        "mgr.save(3, {'x': np.zeros(500_000, np.float32)})\n"
+        # exit WITHOUT wait(): the atexit fence must flush the write
+    )
+    env = dict(os.environ, PYTHONPATH=_SRC + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    r = subprocess.run([sys.executable, "-c", script, str(tmp_path)],
+                       env=env, capture_output=True, text=True, timeout=120)
+    assert r.returncode == 0, r.stderr
+    assert CheckpointManager(str(tmp_path)).verify(3)
+
+
+# -------------------------------------------------- TrainLoop + injector --
+def test_nan_injection_survived_via_rollback(tmp_path):
+    step_fn, pipe, state, cfg = _toy_setup(tmp_path / "ck")
+    inj = FaultInjector("nan@12", seed=CHAOS_SEED)
+    loop = TrainLoop(step_fn, pipe, state, cfg, fault_hook=inj)
+    out = loop.run()
+    assert out["final_step"] == 20 and out["restarts"] == 1
+    assert [e["kind"] for e in inj.log] == ["nan"]
+    np.testing.assert_array_equal(np.asarray(loop.state[0]),
+                                  _clean_final_w(tmp_path))
+
+
+def test_exponent_bitflip_survived_via_rollback(tmp_path):
+    # bit 30 is the top exponent bit: any w in (0, 2) blows up past 1e38,
+    # the loss goes non-finite, and the loop must roll back to step 10
+    step_fn, pipe, state, cfg = _toy_setup(tmp_path / "ck")
+    inj = FaultInjector("bitflip@12:bit=30", seed=CHAOS_SEED)
+    loop = TrainLoop(step_fn, pipe, state, cfg, fault_hook=inj)
+    out = loop.run()
+    assert out["final_step"] == 20 and out["restarts"] == 1
+    np.testing.assert_array_equal(np.asarray(loop.state[0]),
+                                  _clean_final_w(tmp_path))
+
+
+def test_corrupted_latest_checkpoint_rollback_uses_previous(tmp_path):
+    # corrupt the newest checkpoint (step 10), then poison the state: the
+    # restart must fall back to the intact step 5 and still finish clean
+    step_fn, pipe, state, cfg = _toy_setup(tmp_path / "ck")
+    inj = FaultInjector("corrupt@12:mode=garble,nan@13", seed=CHAOS_SEED)
+    loop = TrainLoop(step_fn, pipe, state, cfg, fault_hook=inj)
+    out = loop.run()
+    assert out["final_step"] == 20 and out["restarts"] == 1
+    assert inj.log[0] == {"step": 12, "kind": "corrupt", "ckpt_step": 10,
+                          "mode": "garble"}
+    np.testing.assert_array_equal(np.asarray(loop.state[0]),
+                                  _clean_final_w(tmp_path))
+
+
+def test_windowed_restart_budget_spreads_transients(tmp_path):
+    # three transient preemptions, far apart: a windowed budget of 2 (per
+    # 5 steps) survives all three, the lifetime budget of 2 gives up
+    sched = "preempt@3,preempt@12,preempt@17"
+    step_fn, pipe, state, cfg = _toy_setup(
+        tmp_path / "ck_w", max_restarts=2, restart_window=5)
+    loop = TrainLoop(step_fn, pipe, state, cfg,
+                     fault_hook=FaultInjector(sched, seed=CHAOS_SEED))
+    out = loop.run()
+    assert out["final_step"] == 20 and out["restarts"] == 3
+
+    step_fn, pipe, state, cfg = _toy_setup(
+        tmp_path / "ck_l", max_restarts=2, restart_window=None)
+    loop = TrainLoop(step_fn, pipe, state, cfg,
+                     fault_hook=FaultInjector(sched, seed=CHAOS_SEED))
+    with pytest.raises(RuntimeError):
+        loop.run()
+
+
+def test_windowed_budget_still_catches_back_to_back_failures(tmp_path):
+    step_fn, pipe, state, cfg = _toy_setup(
+        tmp_path / "ck", max_restarts=2, restart_window=5)
+
+    def always_fail(step):
+        raise RuntimeError("permafail")
+
+    loop = TrainLoop(step_fn, pipe, state, cfg, fault_hook=always_fail)
+    with pytest.raises(RuntimeError):
+        loop.run()
+
+
+# --------------------------------------------------- SIGKILL preemption ---
+_CHILD = (
+    "import sys\n"
+    "import numpy as np\n"
+    "import jax, jax.numpy as jnp\n"
+    # same PRNG pins as conftest.py, or the zipf token stream (and hence
+    # the bit-exactness comparison against the in-process clean run) drifts
+    "jax.config.update('jax_default_prng_impl', 'threefry2x32')\n"
+    "jax.config.update('jax_threefry_partitionable', True)\n"
+    "from repro.data import ShardedPipeline, make_token_pipeline\n"
+    "from repro.health.inject import FaultInjector\n"
+    "from repro.train import TrainLoop, TrainLoopConfig\n"
+    "ckpt_dir, out_path, schedule = sys.argv[1], sys.argv[2], sys.argv[3]\n"
+    "src = make_token_pipeline(vocab_size=50, seq_len=4, global_batch=2)\n"
+    "pipe = ShardedPipeline(src)\n"
+    "w0 = jnp.ones((4,), jnp.float32)\n"
+    "@jax.jit\n"
+    "def step_fn(state, batch):\n"
+    "    w, n = state\n"
+    "    tgt = batch['tokens'][0, :4].astype(jnp.float32) / 50.0\n"
+    "    g = w - tgt\n"
+    "    return (w - 0.1 * g, n + 1), {'loss': jnp.sum(g * g)}\n"
+    "hook = FaultInjector(schedule) if schedule else None\n"
+    "cfg = TrainLoopConfig(total_steps=20, checkpoint_every=5,\n"
+    "                      checkpoint_dir=ckpt_dir, log_every=5)\n"
+    "loop = TrainLoop(step_fn, pipe, (w0, jnp.zeros((), jnp.int32)), cfg,\n"
+    "                 fault_hook=hook)\n"
+    "loop.run()\n"
+    "np.save(out_path, np.asarray(loop.state[0]))\n"
+)
+
+
+@pytest.mark.slow
+def test_sigkill_mid_async_save_then_bit_exact_resume(tmp_path):
+    """Hard preemption: SIGKILL lands right after the step-10 async save
+    is enqueued (racing the background write).  A fresh process must
+    resume from whatever checkpoint is intact and reach the bit-exact
+    fault-free final state."""
+    env = dict(os.environ, PYTHONPATH=_SRC + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    ckpt = str(tmp_path / "ck")
+    out = str(tmp_path / "w.npy")
+    r = subprocess.run(
+        [sys.executable, "-c", _CHILD, ckpt, out, "sigkill@10"],
+        env=env, capture_output=True, text=True, timeout=300)
+    assert r.returncode == -signal.SIGKILL, (r.returncode, r.stderr)
+    assert not os.path.exists(out)
+    # resume in a fresh process, no faults this time
+    r = subprocess.run([sys.executable, "-c", _CHILD, ckpt, out, ""],
+                       env=env, capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, r.stderr
+    np.testing.assert_array_equal(np.load(out), _clean_final_w(tmp_path))

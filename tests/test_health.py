@@ -1,0 +1,270 @@
+"""Numeric-health subsystem: monitor telemetry, loss-scale wiring in
+make_train_step, and the watchdog's RN-stagnation rescue (the paper's
+Scenario-2 deadband detected and escalated to SR at runtime)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.formats import get_format
+from repro.data import ShardedPipeline, make_token_pipeline
+from repro.health import (HealthConfig, HealthState, Watchdog,
+                          WatchdogConfig, health_metrics, init_health_state,
+                          initial_level, observe_health, rounding_for_level,
+                          update_health)
+from repro.launch.steps import StepCarry, init_step_carry, make_train_step
+from repro.optim import dynamic_loss_scale, qsgd, resolve_loss_scale
+from repro.train import TrainLoop, TrainLoopConfig
+
+CHAOS_SEED = int(os.environ.get("CHAOS_SEED", "0"))
+
+
+# ---------------------------------------------------------------- monitor --
+def test_deadband_fraction_known_values():
+    # binary8 (E5M2): x in [1, 2) has ulp = 0.25, so the deadband test is
+    # |t*g| < 0.125.  With t=1: g=0.1 deadbands, g=0.2 does not.
+    cfg = HealthConfig(fmt="binary8")
+    params = {"w": jnp.full((8,), 1.5, jnp.float32)}
+    grads = {"w": jnp.array([0.1] * 4 + [0.2] * 4, jnp.float32)}
+    m = health_metrics(params, grads, 1.0, cfg)
+    assert float(m["h_deadband_frac"]) == pytest.approx(0.5)
+    assert float(m["h_nonfinite"]) == 0.0
+    # the stepsize matters: t=0.1 shrinks every |t*g| under 0.125
+    m2 = health_metrics(params, grads, 0.1, cfg)
+    assert float(m2["h_deadband_frac"]) == pytest.approx(1.0)
+
+
+def test_saturation_underflow_and_nonfinite():
+    fmt = get_format("binary8")
+    cfg = HealthConfig(fmt="binary8")
+    params = {"w": jnp.ones((4,), jnp.float32)}
+    grads = {"w": jnp.array([fmt.xmax * 2, fmt.xmin_sub / 2, 1.0, 0.0],
+                            jnp.float32)}
+    m = health_metrics(params, grads, 1.0, cfg)
+    assert float(m["h_sat_frac"]) == pytest.approx(0.25)
+    assert float(m["h_underflow_frac"]) == pytest.approx(0.25)
+    assert float(m["h_nonfinite"]) == 0.0
+    bad = {"w": jnp.array([1.0, jnp.nan, 1.0, 1.0], jnp.float32)}
+    m = health_metrics(params, bad, 1.0, cfg)
+    assert float(m["h_nonfinite"]) == 1.0
+    # the norm masks non-finite entries instead of collapsing to nan
+    assert np.isfinite(float(m["h_grad_norm"]))
+
+
+def test_health_streaks_advance_and_reset():
+    cfg = HealthConfig(fmt="binary8", deadband_threshold=0.9)
+    st = init_health_state()
+    dead = {"h_deadband_frac": jnp.float32(1.0),
+            "h_sat_frac": jnp.float32(0.0),
+            "h_nonfinite": jnp.float32(0.0)}
+    for k in range(3):
+        st = update_health(st, dead, cfg)
+        assert int(st.deadband_streak) == k + 1
+    ok = dict(dead, h_deadband_frac=jnp.float32(0.0))
+    st = update_health(st, ok, cfg)
+    assert int(st.deadband_streak) == 0
+
+
+# ---------------------------------------------------- loss-scale wiring ---
+class _ToyModel:
+    """Minimal model protocol for make_train_step (no gemm_policy)."""
+
+    def loss_fn(self, p, batch, rng=None):
+        pred = batch["x"] @ p["w"]
+        loss = jnp.mean((pred - batch["y"]) ** 2)
+        return loss, {"ce": loss}
+
+
+def _toy_batch(seed=0):
+    r = np.random.default_rng(seed)
+    return {"x": jnp.asarray(r.normal(size=(8, 4)), jnp.float32),
+            "y": jnp.asarray(r.normal(size=(8,)), jnp.float32)}
+
+
+def _toy_params():
+    return {"w": jnp.linspace(-1.0, 1.0, 4).astype(jnp.float32)}
+
+
+def test_loss_scale_one_is_bit_identical():
+    model, opt = _ToyModel(), qsgd(lr=0.1, momentum=0.0)
+    params = _toy_params()
+    state = opt.init(params, jax.random.PRNGKey(0))
+    batch = _toy_batch()
+
+    plain = make_train_step(model, opt)
+    p_ref, s_ref, m_ref = jax.jit(plain)(params, state, batch)
+
+    scaled = make_train_step(model, opt, loss_scale=1.0)
+    carry = init_step_carry(loss_scale=1.0)
+    p2, s2, carry2, m2 = jax.jit(scaled)(params, state, carry, batch)
+    np.testing.assert_array_equal(np.asarray(p_ref["w"]), np.asarray(p2["w"]))
+    assert float(m_ref["loss"]) == float(m2["loss"])
+    assert float(m2["h_grads_finite"]) == 1.0
+    assert int(s2.step) == int(s_ref.step)
+
+
+def _toy_batch_big(seed=0):
+    # targets ~30x larger => grads ~20: scale 1e38 overflows them to inf
+    b = _toy_batch(seed)
+    return {"x": b["x"], "y": b["y"] * 30.0}
+
+
+def test_loss_scale_overflow_skips_step_and_backs_off():
+    model, opt = _ToyModel(), qsgd(lr=0.1, momentum=0.0)
+    params = _toy_params()
+    state = opt.init(params, jax.random.PRNGKey(0))
+    batch = _toy_batch_big()
+    # a scale big enough that scaled grads overflow float32
+    step = make_train_step(model, opt, loss_scale=1e38)
+    carry = init_step_carry(loss_scale=1e38)
+    p2, s2, carry2, m = jax.jit(step)(params, state, carry, batch)
+    assert float(m["h_skipped"]) == 1.0
+    # params untouched, but the step counter advanced (fresh rounding bits
+    # on the retry) and the scale backed off
+    np.testing.assert_array_equal(np.asarray(params["w"]), np.asarray(p2["w"]))
+    assert int(s2.step) == int(state.step) + 1
+    assert float(carry2.scale.scale) == pytest.approx(0.5e38, rel=1e-6)
+
+
+def test_loss_scale_recovers_after_backoff():
+    model, opt = _ToyModel(), qsgd(lr=0.1, momentum=0.0)
+    params = _toy_params()
+    state = opt.init(params, jax.random.PRNGKey(0))
+    batch = _toy_batch_big()
+    step = jax.jit(make_train_step(model, opt, loss_scale=1e38))
+    carry = init_step_carry(loss_scale=1e38)
+    skipped, losses = 0, []
+    for _ in range(12):
+        params, state, carry, m = step(params, state, carry, batch)
+        skipped += int(float(m["h_skipped"]))
+        losses.append(float(m["loss"]))
+    # the scale halves until grads fit, then training proceeds
+    assert 0 < skipped < 12
+    assert float(m["h_skipped"]) == 0.0
+    assert float(carry.scale.scale) < 1e38
+    assert losses[-1] < losses[0]
+
+
+def test_health_telemetry_does_not_change_params():
+    model, opt = _ToyModel(), qsgd(lr=0.1, momentum=0.0)
+    params = _toy_params()
+    state = opt.init(params, jax.random.PRNGKey(0))
+    batch = _toy_batch()
+    plain = make_train_step(model, opt)
+    p_ref, _, _ = jax.jit(plain)(params, state, batch)
+    mon = make_train_step(model, opt, health="binary8")
+    carry = init_step_carry(health="binary8")
+    p2, _, carry2, m = jax.jit(mon)(params, state, carry, batch)
+    np.testing.assert_array_equal(np.asarray(p_ref["w"]), np.asarray(p2["w"]))
+    assert "h_deadband_frac" in m and "h_grad_norm" in m
+    assert isinstance(carry2, StepCarry)
+
+
+def test_resolve_loss_scale_forms():
+    assert resolve_loss_scale(None) is None
+    assert resolve_loss_scale(False) is None
+    assert resolve_loss_scale(0.0) is None
+    assert float(resolve_loss_scale(True).scale) == 128.0
+    assert float(resolve_loss_scale(64.0).scale) == 64.0
+    st = dynamic_loss_scale(initial=4.0)
+    assert resolve_loss_scale(st) is st
+
+
+# ----------------------------------------------------------- watchdog -----
+def test_initial_level_mapping():
+    assert initial_level("binary8", "rn") == "binary8-rn"
+    assert initial_level("binary8", "sr") == "binary8-sr"
+    assert initial_level("binary8", "signed_sr_eps") == "binary8-sr"
+    assert initial_level("bfloat16", "sr") == "bf16-sr"
+    assert initial_level("bfloat16", "fp32") == "fp32"
+
+
+def test_watchdog_escalates_after_patience_and_cooldown():
+    wd = Watchdog(WatchdogConfig(deadband_patience=3, cooldown=4,
+                                 ladder=("binary8-rn", "binary8-sr")))
+    bad = {"h_deadband_frac": 1.0, "h_sat_frac": 0.0, "h_nonfinite": 0.0}
+    actions = [wd.observe(s, bad) for s in range(1, 12)]
+    fired = [a for a in actions if a is not None]
+    assert len(fired) == 1 and fired[0].level == "binary8-sr"
+    assert wd.level == "binary8-sr"
+    assert wd.events[0]["trigger"] == "deadband"
+    # ladder exhausted: staying bad produces no further action
+    assert all(wd.observe(s, bad) is None for s in range(12, 30))
+
+
+def test_watchdog_rollback_on_nonfinite():
+    from repro.health import Rollback
+    wd = Watchdog(WatchdogConfig(nonfinite_patience=2))
+    bad = {"h_deadband_frac": 0.0, "h_sat_frac": 0.0, "h_nonfinite": 1.0}
+    assert wd.observe(1, bad) is None
+    action = wd.observe(2, bad)
+    assert isinstance(action, Rollback)
+    assert wd.events[-1]["action"] == "rollback"
+
+
+class _Quadratic:
+    """f(w) = 0.5*||w||^2 — the paper's toy objective; grad = w."""
+
+    def loss_fn(self, p, batch, rng=None):
+        loss = 0.5 * jnp.sum(p["w"] ** 2)
+        return loss, {}
+
+
+def _quad_step_builder(w_shape=(16,), lr=0.05):
+    """rebuild hook: a jitted extended train step for one ladder rung."""
+    model = _Quadratic()
+
+    def build(level):
+        opt = qsgd(lr=lr, momentum=0.0, cfg=rounding_for_level(level))
+        ts = jax.jit(make_train_step(model, opt, health="binary8"))
+
+        def step_fn(state, batch):
+            p, o, c = state
+            p, o, c, m = ts(p, o, c, batch)
+            return (p, o, c), m
+        return step_fn
+    return build
+
+
+def test_watchdog_rescues_stagnated_binary8_rn_run(tmp_path):
+    """The tentpole story (paper Fig. 2): w0=1.5, t=0.05, binary8 — every
+    RN update rounds away (|t*g|=0.075 < ulp(1.5)/2=0.125), the telemetry
+    reports deadband_frac=1.0, the watchdog escalates RN -> SR, and the
+    loss resumes descending on the *same* grid."""
+    lr, n = 0.05, 16
+    build = _quad_step_builder((n,), lr)
+    opt = qsgd(lr=lr, momentum=0.0, cfg=rounding_for_level("binary8-rn"))
+    params = {"w": jnp.full((n,), 1.5, jnp.float32)}
+    opt_state = opt.init(params, jax.random.PRNGKey(CHAOS_SEED))
+    carry = init_step_carry(health="binary8")
+
+    wd = Watchdog(WatchdogConfig(deadband_patience=4, cooldown=5,
+                                 ladder=("binary8-rn", "binary8-sr")),
+                  level="binary8-rn", rebuild=build)
+    pipe = ShardedPipeline(make_token_pipeline(50, 4, 2, seed=0))
+    loop = TrainLoop(build("binary8-rn"), pipe,
+                     (params, opt_state, carry),
+                     TrainLoopConfig(total_steps=40, checkpoint_every=10,
+                                     checkpoint_dir=str(tmp_path / "ck"),
+                                     log_every=1),
+                     watchdog=wd)
+    out = loop.run()
+
+    loss0 = 0.5 * n * 1.5 ** 2
+    hist = {h["step"]: h for h in out["history"]}
+    # before escalation: full stagnation, loss frozen at f(w0)
+    assert hist[3]["loss"] == pytest.approx(loss0)
+    assert hist[3]["h_deadband_frac"] == pytest.approx(1.0)
+    # the transition is recorded in run history
+    events = out["watchdog_events"]
+    assert len(events) == 1 and events[0]["action"] == "escalate"
+    assert events[0]["from"] == "binary8-rn"
+    assert events[0]["to"] == "binary8-sr"
+    esc_step = events[0]["step"]
+    assert esc_step <= 10
+    # after escalation: SR on the same grid resumes descent in expectation
+    final = out["history"][-1]["loss"]
+    assert final < 0.7 * loss0, (
+        f"loss {final} did not descend from {loss0} after SR escalation")
