@@ -162,8 +162,19 @@ def run(n: int = 1 << 20):
     cast = jax.jit(lambda x_, k_: rounding.round_to_format(
         x_, "binary8", "sr", key=k_))
 
+    # scheme-registry variants through the PRNG cast kernel: centered
+    # few-random-bits SR (r=8) vs SR 2.0's uncentered comparison draw at
+    # the same budget (contract: sr2 must not cost more than the centered
+    # draw it replaces — gated absolutely in CI), plus the fixed-point
+    # grid cast
+    cast_sr_r8 = lambda x_: ops.sr_cast_prng(x_, key, "binary8", "sr",
+                                             rand_bits=8)
+    cast_sr2_r8 = lambda x_: ops.sr_cast_prng(x_, key, "binary8", "sr2",
+                                              rand_bits=8)
+    cast_fxp = lambda x_: ops.sr_cast_prng(x_, key, "fxp16.8", "sr")
+
     (us_fp32, us_jnp, us_fused_bits, us_fused_prng, us_tree, us_memcpy,
-     us_cast) = _time_many([
+     us_cast, us_cast_sr_r8, us_cast_sr2_r8, us_cast_fxp) = _time_many([
          lambda: upd_fp32(x, g),
          lambda: upd_jnp(x, g, key),
          lambda: upd_fused_bits(x, g, key),
@@ -171,6 +182,9 @@ def run(n: int = 1 << 20):
          lambda: upd_tree(tree_p, tree_g, key),
          lambda: memcpy(x),
          lambda: cast(x, key),
+         lambda: cast_sr_r8(x),
+         lambda: cast_sr2_r8(x),
+         lambda: cast_fxp(x),
      ])
 
     # -- quantized-GEMM path (eq. 8a): qdot fwd / dgrad / wgrad ------------
@@ -203,14 +217,24 @@ def run(n: int = 1 << 20):
     q_fwd_packed = jax.jit(lambda a_, b_: qpol.site_matmul(
         pol, qpol.SITE_FWD, a_, b_, words, out_packed=True))
 
+    # registry schemes at the GEMM emit: SR 2.0's single 8-bit comparison
+    # draw, and result-rounding onto the fxp16.8 fixed-point grid — both
+    # resolved through the canonical parser, no private preset needed
+    ctx_sr2 = qpol.QuantCtx(qpol.get_policy("binary8-sr2"), ctx.words)
+    q_fwd_sr2 = jax.jit(lambda a_, b_: qpol.qdot(a_, b_, ctx_sr2))
+    ctx_fxp = qpol.QuantCtx(qpol.get_policy("fxp16.8-sr"), ctx.words)
+    q_fwd_fxp = jax.jit(lambda a_, b_: qpol.qdot(a_, b_, ctx_fxp))
+
     (us_dot, us_qfwd, us_qdgrad, us_qwgrad, us_qfwd16,
-     us_qfwd_packed) = _time_many([
+     us_qfwd_packed, us_qfwd_sr2, us_qfwd_fxp) = _time_many([
          lambda: dot_fp32(A, B),
          lambda: q_fwd(A, B),
          lambda: q_dgrad(G, B),
          lambda: q_wgrad(A, G),
          lambda: q_fwd16(A, B),
          lambda: q_fwd_packed(A, B),
+         lambda: q_fwd_sr2(A, B),
+         lambda: q_fwd_fxp(A, B),
      ])
 
     # -- fused GLU-FFN prefix vs the unfused fp32 swiglu -------------------
@@ -290,6 +314,25 @@ def run(n: int = 1 << 20):
         ("kernel/qmatmul_fwd_r16_us", us_qfwd16, us_qfwd16 / us_dot, ITERS),
         ("kernel/qmatmul_fwd_packed_us", us_qfwd_packed,
          us_qfwd_packed / us_dot, ITERS),
+        # registry-scheme GEMMs: SR 2.0 emit and fixed-point-grid emit
+        ("kernel/qmatmul_fwd_sr2_us", us_qfwd_sr2, us_qfwd_sr2 / us_dot,
+         ITERS),
+        ("kernel/qmatmul_fwd_fxp16.8_us", us_qfwd_fxp,
+         us_qfwd_fxp / us_dot, ITERS),
+        # PRNG-kernel casts: centered r=8 SR vs SR 2.0 at the same budget
+        # and the fixed-point cast, all vs the memcpy-bound baseline
+        ("kernel/sr_cast_sr_r8_us_per_Melt", us_cast_sr_r8 / melt,
+         us_cast_sr_r8 / us_memcpy, ITERS),
+        ("kernel/sr_cast_sr2_us_per_Melt", us_cast_sr2_r8 / melt,
+         us_cast_sr2_r8 / us_memcpy, ITERS),
+        ("kernel/sr_cast_fxp16.8_us_per_Melt", us_cast_fxp / melt,
+         us_cast_fxp / us_memcpy, ITERS),
+        # contract row (CI --max cap): SR 2.0's uncentered comparison draw
+        # must not cost more than the centered r=8 draw it replaces
+        # (us == 0 keeps it out of the relative gate; the absolute cap in
+        # tier1.yml owns it)
+        ("kernel/sr2_vs_r8_draw_cost_ratio", 0.0,
+         us_cast_sr2_r8 / us_cast_sr_r8, ITERS),
         # fused GLU-FFN prefix (gate+up GEMMs + silu + act rounding + down
         # GEMM) vs the fp32 jnp swiglu of the same shape; the packed
         # flavour stores the hidden as uint8 and decodes in the down GEMM

@@ -1,0 +1,208 @@
+"""First-class rounding grids: FP formats, fixed-point, (scale, μ)-shifted.
+
+A :class:`Grid` is the set of representable magnitudes a rounding scheme
+chooses between.  It exposes the ``magnitude_decompose``/``ulp``/
+``successor`` contract the bit-exact engine (`repro.core.rounding`) and
+the Pallas kernels (`repro.kernels.common.round_block`) are written
+against, so schemes plug into *any* grid:
+
+* **FP-format grids** — the existing IEEE-style formats
+  (`repro.core.formats`), decomposed by exact integer bit manipulation.
+* **fixed-point grids** ``fxp<W>.<F>`` (stochastic fixed-point rounding
+  under the PL inequality, arXiv 2301.09511): ``W`` total bits including
+  the sign, ``F`` fractional bits — quantum ``2^-F`` everywhere,
+  ``xmax = (2^(W-1) - 1)·2^-F``.  Implemented as a *degenerate* FP
+  format (``precision = W-1``, ``emin = emax = W-2-F``, subnormals on):
+  every representable magnitude then lives in the subnormal range or the
+  single normal binade, both with uniform spacing ``2^-F`` — so the
+  whole decompose/round/pack engine (and its Pallas ports) applies
+  bit-exactly with no new kernel math, and ``fxp`` grids of ≤16 bits
+  pack/unpack and ride the wire like any narrow float format.
+* **(scale, μ)-shifted grids** — SNIPPETS.md snippet 2's
+  ``fp_round(x, scale, mu, …)`` pattern: round ``(x − μ)/scale`` on an
+  inner grid and map back, i.e. an affine pre/post transform around any
+  unshifted grid (blockwise quantization grids, mean-centred wires).
+
+``get_grid`` accepts a Grid, an FPFormat, any registered format name or
+alias, or an ``fxpW.F`` string; module import is jax-free (jnp is only
+imported inside the numeric methods), so name validation — the canonical
+spec parser (`core/schemes.py`), `health/watchdog`'s import-time ladder
+check — costs no jax import.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple, Union
+
+from repro.core.formats import FPFormat, get_format
+
+
+@dataclasses.dataclass(frozen=True)
+class Grid:
+    """A rounding grid: an engine descriptor + optional affine transform.
+
+    ``fmt`` is the FP-format descriptor the exact decompose engine runs
+    on; rounding onto the grid is: ``z = to_grid(x)`` (identity unless
+    shifted), decompose/choose-neighbour on ``fmt``'s magnitudes, then
+    ``from_grid``.  ``kind`` tags the grid family ("fp" | "fxp") for
+    registries and tests; it does not change the math.
+    """
+
+    name: str
+    fmt: FPFormat
+    kind: str = "fp"
+    scale: float = 1.0
+    mu: float = 0.0
+
+    def __post_init__(self):
+        if self.scale <= 0.0:
+            raise ValueError(f"grid scale must be positive, got {self.scale}")
+
+    # -- affine transform (identity for fp/fxp grids) ----------------------
+    @property
+    def transformed(self) -> bool:
+        return self.scale != 1.0 or self.mu != 0.0
+
+    def to_grid(self, x):
+        """Carrier domain -> grid domain ((x − μ)/scale)."""
+        if not self.transformed:
+            return x
+        import jax.numpy as jnp
+        return (jnp.asarray(x, jnp.float32) - jnp.float32(self.mu)) \
+            / jnp.float32(self.scale)
+
+    def from_grid(self, y):
+        """Grid domain -> carrier domain (y·scale + μ)."""
+        if not self.transformed:
+            return y
+        import jax.numpy as jnp
+        return jnp.asarray(y, jnp.float32) * jnp.float32(self.scale) \
+            + jnp.float32(self.mu)
+
+    # -- the decompose contract (grid-domain values) -----------------------
+    def decompose(self, z):
+        """(floor_mag, quantum, frac, fy) of grid-domain values ``z``."""
+        from repro.core import rounding
+        return rounding.magnitude_decompose(z, self.fmt)
+
+    def ceil_mag(self, z, fy):
+        """The away-from-zero neighbour magnitude, exact."""
+        from repro.core import rounding
+        return rounding._ceil_from_decompose(z, fy, self.fmt)
+
+    # -- carrier-domain grid queries ---------------------------------------
+    def ulp(self, x):
+        """Grid spacing at ``x`` in *carrier* units (monitor deadband)."""
+        _, q, _, _ = self.decompose(self.to_grid(x))
+        if not self.transformed:
+            return q
+        import jax.numpy as jnp
+        return q * jnp.float32(self.scale)
+
+    def successor(self, x):
+        """Smallest grid value (carrier domain) strictly greater than x."""
+        from repro.core import rounding
+        return self.from_grid(rounding.successor(self.to_grid(x), self.fmt))
+
+    def predecessor(self, x):
+        from repro.core import rounding
+        return self.from_grid(rounding.predecessor(self.to_grid(x), self.fmt))
+
+    # -- range (carrier domain) --------------------------------------------
+    @property
+    def xmax(self) -> float:
+        return self.fmt.xmax * self.scale + self.mu
+
+    @property
+    def xmin_sub(self) -> float:
+        """Smallest positive representable magnitude step (carrier)."""
+        return self.fmt.xmin_sub * self.scale
+
+    @property
+    def u(self) -> float:
+        """Unit roundoff of the inner descriptor (relative, fp grids)."""
+        return self.fmt.u
+
+
+# ----------------------------------------------------------- constructors --
+def fp_grid(fmt) -> "Grid":
+    fmt = get_format(fmt)
+    return Grid(name=fmt.name, fmt=fmt, kind="fp")
+
+
+_FXP_RE = re.compile(r"^fxp(\d+)\.(\d+)$")
+
+
+def fixed_point_grid(width: int, frac_bits: int) -> "Grid":
+    """Signed fixed-point grid with ``width`` total bits (incl. sign) and
+    ``frac_bits`` fractional bits: quantum ``2^-F``, magnitudes
+    ``0..(2^(W-1)-1)·2^-F``."""
+    if not 2 <= width <= 24:
+        raise ValueError(f"fxp width must be in [2, 24] (float32-exact "
+                         f"significands), got {width}")
+    if not 0 <= frac_bits <= 126:
+        raise ValueError(f"fxp frac_bits must be in [0, 126], "
+                         f"got {frac_bits}")
+    name = f"fxp{width}.{frac_bits}"
+    fmt = FPFormat(name=name, precision=width - 1,
+                   emin=width - 2 - frac_bits, emax=width - 2 - frac_bits,
+                   subnormals=True)
+    return Grid(name=name, fmt=fmt, kind="fxp")
+
+
+def shifted_grid(inner, scale: float, mu: float = 0.0,
+                 name: Optional[str] = None) -> "Grid":
+    """(scale, μ)-shifted wrapper: round ``(x − μ)/scale`` on ``inner``."""
+    inner = get_grid(inner)
+    if inner.transformed:
+        raise ValueError("shifted_grid cannot nest shifted grids; "
+                         f"{inner.name!r} is already transformed")
+    if name is None:
+        name = f"shift({inner.name},s={scale:g},mu={mu:g})"
+    return Grid(name=name, fmt=inner.fmt, kind=inner.kind,
+                scale=float(scale), mu=float(mu))
+
+
+# ---------------------------------------------------------------- registry --
+_REGISTRY: Dict[str, Grid] = {}
+
+
+def register_grid(grid: Grid) -> None:
+    """Register a custom grid under its name (tests/sweeps)."""
+    _REGISTRY[grid.name] = grid
+
+
+def get_grid(g: Union[Grid, FPFormat, str]) -> Grid:
+    """Grid | FPFormat | format name/alias | "fxpW.F" -> Grid."""
+    if isinstance(g, Grid):
+        return g
+    if isinstance(g, FPFormat):
+        return fp_grid(g)
+    name = str(g).lower()
+    cached = _REGISTRY.get(name)
+    if cached is not None:
+        return cached
+    m = _FXP_RE.match(name)
+    if m:
+        grid = fixed_point_grid(int(m.group(1)), int(m.group(2)))
+        _REGISTRY[name] = grid
+        return grid
+    try:
+        grid = fp_grid(get_format(name))
+    except ValueError as exc:
+        raise ValueError(
+            f"unknown rounding grid {g!r}; known: {grid_names()} "
+            "(or any 'fxp<W>.<F>' fixed-point grid)") from exc
+    _REGISTRY[name] = grid
+    return grid
+
+
+def grid_names() -> Tuple[str, ...]:
+    """Canonical names of the always-available grids (FP formats plus any
+    explicitly registered custom/fxp grids)."""
+    from repro.core import formats
+    fp = {f.name for f in (formats.BINARY8, formats.E4M3, formats.BFLOAT16,
+                           formats.BINARY16, formats.BINARY32)}
+    custom = {g.name for g in _REGISTRY.values()}
+    return tuple(sorted(fp | custom))

@@ -54,11 +54,12 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import schemes as _schemes
 from repro.core.formats import FPFormat, get_format
-
-DETERMINISTIC_MODES = ("rn", "rz", "ra", "rd", "ru")
-STOCHASTIC_MODES = ("sr", "sr_eps", "signed_sr_eps")
-ALL_MODES = DETERMINISTIC_MODES + STOCHASTIC_MODES
+from repro.core.grids import Grid, get_grid
+from repro.core.schemes import (ALL_MODES, DETERMINISTIC_MODES,
+                                RAND_BITS_CHOICES, STOCHASTIC_MODES,
+                                RoundingScheme, get_scheme)
 
 _F32_MANT_BITS = 23
 _F32_EXP_BIAS = 127
@@ -139,9 +140,16 @@ def magnitude_decompose(x, fmt: FPFormat):
 
 
 def _quantum_exponent(x, fmt: FPFormat):
-    """Exponent of the grid spacing at |x| (int32)."""
+    """Exponent of the grid spacing at |x| (int32).
+
+    The exponent is clamped to [emin, emax]: the grid has no binades
+    beyond emax, so spacing queries above xmax report the top-binade
+    quantum (and fixed-point grids, emin == emax, get their uniform
+    quantum everywhere).  Rounding outputs are unaffected — beyond xmax
+    both neighbours land past the range and the overflow policy decides.
+    """
     e = _float_exponent(jnp.abs(x))
-    qe = jnp.maximum(e, fmt.emin) - (fmt.precision - 1)
+    qe = jnp.clip(e, fmt.emin, fmt.emax) - (fmt.precision - 1)
     if not fmt.subnormals:
         qe = jnp.where(e < fmt.emin, jnp.int32(fmt.emin), qe)
     return qe
@@ -156,44 +164,38 @@ def _ceil_from_decompose(x, fy, fmt: FPFormat):
 
 
 def _p_round_up(mode, frac, fy, sign_x, eps, sign_v):
-    """Probability of rounding the magnitude away from zero (unified rule)."""
-    if mode == "sr":
-        return frac
-    if mode == "sr_eps":
-        return jnp.minimum(frac + eps, 1.0)
-    if mode == "signed_sr_eps":
-        return jnp.clip(frac - sign_x * sign_v * eps, 0.0, 1.0)
-    if mode == "rn":
-        fy_odd = (fy.astype(jnp.int32) & 1).astype(frac.dtype)
-        return jnp.where(frac > 0.5, 1.0,
-                         jnp.where(frac < 0.5, 0.0, fy_odd))
-    if mode == "rz":
-        return jnp.zeros_like(frac)
-    if mode == "ra":
-        return jnp.ones_like(frac)
-    if mode == "rd":   # toward -inf
-        return jnp.where(sign_x < 0, 1.0, 0.0).astype(frac.dtype)
-    if mode == "ru":   # toward +inf
-        return jnp.where(sign_x > 0, 1.0, 0.0).astype(frac.dtype)
-    raise ValueError(f"unknown rounding mode {mode!r}")
+    """Probability of rounding the magnitude away from zero (unified rule).
+
+    Delegates to the :mod:`repro.core.schemes` registry — each scheme
+    declares its own ``p_up``; this wrapper is the engine/kernel entry
+    point (and the back-compat name).
+    """
+    return get_scheme(mode).p_up(frac, fy, sign_x, eps, sign_v)
 
 
-RAND_BITS_CHOICES = (8, 16, 32)
-
-
-def _uniform_from_bits(bits, rand_bits: int = 32):
+def _uniform_from_bits(bits, rand_bits: int = 32,
+                       randomness: str = "uniform"):
     """Random bits -> uniform float32 in [0, 1).
 
-    ``rand_bits=32`` (default): ``bits`` is a full uint32 word; the top 24
-    bits give a uniform with float32-exact resolution — the legacy/oracle
-    derivation, bit-compatible with every pre-existing stream.
+    ``randomness="uniform"`` (SR/SRε/signed-SRε):
 
-    ``rand_bits∈{8, 16}`` (few-random-bits SR, Fitzgibbon & Felix 2025;
-    Xia et al. 2020): ``bits`` holds an ``rand_bits``-bit value in its low
-    bits and the uniform is ``(b + ½)·2^-r`` — the half-ulp offset centres
-    each probability cell, so the SR round-up probability becomes the
-    *nearest* r-bit quantization of ``frac`` and the residual bias is
-    bounded by ``2^-(r+1)`` ulp (vs ``2^-r`` for truncation).
+    * ``rand_bits=32`` (default): ``bits`` is a full uint32 word; the top
+      24 bits give a uniform with float32-exact resolution — the
+      legacy/oracle derivation, bit-compatible with every pre-existing
+      stream.
+    * ``rand_bits∈{8, 16}`` (few-random-bits SR, Fitzgibbon & Felix 2025;
+      Xia et al. 2020): ``bits`` holds an ``rand_bits``-bit value in its
+      low bits and the uniform is ``(b + ½)·2^-r`` — the half-ulp offset
+      centres each probability cell, so the SR round-up probability
+      becomes the *nearest* r-bit quantization of ``frac`` and the
+      residual bias is bounded by ``2^-(r+1)`` ulp (vs ``2^-r`` for
+      truncation).
+
+    ``randomness="comparison"`` (SR 2.0, arXiv 2410.10517): the single
+    comparison draw ``u = b·2^-r`` with **no** half-ulp centering —
+    ``P(round up) = ceil(frac·2^r)/2^r``, a one-sided away-from-zero
+    bias in ``[0, 2^-r)`` ulp.  For ``rand_bits=32`` this coincides with
+    the uniform top-24-bit derivation (which is already uncentered).
     """
     if rand_bits == 32:
         return (bits >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2.0 ** -24)
@@ -201,8 +203,10 @@ def _uniform_from_bits(bits, rand_bits: int = 32):
         raise ValueError(f"rand_bits must be one of {RAND_BITS_CHOICES}, "
                          f"got {rand_bits}")
     mask = jnp.uint32((1 << rand_bits) - 1)
-    return ((bits & mask).astype(jnp.float32) + jnp.float32(0.5)) \
-        * jnp.float32(2.0 ** -rand_bits)
+    low = (bits & mask).astype(jnp.float32)
+    if randomness == "comparison":
+        return low * jnp.float32(2.0 ** -rand_bits)
+    return (low + jnp.float32(0.5)) * jnp.float32(2.0 ** -rand_bits)
 
 
 def round_to_format(
@@ -221,8 +225,8 @@ def round_to_format(
 
     Args:
       x: input array (cast to float32).
-      fmt: FPFormat or name.
-      mode: one of ``ALL_MODES``.
+      fmt: Grid, FPFormat, or any grid name (``"binary8"``, ``"fxp16.8"``).
+      mode: a registered scheme name (``schemes.ALL_MODES``).
       key: PRNG key for stochastic modes (ignored if ``bits`` given).
       bits: uint32 array, same shape as x, of random bits (stochastic modes).
         With ``rand_bits < 32`` only the low ``rand_bits`` bits are consumed.
@@ -231,46 +235,49 @@ def round_to_format(
         component matching each x element).  ``sign(v)==0`` degrades to SR.
       overflow: "saturate" (clamp to ±xmax; default) or "inf".
       rand_bits: random bits consumed per element (32, 16 or 8); see
-        ``_uniform_from_bits`` for the few-random-bits SR semantics.
+        ``_uniform_from_bits`` for the few-random-bits SR / SR 2.0
+        comparison-draw semantics.
 
     Returns:
-      float32 array of values exactly representable in ``fmt``.
+      float32 array of values exactly representable on the grid.
     """
-    fmt = get_format(fmt)
-    if mode not in ALL_MODES:
-        raise ValueError(f"unknown rounding mode {mode!r}; known: {ALL_MODES}")
+    grid = get_grid(fmt)
+    scheme = get_scheme(mode)
+    fmt = grid.fmt
     x = jnp.asarray(x, jnp.float32)
 
-    if mode in STOCHASTIC_MODES:
+    if scheme.stochastic:
         if bits is None:
             if key is None:
                 raise ValueError(f"mode {mode!r} needs `key` or `bits`")
             bits = jax.random.bits(key, x.shape, jnp.uint32)
-        u = _uniform_from_bits(bits, rand_bits)
+        u = _uniform_from_bits(bits, rand_bits, scheme.randomness)
     else:
         u = jnp.full(x.shape, 0.5, jnp.float32)
 
-    if mode == "signed_sr_eps":
+    if scheme.needs_v:
         if v is None:
-            raise ValueError("signed_sr_eps requires the bias-direction `v`")
+            raise ValueError(f"{scheme.name} requires the bias-direction `v`")
         sign_v = jnp.sign(jnp.broadcast_to(jnp.asarray(v, jnp.float32), x.shape))
     else:
         sign_v = jnp.zeros_like(x)
 
+    # shifted grids: round (x − μ)/scale on the inner grid, map back below
+    z = grid.to_grid(x)
     # TPU/XLA-CPU FTZ: flush float32-subnormal inputs to signed zero.
-    x = jnp.where(jnp.abs(x) < jnp.float32(2.0 ** -126), x * 0.0, x)
+    z = jnp.where(jnp.abs(z) < jnp.float32(2.0 ** -126), z * 0.0, z)
 
-    floor_mag, _, frac, fy = magnitude_decompose(x, fmt)
+    floor_mag, _, frac, fy = magnitude_decompose(z, fmt)
     # ceil neighbour computed by exact scaling so it stays float32-normal
     # even where the grid spacing itself would be float32-subnormal.
-    ceil_mag = _ceil_from_decompose(x, fy, fmt)
-    sign_x = jnp.sign(x)
-    p_up = _p_round_up(mode, frac, fy, sign_x, jnp.float32(eps), sign_v)
+    ceil_mag = _ceil_from_decompose(z, fy, fmt)
+    sign_x = jnp.sign(z)
+    p_up = scheme.p_up(frac, fy, sign_x, jnp.float32(eps), sign_v)
 
     go_up = u < p_up
     mag = jnp.where(go_up, ceil_mag, floor_mag)
     # Exactly-representable input: both neighbours coincide with x.
-    mag = jnp.where(frac == 0.0, jnp.abs(x), mag)
+    mag = jnp.where(frac == 0.0, jnp.abs(z), mag)
 
     xmax = jnp.float32(fmt.xmax)
     if overflow == "saturate":
@@ -281,45 +288,45 @@ def round_to_format(
         raise ValueError(f"unknown overflow policy {overflow!r}")
 
     out = jnp.where(sign_x < 0, -mag, mag)  # preserves +0 for x == +0
-    out = jnp.where(jnp.signbit(x) & (x == 0), -jnp.float32(0.0), out)
+    out = jnp.where(jnp.signbit(z) & (z == 0), -jnp.float32(0.0), out)
+    out = grid.from_grid(out)
     # NaN / inf pass through.
     finite = jnp.isfinite(x)
     return jnp.where(finite, out, x)
 
 
 def floor_ceil(x, fmt) -> Tuple[jax.Array, jax.Array]:
-    """True directed floor/ceil (⌊x⌋, ⌈x⌉) on the format grid (paper §2.2)."""
-    fmt = get_format(fmt)
+    """True directed floor/ceil (⌊x⌋, ⌈x⌉) on the grid (paper §2.2)."""
     down = round_to_format(x, fmt, "rd")
     up = round_to_format(x, fmt, "ru")
     return down, up
 
 
 def ulp(x, fmt):
-    """Grid spacing ⌈x⌉-⌊x⌋ at x (quantum; 0 only for non-finite x)."""
-    fmt = get_format(fmt)
-    _, quantum, _, _ = magnitude_decompose(x, fmt)
-    return quantum
+    """Grid spacing ⌈x⌉-⌊x⌋ at x in carrier units (0 only for non-finite
+    x).  ``fmt`` may be any Grid/format/grid name — shifted grids scale
+    the inner quantum (the monitor's deadband predicate asks the grid)."""
+    return get_grid(fmt).ulp(x)
 
 
 def is_representable(x, fmt):
-    """Whether each element of x is exactly representable in fmt."""
-    fmt = get_format(fmt)
+    """Whether each element of x is exactly representable on the grid."""
+    grid = get_grid(fmt)
     x = jnp.asarray(x, jnp.float32)
-    _, _, frac, _ = magnitude_decompose(x, fmt)
-    in_range = jnp.abs(x) <= fmt.xmax
+    z = grid.to_grid(x)
+    _, _, frac, _ = magnitude_decompose(z, grid.fmt)
+    in_range = jnp.abs(z) <= grid.fmt.xmax
     return ((frac == 0.0) & in_range) | ~jnp.isfinite(x)
 
 
-def successor(x, fmt):
-    """su(x): smallest grid value strictly greater than x (paper eq. 10).
+def _successor_fmt(x, fmt: FPFormat):
+    """su(x) on an *untransformed* format grid (the engine primitive).
 
     For grid points the step up is: the local quantum when x >= 0 (the
     decomposition at ``|x| = 2**E`` already yields the *upper*-side spacing),
     and the *lower*-side spacing when x < 0 (half the quantum at binade
     boundaries above the subnormal range).
     """
-    fmt = get_format(fmt)
     x = jnp.asarray(x, jnp.float32)
     _, q, frac, fy = magnitude_decompose(x, fmt)
     e = _float_exponent(jnp.abs(x))
@@ -330,39 +337,65 @@ def successor(x, fmt):
     return jnp.where(jnp.isfinite(x), out, x)
 
 
+def successor(x, fmt):
+    """su(x): smallest grid value strictly greater than x (paper eq. 10)."""
+    grid = get_grid(fmt)
+    if not grid.transformed:
+        return _successor_fmt(x, grid.fmt)
+    return grid.from_grid(_successor_fmt(grid.to_grid(x), grid.fmt))
+
+
 def predecessor(x, fmt):
     """pr(x): largest grid value strictly smaller than x (paper eq. 10)."""
-    fmt = get_format(fmt)
+    grid = get_grid(fmt)
     x = jnp.asarray(x, jnp.float32)
-    return -successor(-x, fmt)
+    if not grid.transformed:
+        return -_successor_fmt(-x, grid.fmt)
+    return grid.from_grid(-_successor_fmt(-grid.to_grid(x), grid.fmt))
 
 
 # ---------------------------------------------------------------------------
-# RoundingSpec: a (format, mode, eps) bundle — the framework's config unit.
+# RoundingSpec: the (grid, scheme, params) bundle — the framework's config
+# unit.  One canonical string form (core/schemes.py grammar) serves every
+# registry: precision/policy, dist/codecs, optim/accumulate, health/watchdog
+# and the launch CLI.
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class RoundingSpec:
-    """A rounding policy: target format + scheme + ε + randomness budget.
+    """A rounding policy: grid + scheme + ε + randomness budget + overflow.
 
-    ``fmt`` may be None meaning "keep full precision" (identity), which is how
-    the fp32 baseline is expressed uniformly in the optimizer/trainer.
+    ``fmt`` holds the *grid name* (any `core.grids` name: an FP format,
+    an ``fxpW.F`` fixed-point grid, or a registered custom grid) — None
+    means "keep full precision" (identity), which is how the fp32
+    baseline is expressed uniformly in the optimizer/trainer.  ``mode``
+    holds the *scheme name* (`core.schemes` registry).  The resolved
+    objects are available as ``.grid`` / ``.scheme``.
 
-    ``rand_bits`` is the number of random bits a *stochastic* mode consumes
-    per rounded element (32 = the legacy full-word streams; 16/8 = the
-    few-random-bits SR regime — the PRNG kernels then draw 2×/4× fewer PRF
-    words per output tile, at a residual bias ≤ ``2^-(rand_bits+1)`` ulp).
-    Deterministic modes ignore it.
+    ``rand_bits`` is the number of random bits a *stochastic* scheme
+    consumes per rounded element (32 = the legacy full-word streams; 16/8
+    = the few-random-bits SR regime — the PRNG kernels then draw 2×/4×
+    fewer PRF words per output tile, at a residual bias ≤
+    ``2^-(rand_bits+1)`` ulp centered, ``< 2^-rand_bits`` one-sided for
+    SR 2.0's comparison draw).  Deterministic schemes ignore it.
+
+    ``overflow``: "saturate" (clamp to ±xmax, the default) or "inf"
+    (overflow to ±inf — the IEEE-style diagnosing variant).
     """
 
     fmt: Optional[str] = None
     mode: str = "rn"
     eps: float = 0.0
     rand_bits: int = 32
+    overflow: str = "saturate"
 
     def __post_init__(self):
         if self.rand_bits not in RAND_BITS_CHOICES:
             raise ValueError(f"rand_bits must be one of {RAND_BITS_CHOICES}, "
                              f"got {self.rand_bits}")
+        if self.overflow not in ("saturate", "inf"):
+            raise ValueError(f"overflow must be 'saturate' or 'inf', "
+                             f"got {self.overflow!r}")
+        get_scheme(self.mode)    # raise early on unknown scheme names
 
     @property
     def is_identity(self) -> bool:
@@ -370,23 +403,50 @@ class RoundingSpec:
 
     @property
     def stochastic(self) -> bool:
-        return (not self.is_identity) and self.mode in STOCHASTIC_MODES
+        return (not self.is_identity) and get_scheme(self.mode).stochastic
+
+    @property
+    def grid(self) -> Optional[Grid]:
+        return None if self.fmt is None else get_grid(self.fmt)
+
+    @property
+    def scheme(self) -> RoundingScheme:
+        return get_scheme(self.mode)
 
     def format(self) -> Optional[FPFormat]:
-        return None if self.fmt is None else get_format(self.fmt)
+        """The grid's engine descriptor (an FPFormat, degenerate for fxp)."""
+        return None if self.fmt is None else get_grid(self.fmt).fmt
+
+    def __str__(self) -> str:
+        return _schemes.format_spec_name(
+            None if self.fmt is None else get_grid(self.fmt).name,
+            self.scheme.name, self.eps, self.rand_bits, self.overflow)
 
     def __call__(self, x, *, key=None, bits=None, v=None):
         if self.is_identity:
             return jnp.asarray(x, jnp.float32)
         return round_to_format(
             x, self.fmt, self.mode, key=key, bits=bits, eps=self.eps, v=v,
-            rand_bits=self.rand_bits)
+            rand_bits=self.rand_bits, overflow=self.overflow)
 
 
 IDENTITY = RoundingSpec(None)
 
 
-def spec(fmt=None, mode="rn", eps=0.0, rand_bits: int = 32) -> RoundingSpec:
-    """Convenience constructor."""
-    return RoundingSpec(None if fmt is None else get_format(fmt).name, mode,
-                        eps, rand_bits)
+def spec(fmt=None, mode="rn", eps=0.0, rand_bits: int = 32,
+         overflow: str = "saturate") -> RoundingSpec:
+    """Convenience constructor (grid/scheme names canonicalized)."""
+    return RoundingSpec(None if fmt is None else get_grid(fmt).name,
+                        get_scheme(mode).name, eps, rand_bits, overflow)
+
+
+def parse_spec(name: str) -> RoundingSpec:
+    """Canonical name -> RoundingSpec (``parse_spec(str(s)) == s``).
+
+    The single string grammar every registry consumes — see
+    `core/schemes.py`: ``"binary8-sr"``, ``"fxp16.8-sr2"``,
+    ``"bf16-ssr-e0.4"``, ``"e4m3-sr-r8"``, ``"binary8-rn-inf"``,
+    ``"fp32"``.
+    """
+    p = _schemes.parse_spec_name(name)
+    return RoundingSpec(p.grid, p.scheme, p.eps, p.rand_bits, p.overflow)

@@ -1,0 +1,268 @@
+"""Rounding-scheme registry + the canonical RoundingSpec name grammar.
+
+The paper's central object — a rounding scheme defined by its round-up
+probability on a grid — is first-class here: a :class:`RoundingScheme`
+declares its
+
+* ``p_up(frac, fy, sign_x, eps, sign_v)`` rule — the probability of
+  rounding the magnitude away from zero, the unified rule every scheme
+  in the paper (and the follow-up papers) reduces to;
+* **randomness budget** — ``"none"`` (deterministic), ``"uniform"``
+  (a uniform draw ``u`` compared against ``p_up``; SR/SRε/signed-SRε),
+  or ``"comparison"`` (SR 2.0, arXiv 2410.10517: a *single* ``r``-bit
+  comparison draw ``u = b·2^-r`` with no half-ulp centering — cheaper
+  than centered few-random-bits SR and biased *away from zero* by at
+  most ``2^-r`` ulp instead of ``2^-(r+1)`` toward nearest);
+* theoretical **bias bound** per rounded element (documentation string,
+  asserted by the CLT tests in tests/test_new_schemes.py).
+
+Everything importable here is jax-free at module import time (``jnp`` is
+imported lazily inside the ``p_up`` bodies), so pure-policy consumers —
+`health/watchdog`'s import-time ladder validation — can parse and
+validate spec names without dragging in jax.
+
+Canonical spec names
+--------------------
+
+One string grammar serves `precision/policy`, `dist/codecs`,
+`optim/accumulate`, `health/watchdog` and the launch CLI::
+
+    <grid>-<scheme>[-e<eps>][-r<rand_bits>][-inf]
+
+    "binary8-sr"        SR on the binary8 (E5M2) grid
+    "bf16-ssr-e0.4"     signed-SRε, ε=0.4, on bfloat16
+    "fxp16.8-sr2"       SR 2.0 on the 16.8 fixed-point grid
+    "e4m3-sr-r8"        few-random-bits SR, 8 bits/element
+    "binary8-rn-inf"    RN with overflow to ±inf instead of saturation
+
+``"fp32"``/``"none"`` name the identity (no rounding).  Suffix defaults
+come from the scheme (``sr_eps``/``ssr`` default to the paper's ε=0.1;
+``sr2`` defaults to its single 8-bit comparison draw), so every legacy
+name — wire codecs' ``"bf16-ssr"``, accumulate's ``"bf16-sr"`` — parses
+to the exact spec its private table used to build.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
+
+from repro.core import grids as _grids
+
+RAND_BITS_CHOICES = (8, 16, 32)
+
+
+# --------------------------------------------------------------- schemes --
+@dataclasses.dataclass(frozen=True)
+class RoundingScheme:
+    """One rounding scheme: the unified magnitude rule + its randomness.
+
+    ``p_up(frac, fy, sign_x, eps, sign_v)`` operates on the grid
+    decomposition (`grids.Grid.decompose`): ``frac`` ∈ [0, 1) is the
+    fractional position between grid neighbours, ``fy`` the integer floor
+    significand (for ties-to-even parity), ``sign_x`` the sign of the
+    value *in grid domain*, ``sign_v`` the sign of the bias-direction
+    operand (signed-SRε only).
+    """
+
+    name: str
+    randomness: str                  # "none" | "uniform" | "comparison"
+    p_up: Callable
+    needs_v: bool = False
+    default_eps: float = 0.0
+    default_rand_bits: int = 32
+    bias_bound: str = "0"
+
+    @property
+    def stochastic(self) -> bool:
+        return self.randomness != "none"
+
+    @property
+    def p_up_is_frac(self) -> bool:
+        """Whether ``p_up == frac`` identically (SR / SR 2.0) — enables
+        the kernels' pure-SR fast path (the frac==0 fix-up is a no-op)."""
+        return self.name in ("sr", "sr2")
+
+
+def _p_sr(frac, fy, sign_x, eps, sign_v):
+    return frac
+
+
+def _p_sr_eps(frac, fy, sign_x, eps, sign_v):
+    import jax.numpy as jnp
+    return jnp.minimum(frac + eps, 1.0)
+
+
+def _p_signed_sr_eps(frac, fy, sign_x, eps, sign_v):
+    import jax.numpy as jnp
+    return jnp.clip(frac - sign_x * sign_v * eps, 0.0, 1.0)
+
+
+def _p_rn(frac, fy, sign_x, eps, sign_v):
+    import jax.numpy as jnp
+    fy_odd = (fy.astype(jnp.int32) & 1).astype(frac.dtype)
+    return jnp.where(frac > 0.5, 1.0, jnp.where(frac < 0.5, 0.0, fy_odd))
+
+
+def _p_rz(frac, fy, sign_x, eps, sign_v):
+    import jax.numpy as jnp
+    return jnp.zeros_like(frac)
+
+
+def _p_ra(frac, fy, sign_x, eps, sign_v):
+    import jax.numpy as jnp
+    return jnp.ones_like(frac)
+
+
+def _p_rd(frac, fy, sign_x, eps, sign_v):   # toward -inf
+    import jax.numpy as jnp
+    return jnp.where(sign_x < 0, 1.0, 0.0).astype(frac.dtype)
+
+
+def _p_ru(frac, fy, sign_x, eps, sign_v):   # toward +inf
+    import jax.numpy as jnp
+    return jnp.where(sign_x > 0, 1.0, 0.0).astype(frac.dtype)
+
+
+_SCHEMES: Dict[str, RoundingScheme] = {}
+_ALIASES: Dict[str, str] = {"ssr": "signed_sr_eps"}
+
+
+def register_scheme(s: RoundingScheme) -> None:
+    _SCHEMES[s.name] = s
+
+
+def get_scheme(name_or_scheme) -> RoundingScheme:
+    """Resolve a scheme by name/alias (or pass through a RoundingScheme)."""
+    if isinstance(name_or_scheme, RoundingScheme):
+        return name_or_scheme
+    name = _ALIASES.get(str(name_or_scheme), str(name_or_scheme))
+    try:
+        return _SCHEMES[name]
+    except KeyError as exc:
+        raise ValueError(f"unknown rounding scheme {name_or_scheme!r}; "
+                         f"known: {scheme_names()}") from exc
+
+
+def scheme_names() -> Tuple[str, ...]:
+    return tuple(sorted(_SCHEMES))
+
+
+for _s in (
+    RoundingScheme("rn", "none", _p_rn,
+                   bias_bound="0 (ties-to-even); deadbands below ulp/2"),
+    RoundingScheme("rz", "none", _p_rz, bias_bound="-sign(x)·ulp"),
+    RoundingScheme("ra", "none", _p_ra, bias_bound="+sign(x)·ulp"),
+    RoundingScheme("rd", "none", _p_rd, bias_bound="-ulp"),
+    RoundingScheme("ru", "none", _p_ru, bias_bound="+ulp"),
+    RoundingScheme("sr", "uniform", _p_sr,
+                   bias_bound="0 (Def. 1, eq. 3); ≤ 2^-(r+1)·ulp with an "
+                              "r-bit centered draw"),
+    RoundingScheme("sr_eps", "uniform", _p_sr_eps, default_eps=0.1,
+                   bias_bound="sign(x)·ε·ulp (Def. 2)"),
+    RoundingScheme("signed_sr_eps", "uniform", _p_signed_sr_eps,
+                   needs_v=True, default_eps=0.1,
+                   bias_bound="-sign(v)·ε·ulp (Def. 3, a descent direction)"),
+    # SR 2.0 (arXiv 2410.10517): p_up == frac like SR, but the draw is a
+    # single r-bit comparison u = b·2^-r with NO half-ulp centering —
+    # P(round up) = ceil(frac·2^r)/2^r ≥ frac, so the residual bias is in
+    # [0, 2^-r)·ulp *away from zero* (one-sided), vs the centered r-bit
+    # draw's two-sided ≤ 2^-(r+1)·ulp.  Cheapest stochastic scheme: one
+    # comparison, r=8 default → 1/4 of the PRF traffic of 32-bit SR.
+    RoundingScheme("sr2", "comparison", _p_sr, default_rand_bits=8,
+                   bias_bound="[0, 2^-r)·ulp away from zero (one-sided)"),
+):
+    register_scheme(_s)
+
+
+DETERMINISTIC_MODES = tuple(n for n in ("rn", "rz", "ra", "rd", "ru")
+                            if n in _SCHEMES)
+STOCHASTIC_MODES = tuple(n for n, s in sorted(_SCHEMES.items())
+                         if s.stochastic)
+ALL_MODES = DETERMINISTIC_MODES + STOCHASTIC_MODES
+
+
+# ---------------------------------------------------------------- parser --
+class ParsedSpec(NamedTuple):
+    """The jax-free result of :func:`parse_spec_name`.
+
+    ``grid`` is the *canonical* grid name (None = identity) — resolve to
+    a live object with ``grids.get_grid``; ``scheme`` the canonical
+    scheme name.  `repro.core.rounding.parse_spec` lifts this to a
+    :class:`~repro.core.rounding.RoundingSpec`.
+    """
+
+    grid: Optional[str]
+    scheme: str = "rn"
+    eps: float = 0.0
+    rand_bits: int = 32
+    overflow: str = "saturate"
+
+    @property
+    def is_identity(self) -> bool:
+        return self.grid is None
+
+
+IDENTITY_NAMES = ("fp32", "none")
+
+_EPS_RE = re.compile(r"^e(\d+(?:\.\d+)?)$")
+_RBITS_RE = re.compile(r"^r(\d+)$")
+
+
+def parse_spec_name(name: str) -> ParsedSpec:
+    """Parse one canonical ``<grid>-<scheme>[-e..][-r..][-inf]`` name."""
+    if not isinstance(name, str) or not name:
+        raise ValueError(f"spec name must be a non-empty string, got {name!r}")
+    if name in IDENTITY_NAMES:
+        return ParsedSpec(None)
+    tokens = name.split("-")
+    if len(tokens) < 2:
+        raise ValueError(
+            f"bad spec name {name!r}: expected '<grid>-<scheme>[-e<eps>]"
+            f"[-r<bits>][-inf]' (or {'/'.join(IDENTITY_NAMES)})")
+    grid = _grids.get_grid(tokens[0]).name
+    scheme = get_scheme(tokens[1])
+    eps, rand_bits, overflow = scheme.default_eps, scheme.default_rand_bits, \
+        "saturate"
+    for tok in tokens[2:]:
+        m = _EPS_RE.match(tok)
+        if m:
+            eps = float(m.group(1))
+            continue
+        m = _RBITS_RE.match(tok)
+        if m:
+            rand_bits = int(m.group(1))
+            if rand_bits not in RAND_BITS_CHOICES:
+                raise ValueError(f"{name!r}: rand_bits must be one of "
+                                 f"{RAND_BITS_CHOICES}")
+            continue
+        if tok == "inf":
+            overflow = "inf"
+            continue
+        raise ValueError(f"bad spec-name token {tok!r} in {name!r} "
+                         "(expected e<eps>, r<bits> or inf)")
+    return ParsedSpec(grid, scheme.name, eps, rand_bits, overflow)
+
+
+def format_spec_name(grid: Optional[str], scheme: str = "rn",
+                     eps: float = 0.0, rand_bits: int = 32,
+                     overflow: str = "saturate") -> str:
+    """Inverse of :func:`parse_spec_name` (canonical form; defaults
+    elided so ``parse(format(...)) == parse(name)`` round-trips)."""
+    if grid is None:
+        return "fp32"
+    s = get_scheme(scheme)
+    out = f"{_grids.get_grid(grid).name}-{s.name}"
+    if eps != s.default_eps:
+        out += f"-e{eps:g}"
+    if rand_bits != s.default_rand_bits:
+        out += f"-r{rand_bits}"
+    if overflow == "inf":
+        out += "-inf"
+    return out
+
+
+def validate_spec_name(name: str) -> ParsedSpec:
+    """Parse-or-raise, for import-time validation of name tables
+    (`health/watchdog`'s precision ladder)."""
+    return parse_spec_name(name)

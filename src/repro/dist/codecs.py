@@ -39,8 +39,9 @@ from typing import Optional, Union
 import jax
 import jax.numpy as jnp
 
+from repro.core import schemes as _schemes
 from repro.core.rounding import (RoundingSpec, _p_round_up,
-                                 _uniform_from_bits, spec as rspec)
+                                 _uniform_from_bits, get_scheme, parse_spec)
 
 _WIRE_SALT = 0x77697265          # "wire": context salt for derive_seed
 _STAGE_STREAM = 0x5A17           # fold distance between wire stages
@@ -64,7 +65,9 @@ class WireCodec:
 
     @property
     def stochastic(self) -> bool:
-        return self.spec.mode in ("sr", "sr_eps", "signed_sr_eps")
+        # via the scheme registry, not spec.stochastic: the int8 codec's
+        # spec has fmt=None (identity grid) but its scheme still draws
+        return get_scheme(self.spec.mode).stochastic
 
     @property
     def bytes_per_elt(self) -> float:
@@ -85,7 +88,7 @@ class WireCodec:
         g = jnp.asarray(g, jnp.float32)
         if self.kind == "float":
             # signed-SRε bias direction: the payload *is* the gradient
-            v = g if self.spec.mode == "signed_sr_eps" else None
+            v = g if self.spec.scheme.needs_v else None
             return self.spec(g, bits=bits, v=v)
         # int8 block codec: absmax/127 scale, rounded integer grid.
         scale = jnp.max(jnp.abs(g)) / jnp.float32(127.0)
@@ -99,7 +102,8 @@ class WireCodec:
         if bits is None:
             u = jnp.full(g.shape, 0.5, jnp.float32)
         else:
-            u = _uniform_from_bits(bits, self.spec.rand_bits)
+            u = _uniform_from_bits(bits, self.spec.rand_bits,
+                                   get_scheme(self.spec.mode).randomness)
         sign = jnp.sign(y)
         # signed-SRε on the wire: the payload *is* the gradient, so the
         # bias direction v == g and sign(x)·sign(v) == 1 for every nonzero
@@ -112,39 +116,56 @@ class WireCodec:
 
 
 # ---------------------------------------------------------------------------
-# Registry.  Names: "<carrier>-<scheme>" with carrier in {int8, bf16, fp16,
-# e4m3, binary8} and scheme in {rn, sr, sr_eps, ssr}; "fp32"/"none" = no
-# quantization.  SRε/signed-SRε use the paper's ε = 0.1.
+# Names.  The canonical RoundingSpec grammar (core/schemes.py) names every
+# float-grid codec — "bf16-ssr", "binary8-sr", "fxp16.8-sr2", "e4m3-sr-r8"
+# — with grid aliases (bf16, fp16) resolved by the grids registry and
+# suffix defaults (SRε/signed-SRε ε = 0.1, sr2 r = 8) by the scheme
+# registry, exactly the values the historical private table hardcoded.
+# "int8-<scheme>[-e..][-r..]" keeps the absmax-scaled integer block codec:
+# the tail is parsed by the same grammar, the grid token is the int8
+# scale grid.  "fp32"/"none" = no quantization.
 # ---------------------------------------------------------------------------
-_CARRIERS = {"int8": None, "bf16": "bfloat16", "fp16": "binary16",
-             "e4m3": "e4m3", "binary8": "binary8"}
-_SCHEMES = {"rn": ("rn", 0.0), "sr": ("sr", 0.0),
-            "sr_eps": ("sr_eps", 0.1), "ssr": ("signed_sr_eps", 0.1)}
-_IDENTITY_NAMES = (None, "fp32", "none")
+_LEGACY_CARRIERS = ("bf16", "binary8", "e4m3", "fp16", "int8")
+_LEGACY_SCHEMES = ("rn", "sr", "sr_eps", "ssr")
 
 
 def wire_codec_names():
-    """Every registered codec name (the CLI choices)."""
-    return sorted(f"{c}-{s}" for c in _CARRIERS for s in _SCHEMES) + ["fp32"]
+    """The historically-named codecs (the CLI menu).  ``get_wire_codec``
+    additionally accepts *any* canonical spec name — ``"fxp16.8-sr2"``,
+    ``"binary8-sr2"``, ``"bf16-sr-r8"``, ..."""
+    return sorted(f"{c}-{s}" for c in _LEGACY_CARRIERS
+                  for s in _LEGACY_SCHEMES) + ["fp32"]
 
 
 def get_wire_codec(
         codec: Union[None, str, WireCodec]) -> Optional[WireCodec]:
-    """None | name | WireCodec -> Optional[WireCodec] (None = fp32 wire)."""
+    """None | name | WireCodec -> Optional[WireCodec] (None = fp32 wire).
+
+    Names are parsed by the canonical parser (one grammar for policies,
+    codecs, accumulators and the watchdog ladder); every historical name
+    resolves to the exact spec its private table used to build.
+    """
     if codec is None or isinstance(codec, WireCodec):
         return codec
-    if codec in _IDENTITY_NAMES:
+    name = str(codec)
+    if name in _schemes.IDENTITY_NAMES:
         return None
-    parts = codec.split("-", 1)
-    if len(parts) == 2 and parts[0] in _CARRIERS and parts[1] in _SCHEMES:
-        carrier, (mode, eps) = parts[0], _SCHEMES[parts[1]]
-        fmt = _CARRIERS[carrier]
-        if fmt is None:
-            return WireCodec(codec, "int8",
-                             RoundingSpec(None, mode, eps))
-        return WireCodec(codec, "float", rspec(fmt, mode, eps))
-    raise ValueError(
-        f"unknown wire codec {codec!r}; known: {wire_codec_names()}")
+    try:
+        if name.startswith("int8-"):
+            # int8 has no float grid: parse the scheme tail against a
+            # placeholder grid, keep only the scheme parameters
+            p = _schemes.parse_spec_name("binary8" + name[len("int8"):])
+            return WireCodec(name, "int8",
+                             RoundingSpec(None, p.scheme, p.eps, p.rand_bits))
+        sp = parse_spec(name)
+    except ValueError as exc:
+        raise ValueError(
+            f"unknown wire codec {codec!r}; named codecs: "
+            f"{wire_codec_names()} (any canonical spec name also "
+            "works, e.g. 'fxp16.8-sr2')") from exc
+    if sp.is_identity:
+        return None
+    return WireCodec(name, "float", sp)
 
 
 # ---------------------------------------------------------------------------

@@ -22,8 +22,8 @@ from repro.health.monitor import (HealthConfig, HealthState,
                                   update_health)
 from repro.health.watchdog import (DEFAULT_LADDER, Escalate, LEVELS,
                                    PrecisionLevel, Rollback, Watchdog,
-                                   WatchdogConfig, initial_level,
-                                   rounding_for_level)
+                                   WatchdogConfig, get_level, initial_level,
+                                   rounding_for_level, validate_ladder)
 from repro.health.inject import (FaultEvent, FaultInjector,
                                  corrupt_checkpoint, flip_bit,
                                  parse_fault_schedule)
@@ -32,7 +32,8 @@ __all__ = [
     "HealthConfig", "HealthState", "health_metrics", "init_health_state",
     "observe_health", "resolve_health", "update_health",
     "DEFAULT_LADDER", "Escalate", "LEVELS", "PrecisionLevel", "Rollback",
-    "Watchdog", "WatchdogConfig", "initial_level", "rounding_for_level",
+    "Watchdog", "WatchdogConfig", "get_level", "initial_level",
+    "rounding_for_level", "validate_ladder",
     "FaultEvent", "FaultInjector", "corrupt_checkpoint", "flip_bit",
     "parse_fault_schedule",
 ]

@@ -33,18 +33,19 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import rounding
-from repro.core.formats import FPFormat, get_format
+from repro.core.formats import FPFormat
+from repro.core.grids import Grid, get_grid
 
 
 @dataclasses.dataclass(frozen=True)
 class HealthConfig:
     """Telemetry configuration.
 
-    ``fmt`` is the low-precision format whose grid the deadband /
-    saturation / underflow accounting runs against — normally the format
-    of the active rounding policy (the grid updates are actually rounded
-    onto).  The thresholds feed the in-carry streak counters; the
+    ``fmt`` names the low-precision *grid* the deadband / saturation /
+    underflow accounting runs against — normally the grid of the active
+    rounding policy (the one updates are actually rounded onto); any
+    registered grid works (``"binary8"``, ``"fxp16.8"``, a shifted
+    grid's name).  The thresholds feed the in-carry streak counters; the
     watchdog applies its own (host-side) thresholds on the raw fractions,
     so these only control what ``HealthState`` considers "a bad step".
     """
@@ -53,17 +54,20 @@ class HealthConfig:
     deadband_threshold: float = 0.9
     overflow_threshold: float = 0.0
 
+    def grid(self) -> Grid:
+        return get_grid(self.fmt)
+
     def format(self) -> FPFormat:
-        return get_format(self.fmt)
+        return get_grid(self.fmt).fmt
 
 
 def resolve_health(h: Any) -> Optional[HealthConfig]:
-    """None | format name | HealthConfig -> Optional[HealthConfig]."""
+    """None | grid name | HealthConfig -> Optional[HealthConfig]."""
     if h is None:
         return None
     if isinstance(h, HealthConfig):
         return h
-    return HealthConfig(fmt=get_format(h).name)
+    return HealthConfig(fmt=get_grid(h).name)
 
 
 class HealthState(NamedTuple):
@@ -96,10 +100,10 @@ def health_metrics(params, grads, lr, cfg: HealthConfig) -> Dict[str, Any]:
     scalars, all prefixed ``h_`` so they ride the train step's metrics
     dict into `TrainLoop` history without clashing with model metrics.
     """
-    fmt = cfg.format()
+    grid = cfg.grid()
     t = jnp.float32(lr)
-    xmax = jnp.float32(fmt.xmax)
-    xmin = jnp.float32(fmt.xmin_sub)
+    xmax = jnp.float32(grid.xmax)
+    xmin = jnp.float32(grid.xmin_sub)
     total = 0
     dead = jnp.float32(0.0)
     sat = jnp.float32(0.0)
@@ -118,9 +122,12 @@ def health_metrics(params, grads, lr, cfg: HealthConfig) -> Dict[str, Any]:
         # counters (separate jnp.sum calls each cost a full memory pass on
         # CPU — measured 4.5x slower than this fused reduction):
         # deadband: |t·ĝ| below half the parameter's grid spacing — RN of
-        # (x − t·ĝ) returns x (up to the ties-to-even boundary case)
+        # (x − t·ĝ) returns x (up to the ties-to-even boundary case).
+        # The spacing comes from the grid (``Grid.ulp``), so fixed-point
+        # and shifted grids deadband correctly too (uniform quantum /
+        # carrier-scaled quantum), not just FP formats.
         d, s, u, q, nf = lax.reduce(
-            ((t * ag < 0.5 * rounding.ulp(p32, fmt)).astype(jnp.float32),
+            ((t * ag < 0.5 * grid.ulp(p32)).astype(jnp.float32),
              (ag >= xmax).astype(jnp.float32),
              ((ag > 0) & (ag < xmin)).astype(jnp.float32),
              g_fin * g_fin,

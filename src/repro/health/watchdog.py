@@ -33,65 +33,99 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
 
-from repro.core.formats import get_format
+from repro.core import grids as _grids
+from repro.core import schemes as _schemes
 
 
 # --------------------------------------------------------------- ladder --
 class PrecisionLevel(NamedTuple):
-    """One rung: the update-path format/scheme + the GEMM policy preset."""
+    """One rung: the update-path grid/scheme + the GEMM policy name.
+
+    Built from the rung's canonical spec name by :func:`get_level` — the
+    name itself doubles as the GEMM policy (every rung name is either a
+    ``precision.policy`` preset or parsed by ``get_policy``'s canonical
+    fallback).
+    """
 
     name: str
-    fmt: Optional[str]        # None = full precision
-    scheme: Optional[str]     # "rn" | "sr" | None (fp32)
+    fmt: Optional[str]        # canonical grid name; None = full precision
+    scheme: Optional[str]     # canonical scheme name; None (fp32)
     gemm_policy: Optional[str]
+    eps: float = 0.0
+    rand_bits: int = 32
 
 
 DEFAULT_LADDER: Tuple[str, ...] = (
     "binary8-rn", "binary8-sr", "e4m3-sr", "bf16-sr", "fp32")
 
-LEVELS: Dict[str, PrecisionLevel] = {
-    "binary8-rn": PrecisionLevel("binary8-rn", "binary8", "rn",
-                                 "binary8-rn"),
-    "binary8-sr": PrecisionLevel("binary8-sr", "binary8", "sr",
-                                 "binary8-sr"),
-    "e4m3-sr": PrecisionLevel("e4m3-sr", "e4m3", "sr", "e4m3-sr"),
-    "bf16-sr": PrecisionLevel("bf16-sr", "bfloat16", "sr", "bf16-sr"),
-    "fp32": PrecisionLevel("fp32", None, None, "fp32"),
-}
 
-# canonical format name -> the short name the ladder levels use
-_FMT_SHORT = {"binary8": "binary8", "e4m3": "e4m3", "bfloat16": "bf16",
-              "binary16": "bf16", "binary32": "fp32"}
+def _level_from_name(name: str) -> PrecisionLevel:
+    """Parse one rung name with the canonical parser (raises on bad
+    names — this is the registry validation, jax-free)."""
+    p = _schemes.validate_spec_name(name)
+    if p.is_identity:
+        return PrecisionLevel(name, None, None, "fp32")
+    return PrecisionLevel(name, p.grid, p.scheme, name, p.eps, p.rand_bits)
+
+
+def validate_ladder(
+        ladder: Tuple[str, ...]) -> Tuple[PrecisionLevel, ...]:
+    """Parse-or-raise every rung of a ladder; returns the levels."""
+    return tuple(_level_from_name(n) for n in ladder)
+
+
+# the default ladder is validated at import time against the scheme/grid
+# registries (schemes/grids import no jax at module scope, so this costs
+# nothing for pure-policy consumers)
+LEVELS: Dict[str, PrecisionLevel] = {
+    lvl.name: lvl for lvl in validate_ladder(DEFAULT_LADDER)}
+
+
+def get_level(name: str) -> PrecisionLevel:
+    """Ladder rung by canonical spec name (any registered grid/scheme)."""
+    hit = LEVELS.get(name)
+    return hit if hit is not None else _level_from_name(name)
 
 
 def initial_level(fmt, rounding_kind: str,
                   ladder: Tuple[str, ...] = DEFAULT_LADDER) -> str:
     """Best-matching ladder rung for a run's starting (fmt, scheme).
 
-    ``rounding_kind`` is the trainer's scheme name ("rn", "sr",
-    "sr_eps", "signed_sr_eps", "fp32"); anything stochastic maps to the
-    "-sr" rung.  Falls back to the bottom rung when nothing matches (the
-    watchdog can then only escalate upward, which is safe).
+    ``rounding_kind`` is the trainer's scheme name ("rn", "sr", "sr2",
+    "sr_eps", "signed_sr_eps", "fp32"); the match is on (canonical grid,
+    scheme stochasticity), so anything stochastic maps to the rung with a
+    stochastic scheme on the same grid.  Falls back to the bottom rung
+    when nothing matches (the watchdog can then only escalate upward,
+    which is safe).
     """
-    if rounding_kind == "fp32":
+    if rounding_kind in _schemes.IDENTITY_NAMES:
         return "fp32" if "fp32" in ladder else ladder[-1]
-    short = _FMT_SHORT.get(get_format(fmt).name)
-    suffix = "rn" if rounding_kind == "rn" else "sr"
-    name = "fp32" if short == "fp32" else f"{short}-{suffix}"
-    if name in ladder:
-        return name
+    grid = _grids.get_grid(fmt).name
+    stoch = _schemes.get_scheme(rounding_kind).stochastic
+    for name in ladder:
+        lvl = get_level(name)
+        if lvl.fmt is None:
+            if grid == "binary32":
+                return name
+            continue
+        if (lvl.fmt == grid
+                and _schemes.get_scheme(lvl.scheme).stochastic == stoch):
+            return name
     return ladder[0]
 
 
 def rounding_for_level(level: str):
     """The GDRounding config of a ladder rung (for the trainer rebuild)."""
     from repro.core import gd     # lazy: keep jax out of pure-policy use
-    lvl = LEVELS[level]
+    lvl = get_level(level)
     if lvl.fmt is None:
         return gd.GDRounding()
-    if lvl.scheme == "rn":
-        return gd.make_config(lvl.fmt, "rn", "rn", "rn")
-    return gd.make_config(lvl.fmt, "rn", "sr", "sr")
+    if not _schemes.get_scheme(lvl.scheme).stochastic:
+        return gd.make_config(lvl.fmt, lvl.scheme, lvl.scheme, lvl.scheme)
+    # stochastic rungs keep the residual (8a) step deterministic and put
+    # the scheme on the mul/sub sites — the paper's §5 regime
+    return gd.make_config(lvl.fmt, "rn", lvl.scheme, lvl.scheme,
+                          eps_8b=lvl.eps, eps_8c=lvl.eps)
 
 
 # -------------------------------------------------------------- actions --
@@ -130,6 +164,7 @@ class Watchdog:
                  level: Optional[str] = None,
                  rebuild: Optional[Callable[[str], Any]] = None):
         self.config = config or WatchdogConfig()
+        validate_ladder(self.config.ladder)
         self.level = level or self.config.ladder[0]
         self.rebuild = rebuild
         self.events: List[Dict[str, Any]] = []

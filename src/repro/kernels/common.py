@@ -31,52 +31,69 @@ import jax.numpy as jnp
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.formats import FPFormat, get_format
+from repro.core.grids import Grid, get_grid
 from repro.core.rounding import (RoundingSpec, _ceil_from_decompose,
-                                 _exact_scale, _float_exponent, _p_round_up,
-                                 _uniform_from_bits, magnitude_decompose)
+                                 _exact_scale, _float_exponent,
+                                 _uniform_from_bits, get_scheme,
+                                 magnitude_decompose)
 
 
-def round_block(x, bits, fmt: FPFormat, mode: str, eps: float, v=None,
-                rand_bits: int = 32):
+def round_block(x, bits, fmt, mode, eps: float, v=None,
+                rand_bits: int = 32, overflow: str = "saturate"):
     """Round one block of float32 values; identical math to round_to_format.
 
-    ``bits`` may be None for deterministic modes.  ``v`` is the bias
-    direction for signed-SRε.  Saturating overflow policy.  With
-    ``rand_bits < 32`` the low ``rand_bits`` bits of each word are consumed
-    (few-random-bits SR; see rounding._uniform_from_bits).
+    ``fmt`` is a Grid, FPFormat or grid name; ``mode`` a scheme name (or
+    RoundingScheme) — the kernel body emits the scheme's ``p_up`` rule on
+    the grid decomposition, so any registered scheme × grid pair (SR 2.0,
+    fixed-point, shifted grids) works in-kernel.  ``bits`` may be None for
+    deterministic schemes.  ``v`` is the bias direction for signed-SRε.
+    With ``rand_bits < 32`` the low ``rand_bits`` bits of each word are
+    consumed (few-random-bits SR / SR 2.0's single comparison draw; see
+    rounding._uniform_from_bits).
     """
+    grid = get_grid(fmt)
+    scheme = get_scheme(mode)
+    fmt = grid.fmt
     x = x.astype(jnp.float32)
-    x = jnp.where(jnp.abs(x) < jnp.float32(2.0 ** -126), x * 0.0, x)
+    z = grid.to_grid(x)
+    z = jnp.where(jnp.abs(z) < jnp.float32(2.0 ** -126), z * 0.0, z)
 
-    floor_mag, quantum, frac, fy = magnitude_decompose(x, fmt)
-    sign_x = jnp.sign(x)
+    floor_mag, quantum, frac, fy = magnitude_decompose(z, fmt)
+    sign_x = jnp.sign(z)
 
     if bits is None:
         u = jnp.full(x.shape, 0.5, jnp.float32)
     else:
-        u = _uniform_from_bits(bits, rand_bits)
+        u = _uniform_from_bits(bits, rand_bits, scheme.randomness)
 
-    if mode == "sr" and fmt.quantum_min_exp >= -126:
-        # pure-SR fast path (the GEMM-epilogue hot case): the ceil
-        # neighbour is floor_mag + quantum — exact, because both are
-        # multiples of the same power of two and fy+1 <= 2^precision —
-        # and p_up == frac makes the frac == 0 fix-up a no-op (u >= 0
-        # never rounds up).  Bit-identical to the generic path below;
-        # restricted to formats whose quantum stays f32-normal
-        # (bfloat16's subnormal-range quantum would flush to zero).
+    if scheme.p_up_is_frac and fmt.quantum_min_exp >= -126:
+        # pure-SR fast path (the GEMM-epilogue hot case), valid for every
+        # scheme with p_up == frac (SR and SR 2.0 — the draws differ, the
+        # comparison is the same): the ceil neighbour is floor_mag +
+        # quantum — exact, because both are multiples of the same power of
+        # two and fy+1 <= 2^precision — and p_up == frac makes the
+        # frac == 0 fix-up a no-op (u >= 0 never rounds up).
+        # Bit-identical to the generic path below; restricted to grids
+        # whose quantum stays f32-normal (bfloat16's subnormal-range
+        # quantum would flush to zero; fxp grids always qualify).
         mag = jnp.where(u < frac, floor_mag + quantum, floor_mag)
     else:
-        ceil_mag = _ceil_from_decompose(x, fy, fmt)
+        ceil_mag = _ceil_from_decompose(z, fy, fmt)
         sign_v = jnp.sign(v.astype(jnp.float32)) if v is not None \
-            else jnp.zeros_like(x)
-        p_up = _p_round_up(mode, frac, fy, sign_x, jnp.float32(eps), sign_v)
+            else jnp.zeros_like(z)
+        p_up = scheme.p_up(frac, fy, sign_x, jnp.float32(eps), sign_v)
         mag = jnp.where(u < p_up, ceil_mag, floor_mag)
-        mag = jnp.where(frac == 0.0, jnp.abs(x), mag)
-    mag = jnp.minimum(mag, jnp.float32(fmt.xmax))
+        mag = jnp.where(frac == 0.0, jnp.abs(z), mag)
+    xmax = jnp.float32(fmt.xmax)
+    if overflow == "inf":
+        mag = jnp.where(mag > xmax, jnp.float32(jnp.inf), mag)
+    else:
+        mag = jnp.minimum(mag, xmax)
     out = jnp.where(sign_x < 0, -mag, mag)
     # negative-zero fix-up (matches round_to_format): sign(-0.0) == 0, so
     # the branch above would emit +0.0 where the oracle preserves -0.0
-    out = jnp.where(jnp.signbit(x) & (x == 0), -jnp.float32(0.0), out)
+    out = jnp.where(jnp.signbit(z) & (z == 0), -jnp.float32(0.0), out)
+    out = grid.from_grid(out)
     return jnp.where(jnp.isfinite(x), out, x)
 
 
@@ -85,8 +102,8 @@ def apply_spec_block(spec: RoundingSpec, x, bits, v=None):
     if spec.is_identity:
         return x.astype(jnp.float32)
     return round_block(x, bits if spec.stochastic else None,
-                       get_format(spec.fmt), spec.mode, spec.eps, v=v,
-                       rand_bits=spec.rand_bits)
+                       spec.fmt, spec.mode, spec.eps, v=v,
+                       rand_bits=spec.rand_bits, overflow=spec.overflow)
 
 
 # ---------------------------------------------------------------------------
@@ -102,8 +119,13 @@ def pack_spec(fmt):
     exactly; e4m3 uses all 16 exponent fields for finite values (the OCP
     finite-max flavour), so non-finite inputs saturate to ±xmax on encode.
     Raises for formats wider than 16 bits (nothing to pack).
+
+    Accepts any (untransformed) grid: a ``fxpW.F`` grid's degenerate
+    descriptor (single binade + subnormals, uniform quantum) packs to
+    exactly ``W`` code bits with no spare non-finite field — saturating,
+    like e4m3.
     """
-    fmt = get_format(fmt)
+    fmt = get_grid(fmt).fmt
     mbits = fmt.precision - 1
     n_fields = fmt.emax - fmt.emin + 2          # subnormal field 0 included
     ebits = max(1, (n_fields - 1).bit_length())
@@ -132,9 +154,9 @@ def pack_block(x, fmt):
     undefined (the epilogues only ever feed it round_block outputs).
     Non-finite values use the spare all-ones exponent field where the
     format has one (binary8/bfloat16/binary16, matching IEEE), and
-    saturate to ±xmax for e4m3.
+    saturate to ±xmax for e4m3 and fxp grids.
     """
-    fmt = get_format(fmt)
+    fmt = get_grid(fmt).fmt
     ebits, mbits, width, has_nf = pack_spec(fmt)
     x = x.astype(jnp.float32)
     sign = jnp.signbit(x).astype(jnp.uint32)
@@ -160,7 +182,7 @@ def pack_block(x, fmt):
 
 def unpack_block(codes, fmt):
     """Decode packed code words back to exact float32 grid values."""
-    fmt = get_format(fmt)
+    fmt = get_grid(fmt).fmt
     ebits, mbits, _, has_nf = pack_spec(fmt)
     c = codes.astype(jnp.uint32)
     sign = (c >> jnp.uint32(ebits + mbits)) & jnp.uint32(1)

@@ -19,13 +19,17 @@ from repro.kernels.qmatmul import qmatmul_p, qmatmul_prng_p
 from repro.kernels.sr_cast import sr_cast_p, sr_cast_prng_p
 
 
-@functools.partial(jax.jit, static_argnames=("fmt", "mode", "eps", "interpret"))
+@functools.partial(jax.jit, static_argnames=("fmt", "mode", "eps",
+                                             "rand_bits", "overflow",
+                                             "interpret"))
 def sr_cast(x, key, fmt, mode: str = "sr", eps: float = 0.0, v=None,
+            rand_bits: int = 32, overflow: str = "saturate",
             interpret: Optional[bool] = None):
     """Stochastic-round cast via the Pallas kernel."""
     x = jnp.asarray(x, jnp.float32)
     bits = jax.random.bits(key, tuple(x.shape), jnp.uint32)
-    return sr_cast_p(x, bits, fmt, mode, eps=eps, v=v, interpret=interpret)
+    return sr_cast_p(x, bits, fmt, mode, eps=eps, v=v, rand_bits=rand_bits,
+                     overflow=overflow, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
@@ -38,13 +42,17 @@ def fused_qupdate(x, g, t, key, cfg: GDRounding,
     return fused_qupdate_p(x, g, t, bits3, cfg, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("fmt", "mode", "eps", "interpret"))
+@functools.partial(jax.jit, static_argnames=("fmt", "mode", "eps",
+                                             "rand_bits", "overflow",
+                                             "interpret"))
 def sr_cast_prng(x, key, fmt, mode: str = "sr", eps: float = 0.0, v=None,
+                 rand_bits: int = 32, overflow: str = "saturate",
                  interpret: Optional[bool] = None):
     """Stochastic-round cast with in-kernel randomness (no bits operand)."""
     x = jnp.asarray(x, jnp.float32)
     return sr_cast_prng_p(x, common.derive_seed(key), fmt, mode, eps=eps,
-                          v=v, interpret=interpret)
+                          v=v, rand_bits=rand_bits, overflow=overflow,
+                          interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "interpret"))

@@ -54,8 +54,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.formats import get_format
-from repro.core.rounding import RoundingSpec
+from repro.core.grids import get_grid
+from repro.core.rounding import RoundingSpec, get_scheme
 from repro.kernels import common
 
 ACT_FNS = {
@@ -72,10 +72,10 @@ STREAM_FWD, STREAM_ACT = 0, 1
 
 
 def _check_mode(mode: str) -> None:
-    if mode == "signed_sr_eps":
-        raise ValueError("signed_sr_eps is not supported for GEMM result "
+    if get_scheme(mode).needs_v:
+        raise ValueError(f"{mode} is not supported for GEMM result "
                          "rounding (no bias-direction operand); use "
-                         "'sr'/'sr_eps' or a deterministic mode")
+                         "'sr'/'sr2'/'sr_eps' or a deterministic mode")
 
 
 def _cdiv(a: int, b: int) -> int:
@@ -95,18 +95,19 @@ def _resolve_epilogue(fmt, act, act_spec, out_packed):
                          f"known: {sorted(ACT_FNS)}")
     if act_spec is not None and act_spec.is_identity:
         act_spec = None
-    if act_spec is not None and act_spec.mode == "signed_sr_eps":
-        raise ValueError("signed_sr_eps is not supported for the activation "
-                         "rounding site (no bias-direction operand)")
+    if act_spec is not None and act_spec.scheme.needs_v:
+        raise ValueError(f"{act_spec.mode} is not supported for the "
+                         "activation rounding site (no bias-direction "
+                         "operand)")
     if not out_packed:
         return act_spec, None
     if act_spec is not None:
-        return act_spec, get_format(act_spec.fmt)
+        return act_spec, get_grid(act_spec.fmt)
     if act is not None:
         raise ValueError("out_packed with an activation requires a "
                          "non-identity act_spec (the packed values must "
                          "land on a rounding grid)")
-    return None, get_format(fmt)
+    return None, get_grid(fmt)
 
 
 def _resolve_blocks(M, N, K, bm, bn, bk, *, mode, interpret):
@@ -163,7 +164,7 @@ _SEMANTICS_BATCHED = ("parallel", "parallel", "parallel", "arbitrary")
 def _qmm2d(a, b, rand, fmt, mode, eps, *, rand_bits, bm, bn, bk, bias, act,
            act_spec, act_bits, out_packed, a_fmt, interpret):
     _check_mode(mode)
-    fmt = get_format(fmt)
+    fmt = get_grid(fmt)
     if interpret is None:
         interpret = common.default_interpret()
     M, K = a.shape
@@ -176,7 +177,7 @@ def _qmm2d(a, b, rand, fmt, mode, eps, *, rand_bits, bm, bn, bk, bias, act,
     k_rem = K % bk_
     act_spec, pack_fmt = _resolve_epilogue(fmt, act, act_spec, out_packed)
     prng = rand[0] == "seed"
-    stoch = mode in ("sr", "sr_eps")
+    stoch = get_scheme(mode).stochastic
     act_stoch = act_spec is not None and act_spec.stochastic
 
     def idx_a(i, j, k, *s):
@@ -349,7 +350,7 @@ def qmatmul_p(a, b, bits, fmt, mode: str = "sr", eps: float = 0.0,
     the ``act_bits`` (M, N) operand here); ``out_packed`` emits packed
     code words instead of float32.
     """
-    a_fmt = None if a_fmt is None else get_format(a_fmt)
+    a_fmt = None if a_fmt is None else get_grid(a_fmt)
     return _qmm2d(a, b, ("bits", bits), fmt, mode, eps, rand_bits=rand_bits,
                   bm=bm, bn=bn, bk=bk, bias=bias, act=act, act_spec=act_spec,
                   act_bits=act_bits, out_packed=out_packed, a_fmt=a_fmt,
@@ -369,7 +370,7 @@ def qmatmul_prng_p(a, b, seed, fmt, mode: str = "sr", eps: float = 0.0,
     stream 1.  Epilogue/packing/blocks as in :func:`qmatmul_p`.
     """
     seed = jnp.asarray(seed, jnp.uint32).reshape(2)
-    a_fmt = None if a_fmt is None else get_format(a_fmt)
+    a_fmt = None if a_fmt is None else get_grid(a_fmt)
     return _qmm2d(a, b, ("seed", seed), fmt, mode, eps, rand_bits=rand_bits,
                   bm=bm, bn=bn, bk=bk, bias=bias, act=act, act_spec=act_spec,
                   act_bits=None, out_packed=out_packed, a_fmt=a_fmt,
@@ -401,7 +402,7 @@ def _resolve_batch_blocks(E, M, N, K, be, bm, bn, bk, *, mode, interpret):
 def _qmmb(a, b, rand, fmt, mode, eps, *, rand_bits, be, bm, bn, bk, act,
           act_spec, act_bits, out_packed, a_fmt, interpret):
     _check_mode(mode)
-    fmt = get_format(fmt)
+    fmt = get_grid(fmt)
     if interpret is None:
         interpret = common.default_interpret()
     E, M, K = a.shape
@@ -414,7 +415,7 @@ def _qmmb(a, b, rand, fmt, mode, eps, *, rand_bits, be, bm, bn, bk, act,
     k_rem = K % bk_
     act_spec, pack_fmt = _resolve_epilogue(fmt, act, act_spec, out_packed)
     prng = rand[0] == "seed"
-    stoch = mode in ("sr", "sr_eps")
+    stoch = get_scheme(mode).stochastic
     act_stoch = act_spec is not None and act_spec.stochastic
 
     def idx_a(e, i, j, k, *s):
@@ -588,7 +589,7 @@ def qmatmul_batched_p(a, b, bits, fmt, mode: str = "sr", eps: float = 0.0,
     ``be`` batch slices are processed per grid step (autotuned, results
     invariant to the choice).
     """
-    a_fmt = None if a_fmt is None else get_format(a_fmt)
+    a_fmt = None if a_fmt is None else get_grid(a_fmt)
     return _qmmb(a, b, ("bits", bits), fmt, mode, eps, rand_bits=rand_bits,
                  be=be, bm=bm, bn=bn, bk=bk, act=act, act_spec=act_spec,
                  act_bits=act_bits, out_packed=out_packed, a_fmt=a_fmt,
@@ -611,7 +612,7 @@ def qmatmul_batched_prng_p(a, b, seeds, fmt, mode: str = "sr",
     """
     E = a.shape[0]
     seeds = jnp.asarray(seeds, jnp.uint32).reshape(E, 2)
-    a_fmt = None if a_fmt is None else get_format(a_fmt)
+    a_fmt = None if a_fmt is None else get_grid(a_fmt)
     return _qmmb(a, b, ("seed", seeds), fmt, mode, eps, rand_bits=rand_bits,
                  be=be, bm=bm, bn=bn, bk=bk, act=act, act_spec=act_spec,
                  act_bits=None, out_packed=out_packed, a_fmt=a_fmt,
@@ -625,7 +626,7 @@ def _qmm_swiglu(x, wg, wu, rand, fmt, mode, eps, *, rand_bits, act, act_spec,
                 act_bits, bm, bn, bk, out_packed, residuals,
                 residuals_packed, interpret):
     _check_mode(mode)
-    fmt = get_format(fmt)
+    fmt = get_grid(fmt)
     if interpret is None:
         interpret = common.default_interpret()
     M, K = x.shape
@@ -640,7 +641,7 @@ def _qmm_swiglu(x, wg, wu, rand, fmt, mode, eps, *, rand_bits, act, act_spec,
     if act is None:
         raise ValueError("the fused GLU kernel needs an activation")
     prng = rand[0] == "seed"
-    stoch = mode in ("sr", "sr_eps")
+    stoch = get_scheme(mode).stochastic
     act_stoch = act_spec is not None and act_spec.stochastic
     res_fmt = fmt if residuals_packed else None
     res_dtype = common.pack_dtype(fmt) if res_fmt is not None else jnp.float32

@@ -7,14 +7,15 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.formats import get_format
 from repro.core.gd import GDRounding, _resolve_v
-from repro.core.rounding import round_to_format
+from repro.core.rounding import get_scheme, round_to_format
 
 
-def sr_cast_ref(x, bits, fmt, mode: str, eps: float = 0.0, v=None):
+def sr_cast_ref(x, bits, fmt, mode: str, eps: float = 0.0, v=None,
+                rand_bits: int = 32, overflow: str = "saturate"):
     """Oracle for kernels.sr_cast.sr_cast_p."""
-    return round_to_format(x, fmt, mode, bits=bits, eps=eps, v=v)
+    return round_to_format(x, fmt, mode, bits=bits, eps=eps, v=v,
+                           rand_bits=rand_bits, overflow=overflow)
 
 
 def fused_qupdate_ref(x, g, t, bits3, cfg: GDRounding):
@@ -28,9 +29,11 @@ def fused_qupdate_ref(x, g, t, bits3, cfg: GDRounding):
     return cfg.sub(z, bits=bits3[2], v=_resolve_v(cfg.sub_v, g_hat, x))
 
 
-def qmatmul_ref(a, b, bits, fmt, mode: str = "sr", eps: float = 0.0):
+def qmatmul_ref(a, b, bits, fmt, mode: str = "sr", eps: float = 0.0,
+                rand_bits: int = 32):
     """Oracle for kernels.qmatmul.qmatmul_p: fp32 GEMM + result rounding."""
     prod = jnp.asarray(a, jnp.float32) @ jnp.asarray(b, jnp.float32)
-    if mode in ("sr", "sr_eps"):
-        return round_to_format(prod, fmt, mode, bits=bits, eps=eps)
+    if get_scheme(mode).stochastic:
+        return round_to_format(prod, fmt, mode, bits=bits, eps=eps,
+                               rand_bits=rand_bits)
     return round_to_format(prod, fmt, mode, eps=eps)

@@ -18,7 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.formats import get_format
+from repro.core.grids import get_grid
+from repro.core.rounding import get_scheme
 from repro.kernels import common
 
 LANES = 128
@@ -48,14 +49,17 @@ def pick_block_rows(n_elements: int, interpret: bool,
     return max(8, min(rows, MAX_INTERPRET_ROWS))
 
 
-def _sr_cast_kernel(x_ref, bits_ref, o_ref, *, fmt, mode, eps, rand_bits):
+def _sr_cast_kernel(x_ref, bits_ref, o_ref, *, fmt, mode, eps, rand_bits,
+                    overflow):
     o_ref[...] = common.round_block(x_ref[...], bits_ref[...], fmt, mode, eps,
-                                    rand_bits=rand_bits)
+                                    rand_bits=rand_bits, overflow=overflow)
 
 
-def _signed_sr_cast_kernel(x_ref, bits_ref, v_ref, o_ref, *, fmt, eps):
+def _signed_sr_cast_kernel(x_ref, bits_ref, v_ref, o_ref, *, fmt, mode, eps,
+                           overflow):
     o_ref[...] = common.round_block(
-        x_ref[...], bits_ref[...], fmt, "signed_sr_eps", eps, v=v_ref[...])
+        x_ref[...], bits_ref[...], fmt, mode, eps, v=v_ref[...],
+        overflow=overflow)
 
 
 def _pad_2d(flat, block_rows):
@@ -67,14 +71,17 @@ def _pad_2d(flat, block_rows):
 
 
 def sr_cast_p(x, bits, fmt, mode: str, eps: float = 0.0, v=None,
-              *, block_rows=None, rand_bits: int = 32, interpret=None):
+              *, block_rows=None, rand_bits: int = 32,
+              overflow: str = "saturate", interpret=None):
     """Stochastic-round ``x`` onto ``fmt`` with a Pallas kernel.
 
     x: float32 array (any shape); bits: uint32, same shape (with
     ``rand_bits < 32`` only the low bits are consumed); v: bias
-    direction (same shape) — required iff mode == 'signed_sr_eps'.
+    direction (same shape) — required iff the scheme ``needs_v``
+    (signed-SRε).  ``fmt`` may be any registered grid (fp or fxp);
+    ``mode`` any registered scheme (sr2's comparison draw included).
     """
-    fmt = get_format(fmt)
+    fmt = get_grid(fmt)
     if interpret is None:
         interpret = common.default_interpret()
     block_rows = pick_block_rows(x.size, interpret, block_rows)
@@ -84,11 +91,12 @@ def sr_cast_p(x, bits, fmt, mode: str, eps: float = 0.0, v=None,
     grid = (rows // block_rows,)
     bspec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
 
-    if mode == "signed_sr_eps":
+    if get_scheme(mode).needs_v:
         if v is None:
-            raise ValueError("signed_sr_eps requires v")
+            raise ValueError(f"{mode} requires v")
         vf, _ = _pad_2d(jnp.broadcast_to(v, shape).reshape(-1), block_rows)
-        kern = functools.partial(_signed_sr_cast_kernel, fmt=fmt, eps=eps)
+        kern = functools.partial(_signed_sr_cast_kernel, fmt=fmt, mode=mode,
+                                 eps=eps, overflow=overflow)
         out = pl.pallas_call(
             kern,
             grid=grid,
@@ -99,7 +107,7 @@ def sr_cast_p(x, bits, fmt, mode: str, eps: float = 0.0, v=None,
         )(xf, bitsf, vf)
     else:
         kern = functools.partial(_sr_cast_kernel, fmt=fmt, mode=mode, eps=eps,
-                                 rand_bits=rand_bits)
+                                 rand_bits=rand_bits, overflow=overflow)
         out = pl.pallas_call(
             kern,
             grid=grid,
@@ -116,35 +124,37 @@ def sr_cast_p(x, bits, fmt, mode: str, eps: float = 0.0, v=None,
 # ---------------------------------------------------------------------------
 def _sr_cast_prng_kernel(seed_ref, x_ref, o_ref,
                          *, fmt, mode, eps, block_rows, rand_bits,
-                         interpret):
+                         overflow, interpret):
     i = pl.program_id(0)
     common.seed_kernel_prng(seed_ref, i, interpret=interpret)
     bits = common.kernel_bits(seed_ref, x_ref.shape,
                               row0=i * block_rows, rand_bits=rand_bits,
                               interpret=interpret)
     o_ref[...] = common.round_block(x_ref[...], bits, fmt, mode, eps,
-                                    rand_bits=rand_bits)
+                                    rand_bits=rand_bits, overflow=overflow)
 
 
 def _signed_sr_cast_prng_kernel(seed_ref, x_ref, v_ref, o_ref,
-                                *, fmt, eps, block_rows, interpret):
+                                *, fmt, mode, eps, block_rows, overflow,
+                                interpret):
     i = pl.program_id(0)
     common.seed_kernel_prng(seed_ref, i, interpret=interpret)
     bits = common.kernel_bits(seed_ref, x_ref.shape,
                               row0=i * block_rows, interpret=interpret)
     o_ref[...] = common.round_block(
-        x_ref[...], bits, fmt, "signed_sr_eps", eps, v=v_ref[...])
+        x_ref[...], bits, fmt, mode, eps, v=v_ref[...], overflow=overflow)
 
 
 def sr_cast_prng_p(x, seed, fmt, mode: str, eps: float = 0.0, v=None,
-                   *, block_rows=None, rand_bits: int = 32, interpret=None):
+                   *, block_rows=None, rand_bits: int = 32,
+                   overflow: str = "saturate", interpret=None):
     """Stochastic-round ``x`` onto ``fmt`` with in-kernel randomness.
 
     ``seed``: (2,) uint32 words (see common.derive_seed); the per-block
     seed is (words, block index), delivered via SMEM scalar prefetch.
     Deterministic modes should use ``sr_cast_p`` (the bits are unused).
     """
-    fmt = get_format(fmt)
+    fmt = get_grid(fmt)
     if interpret is None:
         interpret = common.default_interpret()
     block_rows = pick_block_rows(x.size, interpret, block_rows)
@@ -155,18 +165,19 @@ def sr_cast_prng_p(x, seed, fmt, mode: str, eps: float = 0.0, v=None,
     bspec = pl.BlockSpec((block_rows, LANES), lambda i, s: (i, 0))
     seed = jnp.asarray(seed, jnp.uint32).reshape(2)
 
-    if mode == "signed_sr_eps":
+    if get_scheme(mode).needs_v:
         if v is None:
-            raise ValueError("signed_sr_eps requires v")
+            raise ValueError(f"{mode} requires v")
         vf, _ = _pad_2d(jnp.broadcast_to(v, shape).reshape(-1), block_rows)
         kern = functools.partial(_signed_sr_cast_prng_kernel, fmt=fmt,
-                                 eps=eps, block_rows=block_rows,
-                                 interpret=interpret)
+                                 mode=mode, eps=eps, block_rows=block_rows,
+                                 overflow=overflow, interpret=interpret)
         operands, in_specs = (xf, vf), [bspec, bspec]
     else:
         kern = functools.partial(_sr_cast_prng_kernel, fmt=fmt, mode=mode,
                                  eps=eps, block_rows=block_rows,
-                                 rand_bits=rand_bits, interpret=interpret)
+                                 rand_bits=rand_bits, overflow=overflow,
+                                 interpret=interpret)
         operands, in_specs = (xf,), [bspec]
 
     out = pl.pallas_call(

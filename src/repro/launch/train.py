@@ -60,7 +60,16 @@ def rounding_config(kind: str, fmt: str, eps: float) -> gd.GDRounding:
                              mul=rounding.spec(fmt, "sr"),
                              sub=rounding.spec(fmt, "signed_sr_eps", eps),
                              sub_v="grad")
-    raise ValueError(kind)
+    # any other registered scheme (sr2, ...): residual step RN, the
+    # scheme on the mul/sub sites with its registry defaults
+    scheme = rounding.get_scheme(kind)          # raises on unknown kinds
+    sp = rounding.spec(fmt, kind, scheme.default_eps,
+                       scheme.default_rand_bits)
+    if scheme.needs_v:
+        return gd.GDRounding(grad=rounding.spec(fmt, "rn"),
+                             mul=rounding.spec(fmt, "sr"), sub=sp,
+                             sub_v="grad")
+    return gd.GDRounding(grad=rounding.spec(fmt, "rn"), mul=sp, sub=sp)
 
 
 def _state_shardings(params, opt_state, mesh, ax):
@@ -144,7 +153,7 @@ def run(arch: str, *, reduced: bool, steps: int, batch: int, seq: int,
             g_pol = None          # model already carries cfg.gemm_policy
         else:
             from repro.health import watchdog as wd_lib
-            lvl = wd_lib.LEVELS[level_name]
+            lvl = wd_lib.get_level(level_name)
             opt_l = qsgd(lr=lr, momentum=momentum,
                          cfg=wd_lib.rounding_for_level(level_name),
                          update_path=update_path)
@@ -226,8 +235,9 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=0.05)
+    from repro.core.schemes import ALL_MODES
     ap.add_argument("--rounding", default="signed_sr_eps",
-                    choices=["fp32", "rn", "sr", "sr_eps", "signed_sr_eps"])
+                    choices=["fp32"] + list(ALL_MODES))
     ap.add_argument("--fmt", default="bfloat16")
     ap.add_argument("--eps", type=float, default=0.1)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
@@ -238,11 +248,12 @@ def main():
                          "whole-tree kernel with explicit bits")
     from repro.precision import PRESETS
     ap.add_argument("--gemm-policy", default=None,
-                    choices=sorted(PRESETS),
                     help="quantized-GEMM precision policy (eq. 8a): round "
                          "every forward/dgrad/wgrad GEMM result onto the "
-                         "preset's low-precision grid via the Pallas "
-                         "kernels; default: full-precision GEMMs")
+                         "low-precision grid via the Pallas kernels.  A "
+                         f"preset ({', '.join(sorted(PRESETS))}) or any "
+                         "canonical spec name, e.g. 'fxp16.8-sr2' or "
+                         "'e4m3-sr2-r16'; default: full-precision GEMMs")
     from repro.dist.codecs import wire_codec_names
     from repro.optim.accumulate import ACCUM_PRESETS
     ap.add_argument("--mesh", default=None, metavar="DPxTP",
@@ -250,10 +261,12 @@ def main():
                          "or 2x2x2 (pod x data x model); default: all "
                          "devices on the data axis")
     ap.add_argument("--wire-spec", default=None,
-                    choices=wire_codec_names(),
                     help="gradient-wire codec: quantize the cross-device "
                          "gradient reduction payload through this rounded "
-                         "grid (dist/codecs.py); default: fp32 wire")
+                         "grid (dist/codecs.py).  A named codec "
+                         f"({', '.join(wire_codec_names())}) or any "
+                         "canonical spec name, e.g. 'fxp16.8-sr2'; "
+                         "default: fp32 wire")
     ap.add_argument("--wire-topology", default="reduce_scatter",
                     choices=["reduce_scatter", "allreduce"],
                     help="rounded-reduction topology: reduce-scatter + "
@@ -263,10 +276,12 @@ def main():
                     help="microbatch gradient-accumulation factor (the "
                          "global batch is split this many ways)")
     ap.add_argument("--accum-spec", default=None,
-                    choices=sorted(ACCUM_PRESETS),
                     help="accumulator carry grid (optim/accumulate.py): "
                          "bf16-rn is the swamping baseline, the -sr "
-                         "carries keep small microbatch gradients alive; "
+                         "carries keep small microbatch gradients alive.  "
+                         f"A preset ({', '.join(sorted(ACCUM_PRESETS))}) "
+                         "or any canonical spec name with an optional "
+                         "-kahan suffix, e.g. 'fxp16.8-sr2-kahan'; "
                          "default: exact fp32")
     ap.add_argument("--loss-scale", type=float, default=0.0,
                     help="initial dynamic loss scale (optim/scale.py): "

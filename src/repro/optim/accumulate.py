@@ -132,13 +132,29 @@ ACCUM_PRESETS = {
 
 def get_accumulator(
         a: Union[None, str, GradAccumulator]) -> GradAccumulator:
-    """None | preset name | GradAccumulator -> GradAccumulator."""
+    """None | preset name | canonical spec name | GradAccumulator.
+
+    Presets win on name collisions; any other name is parsed by the
+    canonical parser (core/schemes.py) — ``"fxp16.8-sr2"``,
+    ``"binary8-sr-r8"`` — with an optional ``-kahan`` suffix for
+    compensated summation (``"bf16-sr-r8-kahan"``).
+    """
     if a is None:
         return ACCUM_PRESETS["fp32"]
     if isinstance(a, GradAccumulator):
         return a
+    hit = ACCUM_PRESETS.get(a)
+    if hit is not None:
+        return hit
+    from repro.core.rounding import parse_spec
+    name, compensated = a, False
+    if name.endswith("-kahan"):
+        name, compensated = name[: -len("-kahan")], True
     try:
-        return ACCUM_PRESETS[a]
-    except KeyError as exc:
-        raise ValueError(f"unknown accumulator preset {a!r}; "
-                         f"known: {sorted(ACCUM_PRESETS)}") from exc
+        sp = parse_spec(name)
+    except ValueError as exc:
+        raise ValueError(
+            f"unknown accumulator preset {a!r}; known: "
+            f"{sorted(ACCUM_PRESETS)}, or any canonical spec name "
+            "('<grid>-<scheme>[-e<eps>][-r<bits>][-inf][-kahan]')") from exc
+    return GradAccumulator(sp, compensated=compensated)

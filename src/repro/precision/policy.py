@@ -38,7 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.rounding import IDENTITY, RoundingSpec, spec
+from repro.core.rounding import IDENTITY, RoundingSpec, parse_spec, spec
 from repro.kernels import common
 from repro.kernels.qmatmul import (qmatmul_batched_p, qmatmul_batched_prng_p,
                                    qmatmul_p, qmatmul_prng_p)
@@ -108,13 +108,14 @@ _SITE_ATTR = {SITE_FWD: "fwd", SITE_DGRAD: "dgrad", SITE_WGRAD: "wgrad",
               SITE_ACT: "act"}
 
 def _check_gemm_spec(s: RoundingSpec, site: str) -> RoundingSpec:
-    # signed_sr_eps needs a bias-direction operand the GEMM kernels don't
-    # have; reject it here rather than at trace time deep inside the model.
-    if s.mode == "signed_sr_eps" and not s.is_identity:
+    # signed-SRε-style schemes need a bias-direction operand the GEMM
+    # kernels don't have; reject here rather than at trace time deep
+    # inside the model.
+    if not s.is_identity and s.scheme.needs_v:
         raise ValueError(
-            f"signed_sr_eps is not supported for site {site!r} "
+            f"{s.mode} is not supported for site {site!r} "
             "(result/STE rounding has no bias-direction operand); use "
-            "'sr' / 'sr_eps' or a deterministic mode")
+            "'sr' / 'sr2' / 'sr_eps' or a deterministic mode")
     return s
 
 
@@ -173,11 +174,26 @@ PRESETS = {
 
 
 def get_policy(name: str) -> QuantPolicy:
+    """Named preset, or any canonical spec name (core/schemes.py grammar).
+
+    Presets win on name collisions (their streams are the compatibility
+    contract); any other name — ``"fxp16.8-sr2"``, ``"e4m3-sr2"``,
+    ``"binary8-sr-r8"`` — is parsed by the canonical parser and applied
+    to all three GEMM sites *and* the activation site.
+    """
+    hit = PRESETS.get(name)
+    if hit is not None:
+        return hit
     try:
-        return PRESETS[name]
-    except KeyError as exc:
-        raise ValueError(f"unknown gemm policy {name!r}; "
-                         f"known: {sorted(PRESETS)}") from exc
+        s = parse_spec(name)
+    except ValueError as exc:
+        raise ValueError(
+            f"unknown gemm policy {name!r}; known presets: "
+            f"{sorted(PRESETS)}, or any canonical spec name "
+            "('<grid>-<scheme>[-e<eps>][-r<bits>][-inf]')") from exc
+    if s.is_identity:
+        return PRESETS["fp32"]
+    return make_policy(s, s, s, s)
 
 
 def resolve_policy(p: Any) -> Optional[QuantPolicy]:

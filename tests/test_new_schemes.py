@@ -1,0 +1,367 @@
+"""SR 2.0, stochastic fixed-point, and the canonical spec grammar.
+
+Covers the scheme/grid-registry refactor's new surface:
+
+* round-trip ``parse_spec(str(spec)) == spec`` over every registered
+  grid × scheme (plus ε / rand_bits / overflow suffix variants);
+* the SR 2.0 comparison draw: ``u = b·2^-r`` with no half-ulp centering,
+  so ``P(round up) = ceil(frac·2^r)/2^r`` *exactly* (enumerated over all
+  2^r draws) and the residual bias is one-sided away from zero in
+  ``[0, 2^-r)·ulp`` (CLT check, mirroring tests/test_kernel_prng.py);
+* fixed-point grids ``fxpW.F`` as degenerate FP formats: uniform quantum
+  ``2^-F``, eq. 3/5 bias/variance for SR and SRε on the fxp grid;
+* ``overflow="inf"`` vs the default saturation on binary8;
+* kernel-vs-oracle bit-exactness for sr2 / fxp on non-block-multiple
+  shapes (explicit-bits kernels against the jnp oracle);
+* a PL-inequality convergence regression: rounded GD with sr2 and with a
+  fixed-point grid still tracks the exact trajectory on the PL quadratic
+  of tests/test_gd_paper.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gd, grids, rounding, schemes, theory
+from repro.kernels import common, ref
+from repro.kernels.qmatmul import qmatmul_p
+from repro.kernels.sr_cast import sr_cast_p, sr_cast_prng_p
+
+KEY = jax.random.PRNGKey(7)
+SEED = common.derive_seed(KEY, 0)
+
+
+# ------------------------------------------------------- canonical grammar --
+GRIDS = ("binary8", "e4m3", "bfloat16", "binary16", "fxp16.8", "fxp8.4")
+
+
+def test_parse_roundtrip_every_registered_name():
+    """parse_spec(str(spec)) == spec over every grid × scheme, including
+    non-default ε / rand_bits / overflow — the satellite-2 contract that
+    lets every registry share ONE parser."""
+    for g in GRIDS:
+        for m in schemes.ALL_MODES:
+            sc = schemes.get_scheme(m)
+            variants = [rounding.spec(g, m),
+                        rounding.spec(g, m, overflow="inf")]
+            if sc.stochastic:
+                variants += [rounding.spec(g, m, sc.default_eps, 8),
+                             rounding.spec(g, m, sc.default_eps, 16)]
+            if sc.default_eps or sc.name == "sr_eps":
+                variants.append(rounding.spec(g, m, 0.4))
+            for sp in variants:
+                assert rounding.parse_spec(str(sp)) == sp, str(sp)
+
+
+def test_identity_names_and_aliases():
+    assert rounding.parse_spec("fp32") == rounding.IDENTITY
+    assert rounding.parse_spec("none").is_identity
+    assert str(rounding.IDENTITY) == "fp32"
+    # grid + scheme aliases canonicalize: bf16 → bfloat16, ssr → signed_sr_eps
+    sp = rounding.parse_spec("bf16-ssr")
+    assert sp == rounding.RoundingSpec("bfloat16", "signed_sr_eps", 0.1)
+    # scheme suffix defaults make legacy table names parse to legacy specs
+    assert rounding.parse_spec("binary8-sr") == \
+        rounding.RoundingSpec("binary8", "sr")
+    assert rounding.parse_spec("e4m3-sr_eps") == \
+        rounding.RoundingSpec("e4m3", "sr_eps", 0.1)
+    assert rounding.parse_spec("fxp16.8-sr2") == \
+        rounding.RoundingSpec("fxp16.8", "sr2", 0.0, 8)
+
+
+def test_bad_names_raise():
+    for bad in ("", "binary8", "binary8-xx", "nope-sr", "binary8-sr-q4",
+                "binary8-sr-r7", "fxp40.8-sr"):
+        with pytest.raises(ValueError):
+            rounding.parse_spec(bad)
+
+
+def test_registries_consume_canonical_names():
+    """policy / codecs / accumulate accept any canonical name (satellite 2:
+    the private tables are gone)."""
+    from repro.dist.codecs import get_wire_codec
+    from repro.optim.accumulate import get_accumulator
+    from repro.precision.policy import get_policy
+
+    pol = get_policy("fxp16.8-sr2")
+    assert pol.fwd == rounding.parse_spec("fxp16.8-sr2")
+    cod = get_wire_codec("fxp16.8-sr2")
+    assert cod.kind == "float" and cod.spec == rounding.parse_spec(
+        "fxp16.8-sr2")
+    acc = get_accumulator("fxp16.8-sr2-kahan")
+    assert acc.compensated and acc.spec == rounding.parse_spec("fxp16.8-sr2")
+    # int8 wire codec still parses its scheme tail through the one parser
+    cod8 = get_wire_codec("int8-sr2")
+    assert cod8.kind == "int8" and cod8.spec.mode == "sr2" \
+        and cod8.spec.rand_bits == 8
+
+
+def test_watchdog_ladder_is_registry_validated():
+    from repro.health import watchdog
+    # the default ladder validated at import time → LEVELS exists and each
+    # stochastic rung names a registered scheme
+    for name, lvl in watchdog.LEVELS.items():
+        if lvl.scheme is not None:
+            schemes.get_scheme(lvl.scheme)
+    with pytest.raises(ValueError):
+        watchdog.validate_ladder(("binary8-rn", "binary8-quantum"))
+    # get_level parses canonical non-ladder names too
+    lvl = watchdog.get_level("fxp16.8-sr2")
+    assert lvl.fmt == "fxp16.8" and lvl.scheme == "sr2" and lvl.rand_bits == 8
+
+
+# ------------------------------------------------------------ overflow ------
+def test_overflow_saturate_vs_inf_binary8():
+    """Satellite 1: binary8 xmax = 57344; beyond it, the default clamps to
+    ±xmax and the '-inf' variant overflows to ±inf (NaN passes through)."""
+    f8 = rounding.get_format("binary8")
+    x = jnp.asarray([1e6, -1e6, f8.xmax, 1.5, jnp.nan], jnp.float32)
+    sat = rounding.round_to_format(x, "binary8", "rn")
+    inf = rounding.round_to_format(x, "binary8", "rn", overflow="inf")
+    np.testing.assert_array_equal(np.asarray(sat)[:4],
+                                  [f8.xmax, -f8.xmax, f8.xmax, 1.5])
+    got = np.asarray(inf)
+    assert got[0] == np.inf and got[1] == -np.inf
+    assert got[2] == f8.xmax and got[3] == 1.5
+    assert np.isnan(got[4]) and np.isnan(np.asarray(sat)[4])
+
+
+def test_overflow_through_spec_and_kernel():
+    sp = rounding.parse_spec("binary8-rn-inf")
+    assert sp.overflow == "inf"
+    x = jnp.asarray([1e6, -2.5e5, 3.0], jnp.float32)
+    np.testing.assert_array_equal(np.asarray(sp(x)), [np.inf, -np.inf, 3.0])
+    # kernel path honours the same policy
+    bits = jnp.zeros(x.shape, jnp.uint32)
+    y = sr_cast_p(x, bits, "binary8", "rn", overflow="inf", interpret=True)
+    np.testing.assert_array_equal(np.asarray(y), [np.inf, -np.inf, 3.0])
+    y = sr_cast_p(x, bits, "binary8", "rn", interpret=True)
+    f8 = rounding.get_format("binary8")
+    np.testing.assert_array_equal(np.asarray(y), [f8.xmax, -f8.xmax, 3.0])
+
+
+# ------------------------------------------------------------- SR 2.0 -------
+def test_comparison_draw_is_uncentered():
+    """u = b·2^-r for sr2 vs the centered (b+½)·2^-r of few-random-bits SR
+    — and the 32-bit comparison draw coincides with the legacy top-24-bit
+    uniform."""
+    b = jnp.arange(256, dtype=jnp.uint32)
+    u_cmp = rounding._uniform_from_bits(b, 8, "comparison")
+    u_ctr = rounding._uniform_from_bits(b, 8, "uniform")
+    np.testing.assert_array_equal(np.asarray(u_cmp),
+                                  np.arange(256, dtype=np.float32) / 256.0)
+    np.testing.assert_array_equal(
+        np.asarray(u_ctr), (np.arange(256, dtype=np.float32) + 0.5) / 256.0)
+    w = jax.random.bits(KEY, (4096,), jnp.uint32)
+    np.testing.assert_array_equal(
+        np.asarray(rounding._uniform_from_bits(w, 32, "comparison")),
+        np.asarray(rounding._uniform_from_bits(w, 32, "uniform")))
+
+
+def test_sr2_r32_bit_identical_to_sr():
+    """At rand_bits=32 SR 2.0 degenerates to legacy SR exactly (same bits →
+    same stream), the bit-compat anchor for reusing sr goldens."""
+    x = jax.random.normal(KEY, (8192,), jnp.float32) * 10.0
+    bits = jax.random.bits(jax.random.fold_in(KEY, 1), x.shape, jnp.uint32)
+    y_sr = rounding.round_to_format(x, "binary8", "sr", bits=bits)
+    y_sr2 = rounding.round_to_format(x, "binary8", "sr2", bits=bits,
+                                     rand_bits=32)
+    np.testing.assert_array_equal(np.asarray(y_sr), np.asarray(y_sr2))
+
+
+def test_sr2_pup_is_ceil_frac_exact():
+    """P(round up) = ceil(frac·2^r)/2^r exactly: enumerate ALL 2^8 draws at
+    a point with known frac and count the round-ups."""
+    f8 = rounding.get_format("binary8")
+    for frac_num in (1, 51, 102, 103, 128, 255):   # frac = num/256 exactly
+        frac = frac_num / 256.0
+        x0 = 1.0 + frac * 0.25                      # binary8 ulp(1.x) = 1/4
+        x = jnp.full((256,), x0, jnp.float32)
+        bits = jnp.arange(256, dtype=jnp.uint32)
+        y = rounding.round_to_format(x, f8, "sr2", bits=bits, rand_bits=8)
+        ups = int(np.sum(np.asarray(y) > x0))
+        assert ups == int(np.ceil(frac * 256)), (frac_num, ups)
+        # centered few-random-bits SR rounds the probability to NEAREST
+        y_c = rounding.round_to_format(x, f8, "sr", bits=bits, rand_bits=8)
+        ups_c = int(np.sum(np.asarray(y_c) > x0))
+        assert ups_c == int(np.floor(frac * 256 + 0.5)), (frac_num, ups_c)
+
+
+N_MC = 1 << 19
+# interior binary8 point engineered for a LARGE sr2 quantization bias:
+# frac = 102.0625/256 → ceil gap 0.9375/256, bias = gap·ulp ≈ 9.16e-4.
+X0_SR2 = float(1.0 + (102.0625 / 256.0) * 0.25)
+
+
+def _mc_err(fmtname, mode, x0, rand_bits=32, eps=0.0):
+    x = jnp.full((N_MC,), x0, jnp.float32)
+    y = sr_cast_prng_p(x, SEED, fmtname, mode, eps=eps, rand_bits=rand_bits,
+                       interpret=True)
+    err = np.asarray(y, np.float64) - x0
+    q = float(np.asarray(rounding.ulp(jnp.float32(x0), fmtname)))
+    return err.mean(), err.var(), q
+
+
+def test_sr2_one_sided_bias_clt():
+    """SR 2.0's residual bias is one-sided away from zero and equals
+    (ceil(frac·2^r)/2^r − frac)·ulp; at X0_SR2 that's ≈ 5.4σ above zero,
+    so the CLT check distinguishes it from unbiased SR."""
+    mean, var, q = _mc_err("binary8", "sr2", X0_SR2, rand_bits=8)
+    frac = (X0_SR2 - 1.0) / q
+    want = (np.ceil(frac * 256) / 256 - frac) * q
+    tol = 4.0 * np.sqrt(var / N_MC)
+    assert abs(mean - want) < tol, (mean, want, tol)
+    assert mean > 0.0                       # away from zero for x > 0
+    assert 0.0 < want < 2.0 ** -8 * q       # within the advertised bound
+    # the negated point biases AWAY from zero, i.e. mean error < 0
+    mean_n, var_n, _ = _mc_err("binary8", "sr2", -X0_SR2, rand_bits=8)
+    assert abs(mean_n + want) < 4.0 * np.sqrt(var_n / N_MC)
+
+
+def test_sr2_default_bits_unbiased_within_bound():
+    """With the default r=8 draw, |bias| < 2^-8·ulp everywhere (Def-1-like
+    near-unbiasedness at 1/4 the PRF traffic)."""
+    for x0 in (1.1, -3.7, 17.0):
+        mean, var, q = _mc_err("binary8", "sr2", x0, rand_bits=8)
+        assert abs(mean) < 2.0 ** -8 * q + 4.0 * np.sqrt(var / N_MC), x0
+
+
+# ------------------------------------------------------ fixed-point grids ---
+def test_fxp_grid_structure():
+    """fxp8.4: quantum 2^-4 everywhere, xmax = (2^7−1)·2^-4, outputs land
+    on quantum multiples, RN saturates at ±xmax."""
+    g = grids.get_grid("fxp8.4")
+    assert g.kind == "fxp"
+    assert g.xmax == (2 ** 7 - 1) * 2.0 ** -4
+    x = jnp.linspace(-10.0, 10.0, 4097, dtype=jnp.float32)
+    q = np.asarray(rounding.ulp(x, "fxp8.4"))
+    np.testing.assert_array_equal(q, np.full_like(q, 2.0 ** -4))
+    y = np.asarray(rounding.round_to_format(x, "fxp8.4", "rn"))
+    scaled = y * 2.0 ** 4
+    np.testing.assert_array_equal(scaled, np.round(scaled))
+    assert y.max() == g.xmax and y.min() == -g.xmax
+    assert bool(jnp.all(rounding.is_representable(jnp.asarray(y), "fxp8.4")))
+
+
+def test_fxp_sr_bias_variance_eq3_eq5():
+    """eq. 3/5 on the fixed-point grid: SR unbiased, Var = frac(1−frac)q²;
+    SRε biased by sign(x)·ε·q."""
+    x0 = 1.03                                   # frac = 0.48 on fxp8.4
+    mean, var, q = _mc_err("fxp8.4", "sr", x0)
+    assert q == 2.0 ** -4
+    frac = (x0 - np.floor(x0 * 16) / 16) / q
+    assert abs(mean) < 4.0 * np.sqrt(var / N_MC)
+    want_var = frac * (1.0 - frac) * q * q
+    assert abs(var - want_var) < 0.02 * want_var
+    for s in (1.0, -1.0):
+        mean_e, var_e, _ = _mc_err("fxp8.4", "sr_eps", s * x0, eps=0.2)
+        assert abs(mean_e - s * 0.2 * q) < 4.0 * np.sqrt(var_e / N_MC), s
+
+
+def test_fxp_sr2_bias_bound():
+    mean, var, q = _mc_err("fxp16.8", "sr2", 0.3333, rand_bits=8)
+    assert q == 2.0 ** -8
+    assert abs(mean) < 2.0 ** -8 * q + 4.0 * np.sqrt(var / N_MC)
+
+
+def test_shifted_grid_round_trip():
+    """(scale, μ)-shifted wrapper: rounding happens on the inner grid of
+    (x−μ)/scale, mapped back affinely."""
+    g = grids.shifted_grid("fxp8.4", scale=0.5, mu=2.0)
+    x = jnp.asarray([2.0, 2.26, 1.97, -1.0], jnp.float32)
+    y = np.asarray(rounding.round_to_format(x, g, "rn"))
+    inner = np.asarray(rounding.round_to_format(
+        (x - 2.0) / 0.5, "fxp8.4", "rn"))
+    np.testing.assert_allclose(y, inner * 0.5 + 2.0, rtol=0, atol=0)
+    assert float(np.asarray(g.ulp(jnp.float32(2.0)))) == 0.5 * 2.0 ** -4
+
+
+# --------------------------------------- kernel vs oracle, awkward shapes ---
+@pytest.mark.parametrize("fmtname,mode,rand_bits", [
+    ("binary8", "sr2", 8), ("fxp16.8", "sr", 32), ("fxp8.4", "sr2", 16)])
+def test_sr_cast_kernel_bit_exact_nonmultiple(fmtname, mode, rand_bits):
+    """Explicit-bits Pallas cast == jnp oracle, bit for bit, on shapes that
+    don't divide the block size (pad-free edges)."""
+    for n in (1, 257, 1000, 5003):
+        k = jax.random.fold_in(KEY, n)
+        x = jax.random.normal(k, (n,), jnp.float32) * 3.0
+        bits = jax.random.bits(jax.random.fold_in(k, 1), (n,), jnp.uint32)
+        got = sr_cast_p(x, bits, fmtname, mode, rand_bits=rand_bits,
+                        interpret=True)
+        want = rounding.round_to_format(x, fmtname, mode, bits=bits,
+                                        rand_bits=rand_bits)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want)), n
+
+
+@pytest.mark.parametrize("fmtname,mode,rand_bits", [
+    ("binary8", "sr2", 8), ("fxp16.8", "sr", 32)])
+def test_qmatmul_kernel_bit_exact_nonmultiple(fmtname, mode, rand_bits):
+    """Rounded GEMM on a ragged (non-block-multiple) shape == the jnp
+    oracle with the same explicit bits."""
+    m, kdim, n = 67, 33, 65
+    a = jax.random.normal(KEY, (m, kdim), jnp.float32) * 0.3
+    b = jax.random.normal(jax.random.fold_in(KEY, 2), (kdim, n),
+                          jnp.float32) * 0.3
+    bits = jax.random.bits(jax.random.fold_in(KEY, 3), (m, n), jnp.uint32)
+    got = qmatmul_p(a, b, bits, fmtname, mode, rand_bits=rand_bits,
+                    bm=32, bn=32, bk=32, interpret=True)
+    want = ref.qmatmul_ref(a, b, bits, fmtname, mode, rand_bits=rand_bits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_sr_cast_prng_kernel_matches_oracle_bits_sr2():
+    """PRNG-mode sr2 kernel == explicit-bits oracle fed the same counter
+    stream (the tree/GEMM kernels share this reduced-draw plumbing)."""
+    n = 5000
+    x = jax.random.normal(KEY, (n,), jnp.float32)
+    y = sr_cast_prng_p(x, SEED, "binary8", "sr2", rand_bits=8,
+                       interpret=True)
+    assert bool(jnp.all(rounding.is_representable(y, "binary8")))
+    lo, hi = rounding.floor_ceil(x, "binary8")
+    assert bool(jnp.all((y == lo) | (y == hi)))
+
+
+# --------------------------------------------------- PL convergence (cap) ---
+def _pl_quadratic(n=64, seed=0):
+    """The PL (in fact strongly convex) diagonal quadratic of
+    tests/test_gd_paper.py: μ = min d, L = max d."""
+    rng = np.random.default_rng(seed)
+    diag = np.linspace(0.2, 1.0, n).astype(np.float32)
+    xstar = rng.normal(size=n).astype(np.float32)
+    f = lambda x: 0.5 * jnp.sum(diag * (x - xstar) ** 2)
+    g = lambda x: diag * (x - xstar)
+    x0 = jnp.asarray(xstar + rng.normal(size=n).astype(np.float32) * 4)
+    return f, g, x0, float(diag.min()), float(diag.max()), xstar
+
+
+@pytest.mark.parametrize("fmtname,mode,kwargs", [
+    ("bfloat16", "sr2", {}),
+    ("fxp16.8", "sr", {}),
+    ("fxp16.8", "sr2", {}),
+])
+def test_pl_convergence_regression(fmtname, mode, kwargs):
+    """PL-inequality regression: rounded GD with the new schemes/grids
+    keeps the exact trajectory's Theorem-2 envelope and reaches a loss
+    within noise of the grid's resolution floor."""
+    f, g, x0, mu, L, xstar = _pl_quadratic()
+    t = 0.5 / L
+    cfg = gd.GDRounding(grad=rounding.spec(fmtname, "rn"),
+                        mul=rounding.spec(fmtname, mode, **kwargs),
+                        sub=rounding.spec(fmtname, mode, **kwargs))
+    fs_exact, _ = gd.run_gd(f, g, x0, t, gd.fp32_config(), 200)
+    runs = []
+    for seed in range(4):
+        fs, _ = gd.run_gd(f, g, x0, t, cfg, 200, param_fmt=fmtname,
+                          key=jax.random.PRNGKey(seed))
+        runs.append(np.asarray(fs))
+    mean_fs = np.mean(runs, 0)
+    exact = np.asarray(fs_exact)
+    # PL exact rate bound (Theorem 2 style envelope) holds in expectation
+    bound = theory.exact_rate_bound(
+        L, t, np.arange(1, 201), float(jnp.linalg.norm(x0 - xstar)))
+    assert np.all(mean_fs[5:] <= bound[5:] * 1.1 + 1e-2), (fmtname, mode)
+    # and tracks the exact trajectory through the descent phase
+    mid = slice(10, 120)
+    assert np.all(mean_fs[mid] <= exact[mid] * 1.5 + 5e-2), (fmtname, mode)
+    # terminal loss is near the rounding noise floor, far below f(x0)
+    assert mean_fs[-1] < 1e-2 * float(f(x0))

@@ -146,8 +146,11 @@ def test_accumulator_registry():
     assert get_accumulator("bf16-sr-kahan").compensated
     a = GradAccumulator()
     assert get_accumulator(a) is a
+    # any canonical spec name resolves through the scheme/grid registries
+    # (fp8-rz used to be rejected by the private preset table)
+    assert str(get_accumulator("fp8-rz").spec) == "binary8-rz"
     with pytest.raises(ValueError, match="unknown accumulator"):
-        get_accumulator("fp8-rz")
+        get_accumulator("fp8-bogus")
     assert sorted(ACCUM_PRESETS) == sorted(
         ["fp32", "bf16-rn", "bf16-sr", "bf16-sr-kahan", "binary8-sr",
          "e4m3-sr"])

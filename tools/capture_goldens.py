@@ -1,0 +1,156 @@
+"""Capture golden SHA-256 digests of rounded streams from the CURRENT code.
+
+Run once before a rounding-core refactor; the output JSON is embedded in
+tests/test_golden_bits.py so the refactor can prove that every
+pre-existing named spec/preset produces bit-identical streams.
+
+    PYTHONPATH=src python tools/capture_goldens.py > /tmp/goldens.json
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+
+import jax
+
+# match tests/conftest.py: the goldens must be captured under the exact
+# PRNG configuration the tier-1 suite runs with
+jax.config.update("jax_default_prng_impl", "threefry2x32")
+jax.config.update("jax_threefry_partitionable", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gd, rounding
+from repro.dist import codecs
+from repro.kernels import common
+from repro.kernels.tree_update import fused_tree_update
+from repro.optim import accumulate
+from repro.precision import policy
+
+
+def digest(arr) -> str:
+    a = np.asarray(jax.device_get(arr), np.float32)
+    return hashlib.sha256(a.tobytes()).hexdigest()[:16]
+
+
+def make_inputs():
+    rng = np.random.default_rng(0)
+    # magnitudes spanning subnormal..overflow of every supported grid,
+    # plus exact zeros, negatives and grid points
+    x = (rng.normal(size=(37, 53)) *
+         np.exp2(rng.integers(-20, 18, size=(37, 53)))).astype(np.float32)
+    x[0, :5] = [0.0, -0.0, 1.0, -2.0, 6e4]
+    v = rng.normal(size=(37, 53)).astype(np.float32)
+    bits = np.asarray(
+        common.counter_bits(jnp.uint32(0xC0FFEE), jnp.uint32(42), (37, 53)))
+    return jnp.asarray(x), jnp.asarray(v), jnp.asarray(bits)
+
+
+def golden_round_to_format(out):
+    x, v, bits = make_inputs()
+    for fmt in ("binary8", "e4m3", "bfloat16", "binary16"):
+        for mode in rounding.ALL_MODES:
+            eps = 0.1 if mode in ("sr_eps", "signed_sr_eps") else 0.0
+            kw = dict(bits=bits, eps=eps)
+            if mode == "signed_sr_eps":
+                kw["v"] = v
+            y = rounding.round_to_format(x, fmt, mode, **kw)
+            out[f"rtf/{fmt}-{mode}"] = digest(y)
+        for rb in (8, 16):
+            y = rounding.round_to_format(x, fmt, "sr", bits=bits, rand_bits=rb)
+            out[f"rtf/{fmt}-sr-r{rb}"] = digest(y)
+    # overflow="inf" path (satellite 1 contract)
+    out["rtf/binary8-rn-inf"] = digest(
+        rounding.round_to_format(x * 8.0, "binary8", "rn", overflow="inf"))
+
+
+def golden_gemm_presets(out):
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.normal(size=(48, 40)).astype(np.float32)) * 4.0
+    b = jnp.asarray(rng.normal(size=(40, 56)).astype(np.float32))
+    act = jnp.asarray(rng.normal(size=(30, 70)).astype(np.float32))
+    words = common.derive_seed(jax.random.PRNGKey(7), 3, 1)
+    for name in sorted(policy.PRESETS):
+        pol = policy.get_policy(name)
+        if pol.is_identity:
+            continue
+        for site in (policy.SITE_FWD, policy.SITE_DGRAD, policy.SITE_WGRAD):
+            if getattr(pol, policy._SITE_ATTR[site]).is_identity:
+                continue
+            y = policy.site_matmul(pol, site, a, b, words)
+            out[f"gemm/{name}/site{site}"] = digest(y)
+        if not pol.act.is_identity:
+            out[f"gemm/{name}/act"] = digest(
+                policy._qact(pol, act, words))
+
+
+def golden_wire_codecs(out):
+    rng = np.random.default_rng(2)
+    g = jnp.asarray((rng.normal(size=(41, 33)) *
+                     np.exp2(rng.integers(-18, 4, size=(41, 33))))
+                    .astype(np.float32))
+    words = codecs.wire_words(jax.random.PRNGKey(5), 11)
+    for name in codecs.wire_codec_names():
+        codec = codecs.get_wire_codec(name)
+        if codec is None:
+            continue
+        bits = codecs.codec_bits(codec, words, g.shape, stage=1)
+        out[f"wire/{name}"] = digest(codec.quantize(g, bits=bits))
+
+
+def golden_accum_presets(out):
+    rng = np.random.default_rng(3)
+    grads = [jnp.asarray(rng.normal(size=(29, 31)).astype(np.float32)) * s
+             for s in (1.0, 1e-2, 3.0)]
+    for name in sorted(accumulate.ACCUM_PRESETS):
+        acc = accumulate.get_accumulator(name)
+        words = acc.step_words(jax.random.PRNGKey(9), 4)
+        st = acc.init(grads[0])
+        for m, gr in enumerate(grads):
+            st = acc.add(st, gr, words=words, microstep=m)
+        out[f"accum/{name}"] = digest(st.total)
+
+
+def golden_gd(out):
+    x0 = jnp.asarray(np.linspace(0.5, 700.0, 96, dtype=np.float32))
+    diag = jnp.full((96,), 0.25, jnp.float32)
+    f = lambda x: 0.5 * jnp.sum(diag * x * x)
+    gf = lambda x: diag * x
+    cfgs = {
+        "b8-paper": gd.make_config("binary8", "rn", "sr", "sr"),
+        "bf16-signed": gd.GDRounding(
+            grad=rounding.spec("bfloat16", "rn"),
+            mul=rounding.spec("bfloat16", "sr"),
+            sub=rounding.spec("bfloat16", "signed_sr_eps", 0.4),
+            sub_v="grad"),
+        "b8-sreps": gd.make_config("binary8", "rn", "sr_eps", "sr_eps",
+                                   eps_8b=0.1, eps_8c=0.1),
+    }
+    for name, cfg in cfgs.items():
+        fs, xf = gd.run_gd(f, gf, x0, 0.05, cfg, 25,
+                           key=jax.random.PRNGKey(3), param_fmt="binary8"
+                           if name != "bf16-signed" else "bfloat16")
+        out[f"gd/{name}/fs"] = digest(fs)
+        out[f"gd/{name}/x"] = digest(xf)
+    # fused tree-update kernel, explicit-bits mode (bit-exact contract)
+    params = {"w": x0.reshape(12, 8), "b": x0[:8]}
+    grads = {"w": (x0 * 0.01).reshape(12, 8), "b": (x0 * 0.02)[:8]}
+    newp = fused_tree_update(params, grads, 0.05, cfgs["b8-paper"],
+                             jax.random.PRNGKey(13), 2, mode="bits")
+    out["gd/tree_update/w"] = digest(newp["w"])
+    out["gd/tree_update/b"] = digest(newp["b"])
+
+
+def main():
+    out = {}
+    golden_round_to_format(out)
+    golden_gemm_presets(out)
+    golden_wire_codecs(out)
+    golden_accum_presets(out)
+    golden_gd(out)
+    print(json.dumps(out, indent=1, sort_keys=True))
+
+
+if __name__ == "__main__":
+    main()
