@@ -25,10 +25,13 @@ import jax.numpy as jnp
 
 from repro.core import gd, rounding
 from repro.kernels import autotune, common as kcommon, ops
+from repro.kernels import flash_attention as fa
 from repro.kernels.qmatmul import qmatmul_batched_prng_p, qmatmul_prng_p
 from repro.kernels.tree_update import fused_tree_update
 from repro.models import ffn
+from repro.models import attention as mattn
 from repro.optim import base as optim_base
+from repro.precision import attention as pattn
 from repro.precision import policy as qpol
 
 # HBM-traffic model (bytes per element, f32 carrier):
@@ -58,6 +61,15 @@ TRAFFIC_FP32 = 12.0
 PACKED_OUT_B_PER_ELT = 1.0
 TRAFFIC_GEMM_PACKED_OUT_RATIO = 9.0 / 12.0
 TRAFFIC_GEMM_PACKED_CHAIN_RATIO = 6.0 / 12.0
+
+# Packed KV-cache decode traffic.  Single-token decode is cache-read-bound
+# (one (Smax, dk+dv) stream per kv head vs a handful of q/out rows); an
+# e4m3/binary8 cache stored as uint8 code words moves 1 B/elt against the
+# bf16 cache's 2 B/elt — 2x decode batch at fixed HBM bandwidth, 4x vs an
+# fp32 cache.
+KV_CACHE_PACKED_B_PER_ELT = 1.0
+TRAFFIC_KV_PACKED_VS_BF16 = 1.0 / 2.0
+TRAFFIC_KV_PACKED_VS_FP32 = 1.0 / 4.0
 
 ITERS = 20
 
@@ -277,6 +289,110 @@ def run(n: int = 1 << 20):
         lambda: bq_fwd(Ab, Bb),
     ])
 
+    # -- rounded flash attention (fwd / bwd / decode, packed KV cache) -----
+    # Interpret-mode Pallas kernels vs the fp32 jnp flash implementation
+    # of the same shape and block tiling; the ratios are the §Quantized-
+    # attention slowdown table in EXPERIMENTS.md.
+    Ba, H, KVh, Sa, hd = 1, 4, 2, 256, 64
+    ablk = 128
+    ka = jax.random.fold_in(key, 10)
+    q4 = jax.random.normal(ka, (Ba, Sa, H, hd), jnp.float32) * 0.1
+    k4 = jax.random.normal(jax.random.fold_in(ka, 1), (Ba, Sa, KVh, hd),
+                           jnp.float32) * 0.1
+    v4 = jax.random.normal(jax.random.fold_in(ka, 2), (Ba, Sa, KVh, hd),
+                           jnp.float32) * 0.1
+    do4 = jnp.ones_like(q4)
+    a_scale = 1.0 / hd ** 0.5
+    pol_attn = qpol.get_policy("binary8-paper-attn")
+    specs = pattn.attn_specs(pol_attn)
+    words_a = kcommon.derive_seed(key, 7)
+    seeds_f = pattn._site_seeds(
+        words_a, Ba * H,
+        (qpol.TAG_ATTN_QK, qpol.TAG_ATTN_AV, qpol.TAG_ATTN_OUT))
+    q3 = q4.transpose(0, 2, 1, 3).reshape(Ba * H, Sa, hd)
+    k3 = k4.transpose(0, 2, 1, 3).reshape(Ba * KVh, Sa, hd)
+    v3 = v4.transpose(0, 2, 1, 3).reshape(Ba * KVh, Sa, hd)
+    akw = dict(scale=a_scale, n_heads=H, n_kv=KVh, causal=True,
+               q_block=ablk, kv_block=ablk)
+
+    flash_fp32 = jax.jit(lambda q_, k_, v_: mattn.flash_attention(
+        q_, k_, v_, a_scale, causal=True, q_block=ablk, kv_block=ablk))
+    qflash_fwd = jax.jit(lambda q_, k_, v_: fa.flash_fwd_p(
+        q_, k_, v_, seeds_f, specs, **akw))
+
+    # backward: residuals precomputed, so the timed body is the two bwd
+    # kernels alone; the fp32 baseline is the flash VJP application
+    out3, m3, l3 = jax.block_until_ready(qflash_fwd(q3, k3, v3))
+    d3 = jnp.sum(jnp.ones_like(out3) * out3, axis=-1)
+    w_qk = qpol.fold_words(words_a, qpol.TAG_ATTN_QK)
+    w_av = qpol.fold_words(words_a, qpol.TAG_ATTN_AV)
+    s_qk = qpol.slice_words(w_qk, Ba * H)
+    seeds_dq = jnp.concatenate(
+        [s_qk, qpol.slice_words(qpol.fold_words(w_qk, qpol.SITE_DGRAD),
+                                Ba * H)], axis=1)
+    seeds_dkv = jnp.concatenate(
+        [s_qk, qpol.slice_words(qpol.fold_words(w_qk, qpol.SITE_WGRAD),
+                                Ba * H),
+         qpol.slice_words(qpol.fold_words(w_av, qpol.SITE_DGRAD),
+                          Ba * H)], axis=1)
+
+    @jax.jit
+    def qflash_bwd(q_, k_, v_, do_):
+        dq = fa.flash_bwd_dq_p(q_, k_, v_, do_, m3, l3, d3, seeds_dq,
+                               pol_attn.attn_qk, pol_attn.attn_qk, **akw)
+        dk_, dv_ = fa.flash_bwd_dkv_p(q_, k_, v_, do_, m3, l3, d3,
+                                      seeds_dkv, pol_attn.attn_qk,
+                                      pol_attn.attn_qk, pol_attn.attn_av,
+                                      **akw)
+        return dq, dk_, dv_
+
+    do3 = jnp.ones_like(out3)
+    _, flash_vjp = jax.vjp(lambda q_, k_, v_: flash_fp32(q_, k_, v_),
+                           q4, k4, v4)
+    flash_vjp = jax.jit(flash_vjp)
+
+    # decode: one new token over a 1024-row cache, float vs packed codes
+    Smax, G = 1024, H // KVh
+    dkw = dict(scale=a_scale, kv_block=256)
+    qd = jax.random.normal(jax.random.fold_in(ka, 3), (Ba * KVh, G, hd),
+                           jnp.float32) * 0.1
+    kv_spec = pattn.kv_cache_spec(pol_attn)
+    kc_raw = jax.random.normal(jax.random.fold_in(ka, 4),
+                               (Ba * KVh, Smax, hd), jnp.float32) * 0.1
+    vc_raw = jax.random.normal(jax.random.fold_in(ka, 5),
+                               (Ba * KVh, Smax, hd), jnp.float32) * 0.1
+    kv_grid = rounding.spec(kv_spec.fmt, "rn")
+    kc = kv_grid(kc_raw)        # cache values on the e4m3 grid
+    vc = kv_grid(vc_raw)
+    kc_p = kcommon.pack_block(kc, kv_spec.fmt)
+    vc_p = kcommon.pack_block(vc, kv_spec.fmt)
+    seeds_d = pattn._site_seeds(
+        words_a, Ba * KVh,
+        (qpol.TAG_ATTN_QK, qpol.TAG_ATTN_AV, qpol.TAG_ATTN_OUT))
+    dlen = jnp.int32(Smax)
+    qdecode = jax.jit(lambda q_, k_, v_: fa.flash_decode_p(
+        q_, k_, v_, seeds_d, dlen, specs, **dkw))
+    qdecode_packed = jax.jit(lambda q_, k_, v_: fa.flash_decode_p(
+        q_, k_, v_, seeds_d, dlen, specs, kv_fmt=kv_spec.fmt, **dkw))
+
+    def sdpa_decode(q_, k_, v_):
+        s = jnp.einsum("bgd,bsd->bgs", q_, k_) * a_scale
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bgs,bsd->bgd", p, v_)
+
+    sdpa_decode = jax.jit(sdpa_decode)
+
+    (us_flash32, us_qattn_fwd, us_qattn_bwd, us_vjp32, us_qdec,
+     us_qdec_packed, us_dec32) = _time_many([
+         lambda: flash_fp32(q4, k4, v4),
+         lambda: qflash_fwd(q3, k3, v3),
+         lambda: qflash_bwd(q3, k3, v3, do3),
+         lambda: flash_vjp(do4),
+         lambda: qdecode(qd, kc, vc),
+         lambda: qdecode_packed(qd, kc_p, vc_p),
+         lambda: sdpa_decode(qd, kc, vc),
+     ])
+
     melt = n / 1e6
     rows = [
         ("kernel/update_fp32_us_per_Melt", us_fp32 / melt, 1.0, ITERS),
@@ -352,5 +468,24 @@ def run(n: int = 1 << 20):
          TRAFFIC_GEMM_PACKED_OUT_RATIO, 0),
         ("kernel/qmatmul_packed_chain_traffic_ratio_vs_fp32", 0.0,
          TRAFFIC_GEMM_PACKED_CHAIN_RATIO, 0),
+        # rounded flash attention (binary8-SR qk/av/out sites) vs the fp32
+        # jnp flash of the same shape/tiling — §Quantized attention rows
+        ("kernel/qattn_flash_fwd_us", us_qattn_fwd,
+         us_qattn_fwd / us_flash32, ITERS),
+        ("kernel/qattn_flash_bwd_us", us_qattn_bwd,
+         us_qattn_bwd / us_vjp32, ITERS),
+        # single-token decode over a 1024-row cache: rounded kernel on the
+        # float e4m3-grid cache, and on the uint8 packed cache (decode on
+        # load in-kernel), both vs the fp32 jnp sdpa of the same shape
+        ("kernel/qattn_decode_us", us_qdec, us_qdec / us_dec32, ITERS),
+        ("kernel/qattn_decode_packed_us", us_qdec_packed,
+         us_qdec_packed / us_dec32, ITERS),
+        # packed KV-cache HBM accounting (see constants above)
+        ("kernel/kv_cache_packed_B_per_elt", 0.0,
+         KV_CACHE_PACKED_B_PER_ELT, 0),
+        ("kernel/kv_cache_traffic_ratio_vs_bf16", 0.0,
+         TRAFFIC_KV_PACKED_VS_BF16, 0),
+        ("kernel/kv_cache_traffic_ratio_vs_fp32", 0.0,
+         TRAFFIC_KV_PACKED_VS_FP32, 0),
     ]
     return rows

@@ -19,7 +19,7 @@ from repro.models import build_model
 
 
 def run(arch: str, *, reduced: bool, batch: int, prompt_len: int, gen: int,
-        seed: int = 0, gemm_policy: str = None):
+        seed: int = 0, gemm_policy: str = None, kv_cache_fmt: str = None):
     cfg = get_config(arch)
     if reduced:
         cfg = reduce_cfg(cfg)
@@ -27,6 +27,16 @@ def run(arch: str, *, reduced: bool, batch: int, prompt_len: int, gen: int,
         # quantized serving (eq. 8a at inference): prefill-scan and decode
         # both honor the policy — including the absorbed-MLA decode path
         cfg = dataclasses.replace(cfg, gemm_policy=gemm_policy)
+    if kv_cache_fmt is not None:
+        # packed low-precision KV cache: appended k/v round onto the fmt
+        # grid and are stored as code words the decode kernel unpacks on
+        # load (1 B/elt in HBM for 8-bit grids)
+        from repro.precision import policy as QP
+        base = QP.resolve_policy(cfg.gemm_policy) or QP.PRESETS["fp32"]
+        pol = dataclasses.replace(
+            base, kv_cache_fmt=QP._check_kv_fmt(kv_cache_fmt,
+                                                base.kv_cache_packed))
+        cfg = dataclasses.replace(cfg, gemm_policy=pol)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
 
@@ -106,10 +116,15 @@ def main():
     ap.add_argument("--gemm-policy", default=None, choices=sorted(PRESETS),
                     help="quantized-GEMM precision policy for prefill and "
                          "decode (default: full-precision GEMMs)")
+    ap.add_argument("--kv-cache-fmt", default=None,
+                    help="KV-cache storage spec (e.g. 'e4m3-sr', "
+                         "'binary8-rn'): appended k/v round onto this grid "
+                         "and the cache is stored packed (uint8 codes); "
+                         "overrides the policy's kv_cache_fmt")
     args = ap.parse_args()
     run(args.arch, reduced=args.reduced, batch=args.batch,
         prompt_len=args.prompt_len, gen=args.gen,
-        gemm_policy=args.gemm_policy)
+        gemm_policy=args.gemm_policy, kv_cache_fmt=args.kv_cache_fmt)
 
 
 if __name__ == "__main__":

@@ -14,7 +14,9 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import common as KC
 from repro.models import layers as L
+from repro.precision import attention as PA
 from repro.precision import policy as QP
 
 
@@ -149,14 +151,24 @@ def attn_apply(params, x, positions, cfg, *, causal=True,
                cache: Optional[KVCache] = None,
                positions3=None,
                return_kv: bool = False,
+               cache_len: Optional[int] = None,
                quant=None) -> Tuple[jax.Array, Optional[KVCache]]:
     """x: (B, S, D). With ``cache`` given, S is the new-token count (decode).
     ``quant``: optional QuantCtx — routes the q/k/v/o projections through
-    the rounded-GEMM path (repro.precision)."""
+    the rounded-GEMM path, the attention op itself through the rounded
+    flash kernels (policy attn_qk/attn_av/attn_out sites), and KV-cache
+    appends through the ``kv_cache_fmt`` storage grid (optionally packed).
+    ``cache_len``: capacity of the cache emitted under ``return_kv`` —
+    decode appends past S need it, since ``dynamic_update_slice`` clamps
+    (and silently overwrites) at an exhausted capacity."""
     B, S, D = x.shape
     hd = cfg.resolved_head_dim
     nh, nkv = cfg.n_heads, cfg.n_kv_heads
     dtype = x.dtype
+    scale = 1.0 / hd ** 0.5
+    pol = quant.policy if quant is not None else None
+    kv_fmt = pol.kv_cache_fmt if pol is not None else None
+    kv_packed = kv_fmt is not None and pol.kv_cache_packed
 
     q = L.qdense(x, params["wq"], quant, QP.TAG_ATTN_Q).reshape(B, S, nh, hd)
     k = L.qdense(x, params["wk"], quant, QP.TAG_ATTN_K).reshape(B, S, nkv, hd)
@@ -166,22 +178,50 @@ def attn_apply(params, x, positions, cfg, *, causal=True,
     if cache is not None:
         # decode: append new k/v at cache.length, attend to the full prefix
         start = cache.length
+        k_st = PA.kv_store(k, quant, pos0=start, stream=0)
+        v_st = PA.kv_store(v, quant, pos0=start, stream=1)
         k_all = jax.lax.dynamic_update_slice(
-            cache.k, k.astype(cache.k.dtype), (0, start, 0, 0))
+            cache.k, k_st.astype(cache.k.dtype), (0, start, 0, 0))
         v_all = jax.lax.dynamic_update_slice(
-            cache.v, v.astype(cache.v.dtype), (0, start, 0, 0))
+            cache.v, v_st.astype(cache.v.dtype), (0, start, 0, 0))
         Skv = k_all.shape[1]
-        k_pos = jnp.arange(Skv)
-        valid = k_pos[None, :] < (start + S)
-        if cfg.sliding_window:
-            valid = valid & (k_pos[None, :] > start + S - 1 - cfg.sliding_window)
-        mask = jnp.broadcast_to(valid[:, None, :], (B, S, Skv))
-        out = _sdpa(q, k_all.astype(dtype), v_all.astype(dtype), mask,
-                    1.0 / hd ** 0.5)
         new_cache = KVCache(k=k_all, v=v_all, length=start + S)
+        if S == 1 and pol is not None and not pol.attn_identity:
+            # single-token decode through the Pallas flash-decode kernel:
+            # packed caches are decoded on load, in-kernel
+            out = PA.qattn_decode(
+                q, k_all, v_all, start + S, quant, scale=scale,
+                window=cfg.sliding_window,
+                kv_fmt=PA.kv_cache_spec(pol).fmt if kv_packed else None,
+                kv_block=getattr(cfg, "attn_kv_block", 1024))
+        else:
+            if kv_packed:
+                kv_spec = PA.kv_cache_spec(pol)
+                k_f = KC.unpack_block(k_all, kv_spec.fmt)
+                v_f = KC.unpack_block(v_all, kv_spec.fmt)
+            else:
+                k_f, v_f = k_all, v_all
+            # per-row positions: appended tokens stay causal *within* the
+            # chunk, and the sliding-window lower bound moves with each row
+            # (a single chunk-level bound would let appended tokens attend
+            # to each other acausally)
+            q_pos = start + jnp.arange(S)
+            k_pos = jnp.arange(Skv)
+            valid = k_pos[None, :] <= q_pos[:, None]
+            if cfg.sliding_window:
+                valid = valid & (k_pos[None, :]
+                                 > q_pos[:, None] - cfg.sliding_window)
+            mask = jnp.broadcast_to(valid[None], (B, S, Skv))
+            out = _sdpa(q, k_f.astype(dtype), v_f.astype(dtype), mask,
+                        scale)
     else:
-        if getattr(cfg, "attn_impl", "flash") == "flash":
-            out = flash_attention(q, k, v, 1.0 / hd ** 0.5, causal=causal,
+        if pol is not None and not pol.attn_sites_identity:
+            out = PA.qattention(q, k, v, quant, scale=scale, causal=causal,
+                                window=cfg.sliding_window,
+                                q_block=getattr(cfg, "attn_q_block", 1024),
+                                kv_block=getattr(cfg, "attn_kv_block", 1024))
+        elif getattr(cfg, "attn_impl", "flash") == "flash":
+            out = flash_attention(q, k, v, scale, causal=causal,
                                   window=cfg.sliding_window,
                                   q_block=getattr(cfg, "attn_q_block", 1024),
                                   kv_block=getattr(cfg, "attn_kv_block", 1024))
@@ -191,11 +231,25 @@ def attn_apply(params, x, positions, cfg, *, causal=True,
             else:
                 m = jnp.ones((S, S), bool)
             mask = jnp.broadcast_to(m[None], (B, S, S))
-            out = _sdpa(q, k, v, mask, 1.0 / hd ** 0.5)
+            out = _sdpa(q, k, v, mask, scale)
         new_cache = None
-        if return_kv:   # prefill: emit the cache this pass produced
-            new_cache = KVCache(k=k.astype(jnp.bfloat16),
-                                v=v.astype(jnp.bfloat16),
+        if return_kv:   # prefill: emit the cache this pass produced,
+            # padded to an explicit capacity — an unpadded (B, S, ...)
+            # cache makes the next decode's update_slice clamp at start=S
+            # and silently overwrite the last prefill token
+            cap = S if cache_len is None else int(cache_len)
+            if cap < S:
+                raise ValueError(
+                    f"cache_len={cap} is smaller than the prefill "
+                    f"length {S}")
+            if kv_fmt is not None:
+                k_st = PA.kv_store(k, quant, pos0=0, stream=0)
+                v_st = PA.kv_store(v, quant, pos0=0, stream=1)
+            else:
+                k_st = k.astype(jnp.bfloat16)
+                v_st = v.astype(jnp.bfloat16)
+            pad = ((0, 0), (0, cap - S), (0, 0), (0, 0))
+            new_cache = KVCache(k=jnp.pad(k_st, pad), v=jnp.pad(v_st, pad),
                                 length=jnp.full((), S, jnp.int32))
 
     y = L.qdense(out.reshape(B, S, nh * hd), params["wo"], quant,
@@ -225,12 +279,28 @@ def cross_attn_apply(params, x, enc_out, cfg, quant=None):
                     QP.TAG_CROSS_O)
 
 
+def cache_dtype(cfg, dtype=jnp.bfloat16):
+    """Storage dtype the policy dictates for KV caches: packed code words
+    (uint8/uint16) for a packed ``kv_cache_fmt``, float32 grid values for
+    an unpacked one, else the caller's ``dtype``."""
+    pol = QP.resolve_policy(getattr(cfg, "gemm_policy", None))
+    spec = PA.kv_cache_spec(pol)
+    if spec is None:
+        return dtype
+    if pol.kv_cache_packed:
+        return KC.pack_dtype(spec.fmt)
+    return jnp.float32
+
+
 def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16,
                n_layers: Optional[int] = None) -> KVCache:
-    """Stacked (over layers) KV cache for decode."""
+    """Stacked (over layers) KV cache for decode.  The storage dtype
+    follows ``cfg.gemm_policy``'s ``kv_cache_fmt`` (packed uint8 cache:
+    4x the decode batch at fixed HBM)."""
     nl = n_layers if n_layers is not None else cfg.n_layers
     hd = cfg.resolved_head_dim
     shape = (nl, batch, max_len, cfg.n_kv_heads, hd)
+    dt = cache_dtype(cfg, dtype)
     # length carried per layer so stacked caches slice/scan uniformly
-    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+    return KVCache(k=jnp.zeros(shape, dt), v=jnp.zeros(shape, dt),
                    length=jnp.zeros((nl,), jnp.int32))

@@ -15,7 +15,9 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import common as KC
 from repro.models import layers as L
+from repro.precision import attention as PA
 from repro.precision import policy as QP
 
 
@@ -131,27 +133,41 @@ def _mla_attend_absorbed(params, q_nope, q_rope, c_kv, k_rope, mask, cfg,
 def mla_apply(params, x, positions, cfg, *, causal=True,
               cache: Optional[MLACache] = None,
               return_kv: bool = False,
+              cache_len: Optional[int] = None,
               quant=None) -> Tuple[jax.Array, Optional[MLACache]]:
     B, S, _ = x.shape
     q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, x, positions, cfg, quant)
+    pol = quant.policy if quant is not None else None
+    kv_fmt = pol.kv_cache_fmt if pol is not None else None
+    kv_packed = kv_fmt is not None and pol.kv_cache_packed
 
     if cache is not None:
         start = cache.length
+        c_st = PA.kv_store(c_kv, quant, pos0=start, stream=0)
+        r_st = PA.kv_store(k_rope, quant, pos0=start, stream=1)
         c_all = jax.lax.dynamic_update_slice(
-            cache.c_kv, c_kv.astype(cache.c_kv.dtype), (0, start, 0))
+            cache.c_kv, c_st.astype(cache.c_kv.dtype), (0, start, 0))
         r_all = jax.lax.dynamic_update_slice(
-            cache.k_rope, k_rope.astype(cache.k_rope.dtype), (0, start, 0))
+            cache.k_rope, r_st.astype(cache.k_rope.dtype), (0, start, 0))
+        if kv_packed:
+            kv_spec = PA.kv_cache_spec(pol)
+            c_all_f = KC.unpack_block(c_all, kv_spec.fmt)
+            r_all_f = KC.unpack_block(r_all, kv_spec.fmt)
+        else:
+            c_all_f, r_all_f = c_all, r_all
         Skv = c_all.shape[1]
-        valid = jnp.arange(Skv)[None, :] < (start + S)
-        mask = jnp.broadcast_to(valid[:, None, :], (B, S, Skv))
+        # per-row positions: appended tokens stay causal within the chunk
+        q_pos = start + jnp.arange(S)
+        valid = jnp.arange(Skv)[None, :] <= q_pos[:, None]
+        mask = jnp.broadcast_to(valid[None], (B, S, Skv))
         if cfg.mla.absorb:
             y = _mla_attend_absorbed(params, q_nope, q_rope,
-                                     c_all.astype(x.dtype),
-                                     r_all.astype(x.dtype), mask, cfg,
+                                     c_all_f.astype(x.dtype),
+                                     r_all_f.astype(x.dtype), mask, cfg,
                                      quant=quant)
         else:
-            y = _mla_attend(params, q_nope, q_rope, c_all.astype(x.dtype),
-                            r_all.astype(x.dtype), mask, cfg, quant)
+            y = _mla_attend(params, q_nope, q_rope, c_all_f.astype(x.dtype),
+                            r_all_f.astype(x.dtype), mask, cfg, quant)
         return y, MLACache(c_kv=c_all, k_rope=r_all, length=start + S)
 
     m_cfg = cfg.mla
@@ -180,18 +196,32 @@ def mla_apply(params, x, positions, cfg, *, causal=True,
         y = _mla_attend(params, q_nope, q_rope, c_kv, k_rope, mask, cfg,
                         quant)
     new_cache = None
-    if return_kv:   # prefill: emit the compressed cache
-        new_cache = MLACache(c_kv=c_kv.astype(jnp.bfloat16),
-                             k_rope=k_rope.astype(jnp.bfloat16),
+    if return_kv:   # prefill: emit the compressed cache, padded to an
+        # explicit capacity so later decode appends never clamp
+        cap = S if cache_len is None else int(cache_len)
+        if cap < S:
+            raise ValueError(
+                f"cache_len={cap} is smaller than the prefill length {S}")
+        if kv_fmt is not None:
+            c_st = PA.kv_store(c_kv, quant, pos0=0, stream=0)
+            r_st = PA.kv_store(k_rope, quant, pos0=0, stream=1)
+        else:
+            c_st = c_kv.astype(jnp.bfloat16)
+            r_st = k_rope.astype(jnp.bfloat16)
+        pad = ((0, 0), (0, cap - S), (0, 0))
+        new_cache = MLACache(c_kv=jnp.pad(c_st, pad),
+                             k_rope=jnp.pad(r_st, pad),
                              length=jnp.full((), S, jnp.int32))
     return y, new_cache
 
 
 def init_mla_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16,
                    n_layers: Optional[int] = None) -> MLACache:
+    from repro.models.attention import cache_dtype
     nl = n_layers if n_layers is not None else cfg.n_layers
     m = cfg.mla
+    dt = cache_dtype(cfg, dtype)
     return MLACache(
-        c_kv=jnp.zeros((nl, batch, max_len, m.kv_lora_rank), dtype),
-        k_rope=jnp.zeros((nl, batch, max_len, m.qk_rope_dim), dtype),
+        c_kv=jnp.zeros((nl, batch, max_len, m.kv_lora_rank), dt),
+        k_rope=jnp.zeros((nl, batch, max_len, m.qk_rope_dim), dt),
         length=jnp.zeros((nl,), jnp.int32))

@@ -140,10 +140,12 @@ class Model:
         return loss, metrics
 
     # ------------------------------------------------------------ prefill --
-    def prefill(self, params, batch, rng=None):
+    def prefill(self, params, batch, rng=None, max_len=None):
         """Full-sequence forward that also *emits the caches* (KV /
         compressed-KV / SSM / RWKV states) plus next-token logits — the
-        inference-prefill step."""
+        inference-prefill step.  ``max_len`` sets the emitted KV caches'
+        capacity (prompt + decode budget); without it the caches are
+        exactly prompt-sized and decode appends would clamp."""
         cfg = self.cfg
         enc_out = None
         if cfg.encoder_layers:
@@ -152,7 +154,7 @@ class Model:
         x, _, caches = transformer.apply_blocks(
             params["blocks"], x, positions, cfg, self.decoder_plan(),
             positions3=positions3, rng=rng, enc_out=enc_out,
-            collect_cache=True)
+            collect_cache=True, cache_len=max_len)
         x = L.rms_norm(x, params["final_norm"])
         next_logits = self._logits(params, x[:, -1:, :],
                                    quant=self._logits_ctx(rng))

@@ -115,7 +115,7 @@ def init_blocks(key, cfg, plan) -> Dict[str, Any]:
 
 # ------------------------------------------------------------ block apply --
 def _apply_attn_block(p, x, positions, cfg, cache, positions3, rkey,
-                      causal=True, collect=False):
+                      causal=True, collect=False, cache_len=None):
     """Returns (x, aux_loss, new_cache).  The block's quantized-GEMM
     context (cfg.gemm_policy + seed words from the per-layer key) is
     derived here and threaded into every weight GEMM below."""
@@ -124,11 +124,13 @@ def _apply_attn_block(p, x, positions, cfg, cache, positions3, rkey,
     if cfg.mla is not None:
         a, new_cache = mla.mla_apply(p["mla"], h, positions, cfg,
                                      causal=causal, cache=cache,
-                                     return_kv=collect, quant=qc)
+                                     return_kv=collect, cache_len=cache_len,
+                                     quant=qc)
     else:
         a, new_cache = attention.attn_apply(
             p["attn"], h, positions, cfg, causal=causal, cache=cache,
-            positions3=positions3, return_kv=collect, quant=qc)
+            positions3=positions3, return_kv=collect, cache_len=cache_len,
+            quant=qc)
     x = x + a
     h2 = L.rms_norm(x, p["norm2"])
     if "moe" in p:
@@ -141,12 +143,13 @@ def _apply_attn_block(p, x, positions, cfg, cache, positions3, rkey,
 
 
 def _apply_dec_attn_block(p, x, positions, cfg, cache, enc_out, key,
-                          collect=False):
+                          collect=False, cache_len=None):
     qc = ctx_for(cfg, key)
     h = L.rms_norm(x, p["norm1"])
     a, new_cache = attention.attn_apply(p["attn"], h, positions, cfg,
                                         causal=True, cache=cache,
-                                        return_kv=collect, quant=qc)
+                                        return_kv=collect,
+                                        cache_len=cache_len, quant=qc)
     x = x + a
     hx = L.rms_norm(x, p["norm_x"])
     x = x + attention.cross_attn_apply(p["cross_attn"], hx, enc_out, cfg,
@@ -200,11 +203,13 @@ def _maybe_remat(fn, cfg):
 
 def apply_blocks(blocks, x, positions, cfg, plan, *, caches=None,
                  positions3=None, rng=None, causal=True, enc_out=None,
-                 collect_cache=False):
+                 collect_cache=False, cache_len=None):
     """Run the whole plan.  Returns (x, total_aux, new_caches).
 
     ``collect_cache=True`` (prefill) makes every block emit the cache its
-    forward pass produced (KV / compressed-KV / SSM state / RWKV state)."""
+    forward pass produced (KV / compressed-KV / SSM state / RWKV state);
+    ``cache_len`` sets the capacity the emitted KV caches are padded to
+    (default: exactly the prefill length — no room for decode appends)."""
     total_aux = jnp.float32(0.0)
     new_caches: Dict[str, List] = {}
     rng = rng if rng is not None else jax.random.PRNGKey(0)
@@ -221,7 +226,7 @@ def apply_blocks(blocks, x, positions, cfg, plan, *, caches=None,
                     lambda p_, x_, c_: _apply_attn_block(
                         p_, x_, positions, cfg, c_, positions3,
                         jax.random.fold_in(seg_rng, occ), causal,
-                        collect_cache), cfg)
+                        collect_cache, cache_len), cfg)
                 x, aux, nc = body(blocks["shared"], x, cache)
                 total_aux += aux
                 if nc is not None:
@@ -238,11 +243,11 @@ def apply_blocks(blocks, x, positions, cfg, plan, *, caches=None,
             if t in ("attn", "attn_dense"):
                 x_, a_, nc = _apply_attn_block(p_, x_, positions, cfg, c_,
                                                positions3, k_, causal,
-                                               collect_cache)
+                                               collect_cache, cache_len)
             elif t == "dec_attn":
                 x_, a_, nc = _apply_dec_attn_block(p_, x_, positions, cfg,
                                                    c_, enc_out, k_,
-                                                   collect_cache)
+                                                   collect_cache, cache_len)
             elif t == "mamba":
                 x_, a_, nc = _apply_mamba_block(p_, x_, cfg, c_, k_,
                                                 collect_cache)

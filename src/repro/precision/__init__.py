@@ -1,4 +1,6 @@
 """Precision policies for quantized-GEMM model execution (paper eq. 8a)."""
+from repro.precision.attention import (kv_cache_spec, kv_store, qattention,
+                                       qattn_decode, round_kv)
 from repro.precision.fused import qdot_act, qffn_glu
 from repro.precision.policy import (PRESETS, QuantCtx, QuantPolicy, ctx_for,
                                     fold_ctx, fold_words, get_policy,
@@ -7,6 +9,7 @@ from repro.precision.policy import (PRESETS, QuantCtx, QuantPolicy, ctx_for,
 
 __all__ = [
     "PRESETS", "QuantCtx", "QuantPolicy", "ctx_for", "fold_ctx",
-    "fold_words", "get_policy", "make_ctx", "make_policy", "qact", "qdot",
-    "qdot_act", "qeinsum", "qffn_glu", "resolve_policy",
+    "fold_words", "get_policy", "kv_cache_spec", "kv_store", "make_ctx",
+    "make_policy", "qact", "qattention", "qattn_decode", "qdot",
+    "qdot_act", "qeinsum", "qffn_glu", "resolve_policy", "round_kv",
 ]

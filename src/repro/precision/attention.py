@@ -1,0 +1,225 @@
+"""Policy wiring for the rounded flash-attention kernel family.
+
+``qattention`` is to `kernels/flash_attention` what ``qdot`` is to
+`kernels/qmatmul`: a differentiable, policy-driven wrapper.  The forward
+runs the Pallas flash kernel with the policy's qk/av/out RoundingSpecs;
+the custom VJP runs the two backward kernels, recomputing the rounded
+logits bit-exactly from the *same* qk seed words (straight-through w.r.t.
+every rounding), with dq/dk rounded on the qk spec and dv on the av spec
+under SITE_DGRAD/SITE_WGRAD folds.  Under ``policy.oracle=True`` every
+call routes to the pure-jnp reference twins instead — bit-identical to
+the interpret-mode kernels inside jit (tests/test_flash_kernels.py), and
+the audit mode that needs no Pallas at all.
+
+Seed discipline: the attention op folds its site tags (TAG_ATTN_QK/AV/
+OUT) straight off the block context words — there is one attention op
+per block, so the site tags double as call-site tags — then derives one
+word pair per (batch, head) row via ``slice_words``, so every head's
+draws are decorrelated and partition-invariant like ``qmatmul_batched``.
+
+``round_kv`` + the pack/unpack helpers implement the KV-cache storage
+site (TAG_ATTN_KV): appended k/v round through ``policy.kv_cache_fmt``
+and are optionally stored as packed code words the decode kernel decodes
+on load.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rounding import RoundingSpec, parse_spec
+from repro.kernels import common
+from repro.kernels import flash_attention as FA
+from repro.precision.policy import (QuantCtx, QuantPolicy, SITE_DGRAD,
+                                    SITE_WGRAD, TAG_ATTN_AV, TAG_ATTN_KV,
+                                    TAG_ATTN_OUT, TAG_ATTN_QK, fold_words,
+                                    slice_words)
+
+
+class _Dims(NamedTuple):
+    """Static attention-call geometry (hashable: custom_vjp nondiff arg)."""
+    n_heads: int
+    n_kv: int
+    scale: float
+    causal: bool
+    window: int
+    q_block: int
+    kv_block: int
+
+
+def attn_specs(policy: QuantPolicy) -> FA.AttnSpecs:
+    return FA.AttnSpecs(policy.attn_qk, policy.attn_av, policy.attn_out)
+
+
+def _site_seeds(words, n: int, tags) -> jax.Array:
+    """Stack per-row word pairs for each site tag: (2,) -> (n, 2·len(tags))
+    with layout [t0w0 t0w1 t1w0 t1w1 ...] — the kernels' seeds operand."""
+    return jnp.concatenate(
+        [slice_words(fold_words(words, t), n) for t in tags], axis=1)
+
+
+def kv_cache_spec(policy: Optional[QuantPolicy]) -> Optional[RoundingSpec]:
+    """The KV-cache storage RoundingSpec, or None when the cache is fp."""
+    if policy is None or policy.kv_cache_fmt is None:
+        return None
+    return parse_spec(policy.kv_cache_fmt)
+
+
+def round_kv(x, spec: Optional[RoundingSpec], words, pos0=0,
+             stream: int = 0):
+    """Round an appended k/v tensor onto the cache grid (float32 grid
+    values out).  ``x`` is (B, S, ...) with the token axis second; bits
+    are counter-keyed by (absolute token position, flat feature index)
+    with ``pos0`` the position of the first appended row — so chunked
+    prefill and token-by-token appends draw *identical* streams for the
+    same cache cell, and the cache contents are append-pattern-invariant."""
+    if spec is None or spec.is_identity:
+        return x.astype(jnp.float32)
+    bits = None
+    if spec.stochastic:
+        B, S = x.shape[0], x.shape[1]
+        F = x.size // (B * S)
+        bits = common.counter_bits_reduced(
+            words[0], words[1], (S, B * F), spec.rand_bits,
+            row0=jnp.asarray(pos0, jnp.int32), stream=stream)
+        bits = jnp.swapaxes(bits.reshape((S, B) + x.shape[2:]), 0, 1)
+    return spec(x.astype(jnp.float32), bits=bits)
+
+
+# ---------------------------------------------------------------------------
+# Train/prefill attention (differentiable).
+# ---------------------------------------------------------------------------
+def _flash_fwd_call(policy: QuantPolicy, dims: _Dims, q3, k3, v3, words):
+    seeds = _site_seeds(words, q3.shape[0],
+                        (TAG_ATTN_QK, TAG_ATTN_AV, TAG_ATTN_OUT))
+    fn = FA.flash_fwd_reference if policy.oracle else FA.flash_fwd_p
+    return fn(q3, k3, v3, seeds, attn_specs(policy), scale=dims.scale,
+              n_heads=dims.n_heads, n_kv=dims.n_kv, causal=dims.causal,
+              window=dims.window, q_block=dims.q_block,
+              kv_block=dims.kv_block)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _qflash(policy: QuantPolicy, dims: _Dims, q3, k3, v3, words):
+    out, _, _ = _flash_fwd_call(policy, dims, q3, k3, v3, words)
+    return out
+
+
+def _qflash_fwd(policy, dims, q3, k3, v3, words):
+    out, m, l = _flash_fwd_call(policy, dims, q3, k3, v3, words)
+    return out, (q3, k3, v3, out, m, l, words)
+
+
+def _qflash_bwd(policy, dims, res, g):
+    q3, k3, v3, out, m, l, words = res
+    BH = q3.shape[0]
+    G = dims.n_heads // dims.n_kv
+    do = g.astype(jnp.float32)
+    d = jnp.sum(do * out, axis=-1)
+    w_qk = fold_words(words, TAG_ATTN_QK)
+    w_av = fold_words(words, TAG_ATTN_AV)
+    seeds_qk = slice_words(w_qk, BH)
+    kw = dict(scale=dims.scale, n_heads=dims.n_heads, n_kv=dims.n_kv,
+              causal=dims.causal, window=dims.window,
+              q_block=dims.q_block, kv_block=dims.kv_block)
+    seeds_dq = jnp.concatenate(
+        [seeds_qk, slice_words(fold_words(w_qk, SITE_DGRAD), BH)], axis=1)
+    dq_fn = FA.flash_bwd_dq_reference if policy.oracle \
+        else FA.flash_bwd_dq_p
+    dq = dq_fn(q3, k3, v3, do, m, l, d, seeds_dq,
+               policy.attn_qk, policy.attn_qk, **kw)
+    seeds_dkv = jnp.concatenate(
+        [seeds_qk, slice_words(fold_words(w_qk, SITE_WGRAD), BH),
+         slice_words(fold_words(w_av, SITE_DGRAD), BH)], axis=1)
+    dkv_fn = FA.flash_bwd_dkv_reference if policy.oracle \
+        else FA.flash_bwd_dkv_p
+    dk_h, dv_h = dkv_fn(q3, k3, v3, do, m, l, d, seeds_dkv,
+                        policy.attn_qk, policy.attn_qk, policy.attn_av,
+                        **kw)
+    # GQA group-sum (full precision, like every accumulate): per-query-
+    # head grads (B·H, Skv, ·) -> per-kv-head (B·KV, Skv, ·)
+    b = BH // dims.n_heads
+    dk3 = dk_h.reshape(b, dims.n_kv, G, *dk_h.shape[1:]).sum(axis=2)
+    dv3 = dv_h.reshape(b, dims.n_kv, G, *dv_h.shape[1:]).sum(axis=2)
+    return (dq, dk3.reshape(k3.shape), dv3.reshape(v3.shape),
+            np.zeros((2,), jax.dtypes.float0))
+
+
+_qflash.defvjp(_qflash_fwd, _qflash_bwd)
+
+
+def qattention(q, k, v, quant: Optional[QuantCtx], *, scale,
+               causal: bool = True, window: int = 0, q_block: int = 512,
+               kv_block: int = 512):
+    """Policy-rounded differentiable flash attention.
+
+    q: (B, Sq, H, dk); k/v: (B, Skv, KV, dk/dv), H a multiple of KV
+    (grouped GQA, heads of one group contiguous).  Seed site tags are
+    folded off ``quant.words`` directly — one attention op per block.
+    """
+    B, Sq, H, dk = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    policy, words = quant
+    dims = _Dims(H, KV, float(scale), bool(causal), int(window),
+                 int(q_block), int(kv_block))
+    q3 = q.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(B * H, Sq, dk)
+    k3 = k.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(B * KV, Skv, dk)
+    v3 = v.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(B * KV, Skv, dv)
+    out3 = _qflash(policy, dims, q3, k3, v3, words)
+    out = out3.reshape(B, H, Sq, dv).transpose(0, 2, 1, 3)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Single-token decode over the (possibly packed) KV cache.
+# ---------------------------------------------------------------------------
+def qattn_decode(q, k_cache, v_cache, length, quant: QuantCtx, *, scale,
+                 window: int = 0, kv_fmt=None, kv_block: int = 512):
+    """Rounded decode attention for one new token.
+
+    q: (B, 1, H, dk); caches: (B, S_max, KV, dk/dv) — float values, or
+    packed code words of ``kv_fmt`` (decoded on load in-kernel).
+    ``length`` counts valid cache rows *including* the new token.
+    """
+    B, S1, H, dk = q.shape
+    if S1 != 1:
+        raise ValueError(f"qattn_decode is single-token (got Sq={S1})")
+    Smax, KV = k_cache.shape[1], k_cache.shape[2]
+    dv = v_cache.shape[-1]
+    G = H // KV
+    policy, words = quant
+    q3 = q.astype(jnp.float32).reshape(B, H, dk).reshape(B * KV, G, dk)
+    k3 = jnp.swapaxes(k_cache, 1, 2).reshape(B * KV, Smax, dk)
+    v3 = jnp.swapaxes(v_cache, 1, 2).reshape(B * KV, Smax, dv)
+    seeds = _site_seeds(words, B * KV,
+                        (TAG_ATTN_QK, TAG_ATTN_AV, TAG_ATTN_OUT))
+    fn = FA.flash_decode_reference if policy.oracle else FA.flash_decode_p
+    out3 = fn(q3, k3, v3, seeds, length, attn_specs(policy), scale=scale,
+              window=window, kv_block=kv_block, kv_fmt=kv_fmt)
+    return out3.reshape(B, 1, H, dv).astype(q.dtype)
+
+
+def kv_store(x, quant: Optional[QuantCtx], pos0=0, stream: int = 0, *,
+             packed: Optional[bool] = None):
+    """Round (+ optionally pack) a k/v tensor for cache storage.
+
+    ``x``: (B, S, ...) token-major append; ``pos0``: absolute position of
+    its first row (see ``round_kv``); ``stream`` decorrelates the k and v
+    (or c_kv and k_rope) draws.  Returns the tensor ready for
+    ``dynamic_update_slice`` into the cache: packed code words when the
+    policy stores a packed cache, float grid values otherwise;
+    identity-policy passthrough keeps the input dtype.
+    """
+    spec = kv_cache_spec(quant.policy) if quant is not None else None
+    if spec is None:
+        return x
+    words = fold_words(quant.words, TAG_ATTN_KV)
+    g = round_kv(x, spec, words, pos0=pos0, stream=stream)
+    if packed if packed is not None else quant.policy.kv_cache_packed:
+        return common.pack_block(g, spec.fmt)
+    return g

@@ -79,6 +79,12 @@ class AuditReport:
     reached: FrozenSet[str]       # param-leaf paths reaching a dot_general
     n_dot_general: int            # distinct dot_general equations seen
     n_quantized_calls: int        # distinct pallas_call equations seen
+    n_act_dot_general: int = 0    # dot_generals with NO tainted operand —
+    #   activation-activation contractions (attention logits/AV, state
+    #   recurrences).  The attention-site policies exist to retire these:
+    #   with `binary8-paper-attn` active, the flash prefill's QK^T/AV
+    #   contractions move inside a pallas_call and this count drops
+    #   (tests/test_quant_coverage.py asserts the delta).
 
     def offenders(self, allowed: FrozenSet[str] = ALLOWED_FP32_LEAVES
                   ) -> FrozenSet[str]:
@@ -119,6 +125,7 @@ class _Walker:
         self.reached: set = set()
         self._dot_eqns: set = set()      # by id(): fixpoint reruns must not
         self._pallas_eqns: set = set()   # double-count equations
+        self._act_dot_eqns: set = set()
 
     # -- generic walk ------------------------------------------------------
     def walk(self, jaxpr: core.Jaxpr,
@@ -148,6 +155,8 @@ class _Walker:
                 outs = [EMPTY] * len(eqn.outvars)
             elif name == "dot_general":
                 self._dot_eqns.add(id(eqn))
+                if not union:
+                    self._act_dot_eqns.add(id(eqn))
                 self.reached |= union
                 outs = [union] * len(eqn.outvars)
             elif name == "scan":
@@ -250,7 +259,8 @@ def audit_fn(fn: Callable, params, *args) -> AuditReport:
     w.walk(closed.jaxpr, taints)
     return AuditReport(reached=frozenset(w.reached),
                        n_dot_general=len(w._dot_eqns),
-                       n_quantized_calls=len(w._pallas_eqns))
+                       n_quantized_calls=len(w._pallas_eqns),
+                       n_act_dot_general=len(w._act_dot_eqns))
 
 
 def assert_coverage(report: AuditReport,

@@ -67,6 +67,10 @@ TAG_RWKV_CM_K, TAG_RWKV_CM_V, TAG_RWKV_CM_R = 28, 29, 30
 # MoE stacked-expert einsums (batched qeinsum; the expert index is a
 # per-batch-slice fold *inside* qeinsum, not part of the tag)
 TAG_MOE_GATE, TAG_MOE_UP, TAG_MOE_DOWN, TAG_MOE_ACT = 32, 33, 34, 35
+# flash-attention rounding sites (precision/attention.py folds these off
+# the block context words directly — one attention op per block, so the
+# site tags double as the call-site tags) + the KV-cache store site
+TAG_ATTN_QK, TAG_ATTN_AV, TAG_ATTN_OUT, TAG_ATTN_KV = 36, 37, 38, 39
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,6 +97,17 @@ class QuantPolicy:
     bn: Optional[int] = None
     bk: Optional[int] = None
     packed: bool = False
+    # flash-attention sites (precision/attention.py): the QK^T logits,
+    # each kv-block's P·V partial product, and the normalized output.
+    attn_qk: RoundingSpec = IDENTITY
+    attn_av: RoundingSpec = IDENTITY
+    attn_out: RoundingSpec = IDENTITY
+    # KV-cache storage: a canonical spec name ("e4m3-sr", "binary8-rn",
+    # ...) — appended k/v round through it before entering the cache;
+    # with kv_cache_packed the cache holds uint8/uint16 code words
+    # (pack_block) instead of float32 grid values.
+    kv_cache_fmt: Optional[str] = None
+    kv_cache_packed: bool = True
 
     @property
     def gemm_identity(self) -> bool:
@@ -100,8 +115,20 @@ class QuantPolicy:
                 and self.wgrad.is_identity)
 
     @property
+    def attn_sites_identity(self) -> bool:
+        """The three in-op rounding sites alone (routing: an identity-site
+        policy with only a rounded KV cache keeps the jnp flash prefill)."""
+        return (self.attn_qk.is_identity and self.attn_av.is_identity
+                and self.attn_out.is_identity)
+
+    @property
+    def attn_identity(self) -> bool:
+        return self.attn_sites_identity and self.kv_cache_fmt is None
+
+    @property
     def is_identity(self) -> bool:
-        return self.gemm_identity and self.act.is_identity
+        return (self.gemm_identity and self.act.is_identity
+                and self.attn_identity)
 
 
 _SITE_ATTR = {SITE_FWD: "fwd", SITE_DGRAD: "dgrad", SITE_WGRAD: "wgrad",
@@ -119,17 +146,34 @@ def _check_gemm_spec(s: RoundingSpec, site: str) -> RoundingSpec:
     return s
 
 
+def _check_kv_fmt(name: Optional[str], packed: bool) -> Optional[str]:
+    if name is None:
+        return None
+    s = _check_gemm_spec(parse_spec(name), "kv_cache")
+    if s.is_identity:
+        return None
+    if packed:
+        common.pack_spec(s.fmt)          # raises for unpackable grids
+    return name
+
+
 def make_policy(fwd=None, dgrad=None, wgrad=None, act=None, *,
                 fmt=None, mode: str = "sr", eps: float = 0.0,
                 oracle: bool = False, rand_bits: int = 32,
-                packed: bool = False) -> QuantPolicy:
+                packed: bool = False, attn=None,
+                kv_cache_fmt: Optional[str] = None,
+                kv_cache_packed: bool = True) -> QuantPolicy:
     """Build a QuantPolicy; ``fmt`` fills every unspecified GEMM site.
 
     ``signed_sr_eps`` is rejected for every site: the GEMM kernels have no
     bias-direction operand, and ``qact``'s straight-through rounding never
     supplies one either.  ``rand_bits`` applies to the fmt-filled sites
-    (few-random-bits SR); explicitly passed specs carry their own."""
+    (few-random-bits SR); explicitly passed specs carry their own.
+    ``attn`` fills all three flash-attention sites (qk/av/out) with one
+    spec; ``kv_cache_fmt`` is the KV-cache storage spec name (validated
+    here — packable grid required when ``kv_cache_packed``)."""
     default = spec(fmt, mode, eps, rand_bits) if fmt is not None else IDENTITY
+    attn_s = _check_gemm_spec(attn if attn is not None else IDENTITY, "attn")
     pol = QuantPolicy(
         fwd=_check_gemm_spec(fwd if fwd is not None else default, "fwd"),
         dgrad=_check_gemm_spec(dgrad if dgrad is not None else default,
@@ -137,7 +181,10 @@ def make_policy(fwd=None, dgrad=None, wgrad=None, act=None, *,
         wgrad=_check_gemm_spec(wgrad if wgrad is not None else default,
                                "wgrad"),
         act=_check_gemm_spec(act if act is not None else IDENTITY, "act"),
-        oracle=oracle, packed=packed)
+        oracle=oracle, packed=packed,
+        attn_qk=attn_s, attn_av=attn_s, attn_out=attn_s,
+        kv_cache_fmt=_check_kv_fmt(kv_cache_fmt, kv_cache_packed),
+        kv_cache_packed=kv_cache_packed)
     return pol
 
 
@@ -170,6 +217,15 @@ PRESETS = {
     "binary8-sr": make_policy(fmt="binary8", mode="sr",
                               act=spec("binary8", "sr")),
     "bf16-sr": make_policy(fmt="bfloat16", mode="sr"),
+    # the paper regime extended to the attention op: rounded QK^T/AV/out
+    # sites plus an e4m3-SR KV cache stored packed (1 B/elt in HBM)
+    "binary8-paper-attn": make_policy(fmt="binary8", mode="sr",
+                                      act=spec("binary8", "sr"),
+                                      attn=spec("binary8", "sr"),
+                                      kv_cache_fmt="e4m3-sr"),
+    "e4m3-attn": make_policy(fmt="e4m3", mode="sr",
+                             attn=spec("e4m3", "sr"),
+                             kv_cache_fmt="e4m3-sr"),
 }
 
 

@@ -1,0 +1,257 @@
+"""Model-layer attention equivalence + the two cached-decode regressions.
+
+* ``flash_attention`` vs ``_sdpa`` over the mask vocabulary the model
+  emits: GQA group sizes (MHA / grouped / MQA), sliding windows that
+  cross and undercut block boundaries (fully-masked (row, block) pairs
+  inside the kernel sweep), ragged non-block-multiple lengths, and the
+  window + non-causal combination.  (A fully-masked *row* is unreachable
+  from this interface — causal self-attention always sees the diagonal —
+  which is exactly why flash's 0-convention vs softmax's uniform-row
+  never diverges here.)
+* **regression (chunked decode)**: appending S>1 tokens to a KV cache in
+  one ``attn_apply``/``mla_apply`` call must match appending them one at
+  a time — the per-row causal/window mask, not a chunk-level one built
+  from ``start + S``.  The caches are compared bitwise (fp32); the
+  attention outputs to one-ulp association noise (XLA contracts the S=3
+  and S=1 einsums in different orders), plus a *bitwise* acausality
+  probe: perturbing a later appended token must leave every earlier
+  row's output bit-identical — under the old chunk-level mask the first
+  appended row attended to the later ones and this probe flips.
+* **regression (prefill capacity)**: ``prefill(..., max_len=cap)`` emits
+  caches padded to ``cap`` so the next ``decode_step``'s
+  ``dynamic_update_slice`` appends instead of clamping onto (and
+  silently overwriting) the last prefill row.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import attention, build_model, mla
+from repro.models.attention import KVCache
+
+KEY = jax.random.PRNGKey(3)
+B = 2
+
+
+def _eq(a, b, msg=""):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=msg)
+
+
+# ------------------------------------------- flash vs sdpa equivalence --
+SWEEP = [
+    # (h, kv, s, causal, window, qb, kb)
+    (4, 4, 32, True, 0, 16, 16),    # MHA, block-multiple
+    (4, 2, 33, True, 0, 16, 16),    # GQA, ragged last q/kv block
+    (4, 1, 29, True, 0, 8, 8),      # MQA, ragged
+    (4, 2, 40, True, 7, 8, 8),      # window < block: fully-masked blocks
+    (4, 2, 40, True, 24, 16, 16),   # window crossing block boundaries
+    (4, 2, 21, False, 0, 16, 16),   # non-causal ragged
+    (4, 2, 26, False, 9, 8, 8),     # window + non-causal combo
+]
+
+
+@pytest.mark.parametrize("h,kv,s,causal,window,qb,kb", SWEEP)
+def test_flash_matches_sdpa(h, kv, s, causal, window, qb, kb):
+    hd = 8
+    kq, kk, kv_ = jax.random.split(jax.random.fold_in(KEY, s + window), 3)
+    q = jax.random.normal(kq, (B, s, h, hd), jnp.float32)
+    k = jax.random.normal(kk, (B, s, kv, hd), jnp.float32)
+    v = jax.random.normal(kv_, (B, s, kv, hd), jnp.float32)
+    scale = 1.0 / hd ** 0.5
+    out = attention.flash_attention(q, k, v, scale, causal=causal,
+                                    window=window, q_block=qb, kv_block=kb)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    m = kpos <= qpos if causal else jnp.ones((s, s), bool)
+    if window:
+        m = m & (kpos > qpos - window)
+    want = attention._sdpa(q, k, v, jnp.broadcast_to(m[None], (B, s, s)),
+                           scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-6)
+
+
+# ------------------------------- regression 1: chunked cached appends --
+@pytest.mark.parametrize("window", [0, 4])
+def test_cached_append_chunk_bitwise_matches_stepwise(window):
+    """S>1 cached decode must equal token-by-token decode bitwise (fp32):
+    the append's mask is per-row causal (and the sliding-window lower
+    bound moves per row), not one chunk-level bound at start + S."""
+    cfg = dataclasses.replace(reduced(get_config("tinyllama-1.1b")),
+                              sliding_window=window)
+    hd = cfg.resolved_head_dim
+    P, S = 5, 3
+    cap = P + S
+    params = attention.attn_init(jax.random.fold_in(KEY, 1), cfg)
+    xs = jax.random.normal(jax.random.fold_in(KEY, 2),
+                           (B, cap, cfg.d_model), jnp.float32) * 0.3
+
+    def fresh():
+        z = jnp.zeros((B, cap, cfg.n_kv_heads, hd), jnp.float32)
+        return KVCache(k=z, v=z, length=jnp.zeros((), jnp.int32))
+
+    @jax.jit
+    def step(cache, x, pos):
+        return attention.attn_apply(params, x, pos, cfg, cache=cache)
+
+    cache = fresh()
+    outs = []
+    for t in range(cap):
+        y, cache = step(cache, xs[:, t:t + 1], jnp.full((B, 1), t))
+        outs.append(y)
+    y_step = jnp.concatenate(outs[P:], axis=1)
+
+    cache_p = fresh()
+    for t in range(P):
+        _, cache_p = step(cache_p, xs[:, t:t + 1], jnp.full((B, 1), t))
+    pos = jnp.broadcast_to(P + jnp.arange(S)[None], (B, S))
+    y_chunk, cache_c = step(cache_p, xs[:, P:], pos)
+
+    _eq(cache_c.k, cache.k, "cache k")
+    _eq(cache_c.v, cache.v, "cache v")
+    assert int(cache_c.length) == cap
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_step),
+                               rtol=1e-5, atol=1e-6,
+                               err_msg="chunked vs stepwise output")
+
+    # bitwise acausality probe (same-shape graphs => bit-identical):
+    # rows 0..S-2 of the chunk must not see the perturbed last row
+    xs_p = xs.at[:, cap - 1].add(1.0)
+    y_pert, _ = step(cache_p, xs_p[:, P:], pos)
+    _eq(y_pert[:, :S - 1], y_chunk[:, :S - 1],
+        "earlier appended rows attended to a later token")
+    assert np.any(np.asarray(y_pert[:, -1]) != np.asarray(y_chunk[:, -1]))
+
+
+def test_mla_cached_append_chunk_bitwise_matches_stepwise():
+    """Same per-row-mask regression for the MLA cached path."""
+    cfg = reduced(get_config("deepseek-v2-236b"))
+    P, S = 4, 3
+    cap = P + S
+    params = mla.mla_init(jax.random.fold_in(KEY, 4), cfg)
+    xs = jax.random.normal(jax.random.fold_in(KEY, 5),
+                           (B, cap, cfg.d_model), jnp.float32) * 0.3
+    m = cfg.mla
+
+    def fresh():
+        return mla.MLACache(
+            c_kv=jnp.zeros((B, cap, m.kv_lora_rank), jnp.float32),
+            k_rope=jnp.zeros((B, cap, m.qk_rope_dim), jnp.float32),
+            length=jnp.zeros((), jnp.int32))
+
+    @jax.jit
+    def step(cache, x, pos):
+        return mla.mla_apply(params, x, pos, cfg, cache=cache)
+
+    cache = fresh()
+    outs = []
+    for t in range(cap):
+        y, cache = step(cache, xs[:, t:t + 1], jnp.full((B, 1), t))
+        outs.append(y)
+    y_step = jnp.concatenate(outs[P:], axis=1)
+
+    cache_p = fresh()
+    for t in range(P):
+        _, cache_p = step(cache_p, xs[:, t:t + 1], jnp.full((B, 1), t))
+    pos = jnp.broadcast_to(P + jnp.arange(S)[None], (B, S))
+    y_chunk, cache_c = step(cache_p, xs[:, P:], pos)
+
+    _eq(cache_c.c_kv, cache.c_kv, "cache c_kv")
+    _eq(cache_c.k_rope, cache.k_rope, "cache k_rope")
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_step),
+                               rtol=1e-5, atol=1e-6,
+                               err_msg="chunked vs stepwise MLA output")
+    xs_p = xs.at[:, cap - 1].add(1.0)
+    y_pert, _ = step(cache_p, xs_p[:, P:], pos)
+    _eq(y_pert[:, :S - 1], y_chunk[:, :S - 1],
+        "earlier appended rows attended to a later token")
+
+
+# ---------------------------- regression 2: prefill-emitted capacity --
+def _kv_caches(caches):
+    return {t: c for t, c in caches.items() if hasattr(c, "length")}
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "deepseek-v2-236b"])
+def test_prefill_return_kv_capacity_then_decode(arch):
+    """prefill(max_len=cap) must emit capacity-cap caches; the following
+    decode_step appends at row P instead of overwriting row P-1."""
+    cfg = reduced(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(KEY)
+    P, GEN = 12, 4
+    tokens = jax.random.randint(jax.random.fold_in(KEY, 6), (B, P), 0,
+                                cfg.vocab_size)
+    _, caches = model.prefill(params, {"tokens": tokens}, rng=KEY,
+                              max_len=P + GEN)
+    token_axis = 2          # stacked caches: (n_layers, B, cap, ...)
+    snaps = {}
+    for t, c in _kv_caches(caches).items():
+        for leaf in c[:-1]:
+            assert leaf.shape[token_axis] == P + GEN, (t, leaf.shape)
+        assert int(np.asarray(c.length).max()) == P
+        snaps[t] = jax.tree.map(lambda a: np.asarray(a[:, :, P - 1]),
+                                tuple(c[:-1]))
+        # the append target is still empty
+        assert not np.any(np.asarray(c[0][:, :, P]))
+
+    _, caches2 = model.decode_step(params, caches, tokens[:, -1:], P)
+    for t, c in _kv_caches(caches2).items():
+        assert int(np.asarray(c.length).max()) == P + 1
+        for leaf, snap in zip(c[:-1], snaps[t]):
+            _eq(leaf[:, :, P - 1], snap,
+                f"{t}: decode overwrote the last prefill row")
+        assert np.any(np.asarray(c[0][:, :, P]))
+
+
+def test_packed_kv_decode_matches_unpacked_rounded_decode():
+    """Packing is lossless on grid values: a decode over the uint8 packed
+    cache must produce the same logits/tokens as one over the float32
+    rounded (unpacked) cache at identical specs."""
+    import repro.precision.policy as QP
+    pol_p = QP.PRESETS["binary8-paper-attn"]
+    pol_u = dataclasses.replace(pol_p, kv_cache_packed=False)
+    base = reduced(get_config("tinyllama-1.1b"))
+    tokens = jax.random.randint(jax.random.fold_in(KEY, 8), (B, 1), 0,
+                                base.vocab_size)
+    logits = {}
+    for name, pol in (("packed", pol_p), ("unpacked", pol_u)):
+        cfg = dataclasses.replace(base, gemm_policy=pol)
+        model = build_model(cfg)
+        params = model.init(KEY)
+        caches = model.init_decode_cache(batch=B, max_len=8)
+        want_kind = "u" if name == "packed" else "f"
+        assert np.asarray(caches["attn"].k).dtype.kind == want_kind
+        lg = None
+        for t in range(3):
+            lg, caches = model.decode_step(params, caches, tokens, t)
+        logits[name] = np.asarray(lg)
+    assert np.all(np.isfinite(logits["packed"]))
+    np.testing.assert_allclose(logits["packed"], logits["unpacked"],
+                               rtol=1e-6, atol=1e-7)
+    _eq(logits["packed"].argmax(-1), logits["unpacked"].argmax(-1),
+        "decoded tokens")
+
+
+def test_prefill_without_max_len_keeps_prompt_sized_caches():
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    model = build_model(cfg)
+    params = model.init(KEY)
+    P = 8
+    tokens = jax.random.randint(KEY, (B, P), 0, cfg.vocab_size)
+    _, caches = model.prefill(params, {"tokens": tokens}, rng=KEY)
+    for t, c in _kv_caches(caches).items():
+        assert c[0].shape[2] == P, (t, c[0].shape)
+
+
+def test_prefill_max_len_smaller_than_prompt_raises():
+    cfg = reduced(get_config("tinyllama-1.1b"))
+    model = build_model(cfg)
+    params = model.init(KEY)
+    tokens = jax.random.randint(KEY, (B, 8), 0, cfg.vocab_size)
+    with pytest.raises(ValueError, match="cache_len"):
+        model.prefill(params, {"tokens": tokens}, rng=KEY, max_len=4)

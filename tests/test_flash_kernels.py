@@ -1,0 +1,333 @@
+"""Rounded Pallas flash-attention kernel family (kernels/flash_attention).
+
+* **bit-exactness** — inside a single jit, each interpret-mode Pallas
+  kernel (fwd / bwd-dq / bwd-dkv / decode) is bit-identical to its
+  pure-jnp reference twin on ragged non-multiple shapes, GQA groupings,
+  sliding windows and non-causal masks.  (Eager comparisons are NOT part
+  of the contract: outside jit the two paths fuse differently and drift
+  by 1-2 ulp, so every check here jits kernel and reference together.)
+* **packed KV cache** — the decode kernel over binary8/e4m3 code words
+  (decoded on load in-kernel) is bit-identical to the same kernel over
+  the unpacked grid values, and to its reference.
+* **policy wiring** — ``qattention``'s custom VJP under ``oracle=True``
+  (reference twins) matches the kernel path bitwise, forward and grads.
+* **eqs. (3)-(5)** — every SR site (qk / av / out / kv-store) draws
+  unbiased bits with the paper's frac(1-frac)·ulp² variance, checked on
+  kernel *outputs* at an exact interior point (Skv=1 collapses the
+  softmax so each output element is a single rounding of X0).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rounding
+from repro.core.rounding import IDENTITY, parse_spec
+from repro.kernels import common
+from repro.kernels import flash_attention as FA
+from repro.models import attention as MA
+from repro.precision import attention as PA
+from repro.precision import policy as QP
+
+KEY = jax.random.PRNGKey(13)
+WORDS = common.derive_seed(KEY, 0)
+SR8 = parse_spec("binary8-sr")
+E4 = parse_spec("e4m3-sr")
+SITE_TAGS = (QP.TAG_ATTN_QK, QP.TAG_ATTN_AV, QP.TAG_ATTN_OUT)
+BLK = 16
+
+
+def _seeds(n):
+    return PA._site_seeds(WORDS, n, SITE_TAGS)
+
+
+def _qkv(bh, bkv, sq, skv, dk, dv, seed=1, scale=1.0):
+    kq, kk, kv_ = jax.random.split(jax.random.fold_in(KEY, seed), 3)
+    return (jax.random.normal(kq, (bh, sq, dk), jnp.float32) * scale,
+            jax.random.normal(kk, (bkv, skv, dk), jnp.float32) * scale,
+            jax.random.normal(kv_, (bkv, skv, dv), jnp.float32) * scale)
+
+
+def _eq(a, b, msg=""):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=msg)
+
+
+# ------------------------------------------------------------- forward --
+FWD_CASES = [
+    # (h, kv, sq, skv, causal, window)
+    (2, 2, 24, 24, True, 0),      # MHA, block-multiple
+    (4, 2, 21, 37, True, 0),      # GQA + ragged non-multiple shapes
+    (2, 1, 16, 40, True, 7),      # MQA, window smaller than a block
+    (2, 2, 13, 13, False, 0),     # non-causal ragged
+    (2, 2, 19, 19, False, 5),     # window + non-causal combo
+]
+
+
+@pytest.mark.parametrize("h,kv,sq,skv,causal,window", FWD_CASES)
+def test_fwd_kernel_bitexact_vs_reference(h, kv, sq, skv, causal, window):
+    q, k, v = _qkv(2 * h, 2 * kv, sq, skv, 8, 8)
+    seeds = _seeds(2 * h)
+    specs = FA.AttnSpecs(SR8, SR8, E4)
+    kw = dict(scale=0.3, n_heads=h, n_kv=kv, causal=causal, window=window,
+              q_block=BLK, kv_block=BLK)
+
+    @jax.jit
+    def both(q, k, v, seeds):
+        return (FA.flash_fwd_p(q, k, v, seeds, specs, **kw),
+                FA.flash_fwd_reference(q, k, v, seeds, specs, **kw))
+
+    (o, m, l), (o_r, m_r, l_r) = both(q, k, v, seeds)
+    _eq(o, o_r, "out")
+    _eq(m, m_r, "m")
+    _eq(l, l_r, "l")
+    assert np.all(np.isfinite(np.asarray(o)))
+
+
+def test_fwd_identity_specs_match_model_flash():
+    """With identity specs the kernel computes plain flash attention —
+    the jnp model implementation is the independent oracle."""
+    B, Sq, H, KV, dk = 2, 27, 4, 2, 8
+    kq, kk, kv_ = jax.random.split(KEY, 3)
+    q4 = jax.random.normal(kq, (B, Sq, H, dk), jnp.float32)
+    k4 = jax.random.normal(kk, (B, Sq, KV, dk), jnp.float32)
+    v4 = jax.random.normal(kv_, (B, Sq, KV, dk), jnp.float32)
+    scale = 1.0 / dk ** 0.5
+    specs = FA.AttnSpecs(IDENTITY, IDENTITY, IDENTITY)
+    q3 = q4.transpose(0, 2, 1, 3).reshape(B * H, Sq, dk)
+    k3 = k4.transpose(0, 2, 1, 3).reshape(B * KV, Sq, dk)
+    v3 = v4.transpose(0, 2, 1, 3).reshape(B * KV, Sq, dk)
+
+    @jax.jit
+    def run(q3, k3, v3):
+        o3, _, _ = FA.flash_fwd_p(q3, k3, v3, _seeds(B * H), specs,
+                                  scale=scale, n_heads=H, n_kv=KV,
+                                  causal=True, window=5, q_block=BLK,
+                                  kv_block=BLK)
+        return o3
+
+    out = run(q3, k3, v3).reshape(B, H, Sq, dk).transpose(0, 2, 1, 3)
+    want = MA.flash_attention(q4, k4, v4, scale, causal=True, window=5,
+                              q_block=BLK, kv_block=BLK)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-6)
+
+
+# ------------------------------------------------------------ backward --
+def test_bwd_kernels_bitexact_vs_reference():
+    b, h, kv, sq, skv = 2, 2, 1, 17, 23
+    bh, bkv = b * h, b * kv
+    q, k, v = _qkv(bh, bkv, sq, skv, 8, 8, scale=0.5)
+    do = jax.random.normal(jax.random.fold_in(KEY, 9), (bh, sq, 8),
+                           jnp.float32)
+    specs = FA.AttnSpecs(SR8, SR8, IDENTITY)
+    w_qk = QP.fold_words(WORDS, QP.TAG_ATTN_QK)
+    w_av = QP.fold_words(WORDS, QP.TAG_ATTN_AV)
+    s_qk = QP.slice_words(w_qk, bh)
+    seeds_dq = jnp.concatenate(
+        [s_qk, QP.slice_words(QP.fold_words(w_qk, QP.SITE_DGRAD), bh)],
+        axis=1)
+    seeds_dkv = jnp.concatenate(
+        [s_qk, QP.slice_words(QP.fold_words(w_qk, QP.SITE_WGRAD), bh),
+         QP.slice_words(QP.fold_words(w_av, QP.SITE_DGRAD), bh)], axis=1)
+    kw = dict(scale=0.25, n_heads=h, n_kv=kv, causal=True, window=0,
+              q_block=BLK, kv_block=BLK)
+
+    @jax.jit
+    def both(q, k, v, do, seeds_f, seeds_dq, seeds_dkv):
+        out, m, l = FA.flash_fwd_p(q, k, v, seeds_f, specs, **kw)
+        d = jnp.sum(do * out, axis=-1)
+        dq = FA.flash_bwd_dq_p(q, k, v, do, m, l, d, seeds_dq,
+                               SR8, SR8, **kw)
+        dq_r = FA.flash_bwd_dq_reference(q, k, v, do, m, l, d, seeds_dq,
+                                         SR8, SR8, **kw)
+        dk_, dv_ = FA.flash_bwd_dkv_p(q, k, v, do, m, l, d, seeds_dkv,
+                                      SR8, SR8, SR8, **kw)
+        dk_r, dv_r = FA.flash_bwd_dkv_reference(q, k, v, do, m, l, d,
+                                                seeds_dkv, SR8, SR8, SR8,
+                                                **kw)
+        return dq, dq_r, dk_, dk_r, dv_, dv_r
+
+    dq, dq_r, dk_, dk_r, dv_, dv_r = both(q, k, v, do, _seeds(bh),
+                                          seeds_dq, seeds_dkv)
+    _eq(dq, dq_r, "dq")
+    _eq(dk_, dk_r, "dk")
+    _eq(dv_, dv_r, "dv")
+    for g in (dq, dk_, dv_):
+        arr = np.asarray(g)
+        assert np.all(np.isfinite(arr)) and np.any(arr != 0)
+
+
+def test_qattention_oracle_matches_kernel_fwd_and_grads():
+    """policy.oracle=True routes every call to the jnp reference twins;
+    inside one jit that path must match the Pallas path bitwise — forward
+    output and all three gradients (the audit-mode contract)."""
+    pol_k = QP.PRESETS["e4m3-attn"]
+    pol_o = dataclasses.replace(pol_k, oracle=True)
+    B, Sq, H, KV, dk = 2, 11, 4, 2, 8
+    kq, kk, kv_ = jax.random.split(jax.random.fold_in(KEY, 3), 3)
+    q = jax.random.normal(kq, (B, Sq, H, dk), jnp.float32)
+    k = jax.random.normal(kk, (B, Sq, KV, dk), jnp.float32)
+    v = jax.random.normal(kv_, (B, Sq, KV, dk), jnp.float32)
+
+    def loss(pol, q, k, v):
+        o = PA.qattention(q, k, v, QP.QuantCtx(pol, WORDS), scale=0.35,
+                          causal=True, q_block=BLK, kv_block=BLK)
+        return jnp.sum(o * o), o
+
+    @jax.jit
+    def both(q, k, v):
+        outs = []
+        for pol in (pol_k, pol_o):
+            (_, o), gs = jax.value_and_grad(
+                lambda q_, k_, v_: loss(pol, q_, k_, v_),
+                argnums=(0, 1, 2), has_aux=True)(q, k, v)
+            outs.append((o,) + gs)
+        return outs
+
+    (o1, *g1), (o2, *g2) = both(q, k, v)
+    _eq(o1, o2, "fwd")
+    for a, b, name in zip(g1, g2, ("dq", "dk", "dv")):
+        _eq(a, b, name)
+
+
+# -------------------------------------------------------------- decode --
+def _decode_setup(seed=5):
+    B, KV, G, dk, smax = 2, 2, 2, 8, 40
+    bkv = B * KV
+    kq = jax.random.fold_in(KEY, seed)
+    q = jax.random.normal(kq, (bkv, G, dk), jnp.float32)
+    k_raw, v_raw = (jax.random.normal(jax.random.fold_in(kq, i),
+                                      (bkv, smax, dk), jnp.float32)
+                    for i in (1, 2))
+    # cache values on the e4m3 grid: packing is then lossless, so the
+    # packed and unpacked kernels see identical numbers
+    grid = parse_spec("e4m3-rn")
+    return q, grid(k_raw), grid(v_raw), _seeds(bkv)
+
+
+@pytest.mark.parametrize("window", [0, 9])
+def test_decode_kernel_bitexact_vs_reference(window):
+    q, kf, vf, seeds = _decode_setup()
+    specs = FA.AttnSpecs(SR8, SR8, E4)
+    kw = dict(scale=0.3, window=window, kv_block=BLK)
+
+    @jax.jit
+    def both(q, kf, vf, seeds, length):
+        return (FA.flash_decode_p(q, kf, vf, seeds, length, specs, **kw),
+                FA.flash_decode_reference(q, kf, vf, seeds, length, specs,
+                                          **kw))
+
+    o, o_r = both(q, kf, vf, seeds, jnp.int32(27))
+    _eq(o, o_r)
+    assert np.all(np.isfinite(np.asarray(o)))
+
+
+def test_decode_packed_cache_bitexact_vs_unpacked():
+    q, kf, vf, seeds = _decode_setup()
+    specs = FA.AttnSpecs(SR8, SR8, E4)
+    kw = dict(scale=0.3, window=0, kv_block=BLK)
+
+    @jax.jit
+    def both(q, kf, vf, seeds, length):
+        kp = common.pack_block(kf, "e4m3")
+        vp = common.pack_block(vf, "e4m3")
+        o_packed = FA.flash_decode_p(q, kp, vp, seeds, length, specs,
+                                     kv_fmt="e4m3", **kw)
+        o_packed_r = FA.flash_decode_reference(q, kp, vp, seeds, length,
+                                               specs, kv_fmt="e4m3", **kw)
+        o_float = FA.flash_decode_p(q, kf, vf, seeds, length, specs, **kw)
+        return o_packed, o_packed_r, o_float, kp
+
+    o_p, o_pr, o_f, kp = both(q, kf, vf, seeds, jnp.int32(33))
+    assert np.asarray(kp).dtype == np.uint8
+    _eq(o_p, o_pr, "packed kernel vs reference")
+    _eq(o_p, o_f, "packed vs unpacked decode")
+
+
+def test_decode_identity_matches_masked_softmax():
+    q, kf, vf, _ = _decode_setup()
+    specs = FA.AttnSpecs(IDENTITY, IDENTITY, IDENTITY)
+    length, scale = 27, 0.3
+
+    @jax.jit
+    def run(q, kf, vf):
+        return FA.flash_decode_p(q, kf, vf, _seeds(q.shape[0]),
+                                 jnp.int32(length), specs, scale=scale,
+                                 kv_block=BLK)
+
+    out = np.asarray(run(q, kf, vf))
+    s = np.einsum("bgd,bsd->bgs", np.asarray(q),
+                  np.asarray(kf)[:, :length]) * scale
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    want = np.einsum("bgs,bsd->bgd", p, np.asarray(vf)[:, :length])
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-6)
+
+
+# ----------------------------------------------- eqs. (3)-(5) per site --
+X0 = 1.1            # binary8 interior point: ulp = 0.25, frac = 0.4
+
+
+def _clt_tol(var, n, sigmas=4.0):
+    return sigmas * np.sqrt(max(var, 1e-30) / n)
+
+
+def _site_samples(site):
+    """Kernel outputs shaped so each element is one independent rounding
+    of the exact value X0 (Skv=1: softmax weight is exactly 1, so the
+    qk / av / out sites each see X0 unperturbed)."""
+    if site == "kv":
+        x = jnp.full((4, 512, 2, 4), X0, jnp.float32)
+        w = QP.fold_words(WORDS, QP.TAG_ATTN_KV)
+        out = jax.jit(lambda x: PA.round_kv(x, SR8, w))(x)
+        return np.asarray(out, np.float64).ravel()
+    specs = {"qk": FA.AttnSpecs(SR8, IDENTITY, IDENTITY),
+             "av": FA.AttnSpecs(IDENTITY, SR8, IDENTITY),
+             "out": FA.AttnSpecs(IDENTITY, IDENTITY, SR8)}[site]
+    if site == "qk":
+        # s = scale·q·k = X0; with one key column, m (an output) IS the
+        # rounded logit
+        bh, sq, dv = 8, 2048, 8
+        q = jnp.full((bh, sq, 1), X0, jnp.float32)
+        k = jnp.ones((1, 1, 1), jnp.float32)
+        v = jnp.ones((1, 1, dv), jnp.float32)
+        n_heads, n_kv = bh, 1
+    else:
+        # s = 0 -> p = 1, l = 1: out = rounded(v) elementwise
+        bh, sq, dv = 4, 512, 8
+        q = jnp.zeros((bh, sq, 1), jnp.float32)
+        k = jnp.ones((1, 1, 1), jnp.float32)
+        v = jnp.full((1, 1, dv), X0, jnp.float32)
+        n_heads, n_kv = bh, 1
+
+    @jax.jit
+    def run(q, k, v, seeds):
+        return FA.flash_fwd_p(q, k, v, seeds, specs, scale=1.0,
+                              n_heads=n_heads, n_kv=n_kv, causal=False)
+
+    out, m, _ = run(q, k, v, _seeds(bh))
+    return np.asarray(m if site == "qk" else out, np.float64).ravel()
+
+
+@pytest.mark.parametrize("site", ["qk", "av", "out", "kv"])
+def test_sr_site_unbiased_and_eq5_variance(site):
+    err = _site_samples(site) - X0
+    q = float(rounding.ulp(jnp.float32(X0), "binary8"))
+    _, _, frac_a, _ = rounding.magnitude_decompose(
+        jnp.float32(X0), rounding.get_format("binary8"))
+    frac = float(frac_a)
+    want_var = frac * (1.0 - frac) * q * q
+    assert np.any(err != 0), site             # rounding actually happened
+    assert set(np.round(np.unique(err) / q, 6)) <= {-frac, 1.0 - frac}, site
+    assert abs(err.mean()) < _clt_tol(want_var, err.size), (site, err.mean())
+    assert abs(err.var() - want_var) < 0.08 * want_var, (site, err.var())
+
+
+def test_sr_sites_draw_distinct_streams():
+    """qk / av / out / kv folds must decorrelate: identical geometry, yet
+    the round-up decisions differ between sites."""
+    samples = {s: _site_samples(s)[:4096] > X0 for s in ("av", "out")}
+    agree = np.mean(samples["av"] == samples["out"])
+    assert 0.3 < agree < 0.7, agree

@@ -1,0 +1,23 @@
+"""Serving-driver smoke: quantized prefill + decode with a packed KV
+cache, end to end through ``launch/serve.run`` (the CLI path:
+``serve.py --gemm-policy binary8-paper --kv-cache-fmt e4m3-sr``)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import serve
+
+
+def test_serve_quant_packed_kv_cache():
+    toks = serve.run("tinyllama-1.1b", reduced=True, batch=1, prompt_len=4,
+                     gen=2, gemm_policy="binary8-paper",
+                     kv_cache_fmt="e4m3-sr")
+    arr = np.asarray(toks)
+    assert arr.shape == (1, 2)
+    assert arr.dtype.kind == "i"
+    assert np.all(arr >= 0)
+
+
+def test_serve_fp32_baseline_unchanged():
+    toks = serve.run("tinyllama-1.1b", reduced=True, batch=1, prompt_len=4,
+                     gen=2)
+    assert np.asarray(toks).shape == (1, 2)

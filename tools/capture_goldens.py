@@ -142,6 +142,95 @@ def golden_gd(out):
     out["gd/tree_update/b"] = digest(newp["b"])
 
 
+def golden_attention(out):
+    """Rounded flash-attention kernel family: qattention fwd + VJP under
+    the e4m3-attn policy (all site folds through the custom VJP), a raw
+    windowed forward, the decode kernel over float and packed e4m3
+    caches, and the KV-store rounding.  Everything runs inside jit — the
+    regime where the Pallas kernels and their jnp reference twins are
+    bit-identical (tests/test_flash_kernels.py)."""
+    from repro.core.rounding import parse_spec
+    from repro.kernels import flash_attention as FA
+    from repro.precision import attention as PA
+
+    rng = np.random.default_rng(4)
+    words = common.derive_seed(jax.random.PRNGKey(21), 2)
+    sr8 = parse_spec("binary8-sr")
+    specs = FA.AttnSpecs(sr8, sr8, parse_spec("e4m3-sr"))
+
+    # policy-wired fwd + grads (GQA 4q/2kv heads, ragged 11-token seq)
+    B, S, H, KV, hd = 2, 11, 4, 2, 8
+    q4 = jnp.asarray(rng.normal(size=(B, S, H, hd)).astype(np.float32))
+    k4 = jnp.asarray(rng.normal(size=(B, S, KV, hd)).astype(np.float32))
+    v4 = jnp.asarray(rng.normal(size=(B, S, KV, hd)).astype(np.float32))
+    ctx = policy.QuantCtx(policy.get_policy("e4m3-attn"), words)
+
+    @jax.jit
+    def qattn(q_, k_, v_):
+        def f(q__, k__, v__):
+            o = PA.qattention(q__, k__, v__, ctx, scale=0.35, causal=True,
+                              q_block=16, kv_block=16)
+            return jnp.sum(o * o), o
+        (_, o), gs = jax.value_and_grad(f, argnums=(0, 1, 2),
+                                        has_aux=True)(q_, k_, v_)
+        return (o,) + gs
+
+    for name, arr in zip(("out", "dq", "dk", "dv"), qattn(q4, k4, v4)):
+        out[f"attn/qattention/{name}"] = digest(arr)
+
+    # raw kernel: sliding window + non-block-multiple shapes
+    bh, bkv, sq, skv = 4, 2, 21, 27
+    q3 = jnp.asarray(rng.normal(size=(bh, sq, hd)).astype(np.float32))
+    k3 = jnp.asarray(rng.normal(size=(bkv, skv, hd)).astype(np.float32))
+    v3 = jnp.asarray(rng.normal(size=(bkv, skv, hd)).astype(np.float32))
+    seeds = PA._site_seeds(words, bh, (policy.TAG_ATTN_QK,
+                                       policy.TAG_ATTN_AV,
+                                       policy.TAG_ATTN_OUT))
+
+    @jax.jit
+    def fwd_win(q_, k_, v_, s_):
+        return FA.flash_fwd_p(q_, k_, v_, s_, specs, scale=0.3, n_heads=2,
+                              n_kv=1, causal=True, window=5, q_block=16,
+                              kv_block=16)
+
+    for name, arr in zip(("out", "m", "l"), fwd_win(q3, k3, v3, seeds)):
+        out[f"attn/fwd_window/{name}"] = digest(arr)
+
+    # decode over a 24-row cache on the e4m3 grid, float and packed codes
+    # (packing is lossless on grid values: the two digests must agree)
+    grid = rounding.spec("e4m3", "rn")
+    kc = grid(jnp.asarray(rng.normal(size=(bkv, 24, hd))
+                          .astype(np.float32)))
+    vc = grid(jnp.asarray(rng.normal(size=(bkv, 24, hd))
+                          .astype(np.float32)))
+    qd = jnp.asarray(rng.normal(size=(bkv, 2, hd)).astype(np.float32))
+    seeds_d = PA._site_seeds(words, bkv, (policy.TAG_ATTN_QK,
+                                          policy.TAG_ATTN_AV,
+                                          policy.TAG_ATTN_OUT))
+
+    @jax.jit
+    def dec(q_, k_, v_):
+        o_f = FA.flash_decode_p(q_, k_, v_, seeds_d, jnp.int32(19), specs,
+                                scale=0.3, kv_block=16)
+        o_p = FA.flash_decode_p(q_, common.pack_block(k_, "e4m3"),
+                                common.pack_block(v_, "e4m3"), seeds_d,
+                                jnp.int32(19), specs, scale=0.3,
+                                kv_block=16, kv_fmt="e4m3")
+        return o_f, o_p
+
+    o_f, o_p = dec(qd, kc, vc)
+    out["attn/decode"] = digest(o_f)
+    out["attn/decode_packed"] = digest(o_p)
+
+    # KV-store site: position-keyed rounding onto the cache grid + pack
+    xkv = jnp.asarray(rng.normal(size=(B, 9, KV, hd)).astype(np.float32))
+    w_kv = policy.fold_words(words, policy.TAG_ATTN_KV)
+    g = jax.jit(lambda x_: PA.round_kv(x_, parse_spec("e4m3-sr"), w_kv,
+                                       pos0=3, stream=1))(xkv)
+    out["attn/kv_store"] = digest(g)
+    out["attn/kv_store_packed"] = digest(common.pack_block(g, "e4m3"))
+
+
 def main():
     out = {}
     golden_round_to_format(out)
@@ -149,6 +238,7 @@ def main():
     golden_wire_codecs(out)
     golden_accum_presets(out)
     golden_gd(out)
+    golden_attention(out)
     print(json.dumps(out, indent=1, sort_keys=True))
 
 
