@@ -73,7 +73,7 @@ def main() -> None:
     from benchmarks import (collective_bench, fig2_stagnation,
                             fig3_quadratic, fig4_mlr, fig5_mlr_lr, fig6_nn,
                             health_bench, kernel_bench, roofline_report,
-                            table_formats)
+                            serve_bench, table_formats)
 
     benches = {
         "table2": lambda: table_formats.run(),
@@ -90,12 +90,13 @@ def main() -> None:
         "fig6": lambda: fig6_nn.run(
             epochs=15 if q else 50, sims=1 if q else 2,
             n_train=1000 if q else 3000, n_test=400 if q else 800),
-        # collective/accumulation and health-telemetry rows ride in the
-        # kernels JSON so the perf gate guards them too
+        # collective/accumulation, health-telemetry and serving rows ride
+        # in the kernels JSON so the perf gate guards them too
         "kernels": lambda: (kernel_bench.run(n=n_kernels)
                             + collective_bench.rows(
                                 n=n_kernels, iters=5 if q else 20)
-                            + health_bench.rows(iters=10 if q else 30)),
+                            + health_bench.rows(iters=10 if q else 30)
+                            + serve_bench.rows(quick=q)),
         "roofline": lambda: roofline_report.run(),
     }
     only = set(args.only.split(",")) if args.only else None

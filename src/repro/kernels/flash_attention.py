@@ -740,6 +740,164 @@ def flash_decode_p(q, k, v, seeds, length, specs, *, scale,
     )(seeds, lens, q, k, v)
 
 
+def flash_decode_paged_p(q, k_pages, v_pages, seeds, lengths, tables, specs,
+                         *, scale, n_kv: int, window: int = 0, kv_fmt=None,
+                         interpret=None):
+    """Rounded decode step over a *paged* (possibly packed) KV cache.
+
+    q: (B·KV, G, dk) — the G query heads of each kv group side by side;
+    k_pages/v_pages: (P·KV, page, dk/dv) physical pages — page ``p`` of kv
+    head ``h`` lives at row ``p·KV + h`` (the serving layer's
+    ``(P, KV, page, d)`` pool reshaped), float values or, with ``kv_fmt``,
+    packed code words decoded on load in-kernel; lengths: (B,) int32 valid
+    rows per request *including* the token being decoded; tables:
+    (B, n_max) int32 logical→physical page ids (both ride scalar prefetch,
+    so the index map DMAs exactly the request's pages — the vLLM paged-
+    attention pattern).  Table entries past a request's allocation must
+    point at *some* valid page (the allocator's scratch page 0): their
+    logical positions are ≥ length, so they are fully masked and — because
+    a fully-masked block contributes exactly 0 to the online softmax and
+    ``corr == 1`` — bit-neutral.  Hence with ``page == kv_block`` the
+    result is bit-identical to :func:`flash_decode_p` on the contiguously
+    gathered cache, regardless of the physical page placement.
+
+    Randomness discipline: draws are keyed by the *logical* kv-block index
+    (stream = logical page, col0 = logical position), never the physical
+    page id, so a request's rounding stream is placement-invariant.
+    Returns (B·KV, G, dv) float32.
+    """
+    if interpret is None:
+        interpret = common.default_interpret()
+    specs = AttnSpecs(*specs)
+    q = q.astype(jnp.float32)
+    if kv_fmt is None:
+        k_pages = k_pages.astype(jnp.float32)
+        v_pages = v_pages.astype(jnp.float32)
+    BKV, G, dk = q.shape
+    page = k_pages.shape[1]
+    dv = v_pages.shape[-1]
+    if BKV % n_kv or k_pages.shape[0] % n_kv:
+        raise ValueError(f"BKV={BKV} / P·KV={k_pages.shape[0]} not "
+                         f"multiples of n_kv={n_kv}")
+    seeds = _check_seeds(seeds, BKV, 6)
+    B = BKV // n_kv
+    lens = jnp.asarray(lengths, jnp.int32).reshape(-1)
+    if lens.shape != (B,):
+        raise ValueError(f"lengths must be ({B},), got {lens.shape}")
+    tables = jnp.asarray(tables, jnp.int32)
+    if tables.ndim != 2 or tables.shape[0] != B:
+        raise ValueError(f"tables must be ({B}, n_max), got {tables.shape}")
+    n_max = tables.shape[1]
+    any_stoch = any(s.stochastic for s in specs)
+
+    def idx_q(b, j, *s):
+        return (b, 0, 0)
+
+    def idx_kv(b, j, seed_ref, len_ref, tbl_ref):
+        return (tbl_ref[b // n_kv, j] * n_kv + b % n_kv, 0, 0)
+
+    def kernel(seed_ref, len_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref,
+               acc_scr, m_scr, l_scr):
+        b, j = pl.program_id(0), pl.program_id(1)
+        length = len_ref[b // n_kv]
+
+        @pl.when(j == 0)
+        def _init():
+            m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+            l_scr[...] = jnp.zeros_like(l_scr)
+            acc_scr[...] = jnp.zeros_like(acc_scr)
+
+        if any_stoch:
+            common.seed_kernel_prng_words(
+                seed_ref[b, 0], seed_ref[b, 1], b * n_max + j,
+                interpret=interpret)
+
+        def draw(site, shape, row0, col0, stream, rb):
+            return common.kernel_bits_words(
+                seed_ref[b, 2 * site], seed_ref[b, 2 * site + 1], shape,
+                row0=row0, col0=col0, stream=stream, rand_bits=rb,
+                interpret=interpret)
+
+        k_blk, v_blk = k_ref[0], v_ref[0]
+        if kv_fmt is not None:
+            k_blk = common.unpack_block(k_blk, kv_fmt)
+            v_blk = common.unpack_block(v_blk, kv_fmt)
+        k0 = j * page                       # logical position of the block
+        valid = _decode_mask((G, page), k0, length, window)
+        m_new, l_new, acc_new = _fwd_block(
+            specs, scale, q_ref[0], k_blk, v_blk, valid, 0, k0,
+            length, j, draw, m_scr[...], l_scr[...], acc_scr[...])
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+        acc_scr[...] = acc_new
+
+        @pl.when(j == n_max - 1)
+        def _emit():
+            o_ref[0] = _fwd_finish(specs, acc_scr[...], l_scr[...], 0, draw)
+
+    kv_bytes = common.pack_bytes(kv_fmt) if kv_fmt is not None else 4
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3, grid=(BKV, n_max),
+            in_specs=[pl.BlockSpec((1, G, dk), idx_q),
+                      pl.BlockSpec((1, page, dk), idx_kv),
+                      pl.BlockSpec((1, page, dv), idx_kv)],
+            out_specs=pl.BlockSpec((1, G, dv), idx_q),
+            scratch_shapes=[pltpu.VMEM((G, dv), jnp.float32),
+                            pltpu.VMEM((G, 1), jnp.float32),
+                            pltpu.VMEM((G, 1), jnp.float32)]),
+        out_shape=jax.ShapeDtypeStruct((BKV, G, dv), jnp.float32),
+        interpret=interpret,
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        cost_estimate=pl.CostEstimate(
+            flops=2 * BKV * G * n_max * page * (dk + dv),
+            transcendentals=BKV * G * n_max * page,
+            bytes_accessed=(4 * BKV * G * (dk + dv)
+                            + kv_bytes * BKV * n_max * page * (dk + dv))),
+    )(seeds, lens, tables, q, k_pages, v_pages)
+
+
+def flash_decode_paged_reference(q, k_pages, v_pages, seeds, lengths,
+                                 tables, specs, *, scale, n_kv: int,
+                                 window: int = 0, kv_fmt=None):
+    """Pure-jnp replay of flash_decode_paged_p (bit-identical under
+    interpret): gathers each request's logical block sequence from the
+    page pool and replays the identical blocked online-softmax math."""
+    specs = AttnSpecs(*specs)
+    q = q.astype(jnp.float32)
+    if kv_fmt is not None:
+        k_pages = common.unpack_block(k_pages, kv_fmt)
+        v_pages = common.unpack_block(v_pages, kv_fmt)
+    k_pages = k_pages.astype(jnp.float32)
+    v_pages = v_pages.astype(jnp.float32)
+    BKV, G, dk = q.shape
+    page = k_pages.shape[1]
+    dv = v_pages.shape[-1]
+    B = BKV // n_kv
+    seeds = _check_seeds(seeds, BKV, 6)
+    lens = jnp.asarray(lengths, jnp.int32).reshape(B)
+    tables = jnp.asarray(tables, jnp.int32)
+    n_max = tables.shape[1]
+    outs = []
+    for b in range(BKV):
+        draw = _ref_draw(seeds[b])
+        length = lens[b // n_kv]
+        m = jnp.full((G, 1), -jnp.inf, jnp.float32)
+        l = jnp.zeros((G, 1), jnp.float32)
+        acc = jnp.zeros((G, dv), jnp.float32)
+        for j in range(n_max):
+            row = tables[b // n_kv, j] * n_kv + b % n_kv
+            k0 = j * page
+            valid = _decode_mask((G, page), k0, length, window)
+            m, l, acc = _fwd_block(
+                specs, scale, q[b], k_pages[row], v_pages[row],
+                valid, 0, k0, length, j, draw, m, l, acc)
+        outs.append(_fwd_finish(specs, acc, l, 0, draw))
+    return jnp.stack(outs)
+
+
 def flash_decode_reference(q, k, v, seeds, length, specs, *, scale,
                            window: int = 0, kv_block: int = _DEF_BLOCK,
                            kv_fmt=None):

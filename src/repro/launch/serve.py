@@ -18,43 +18,12 @@ from repro.launch import steps as steps_lib
 from repro.models import build_model
 
 
-def run(arch: str, *, reduced: bool, batch: int, prompt_len: int, gen: int,
-        seed: int = 0, gemm_policy: str = None, kv_cache_fmt: str = None):
-    cfg = get_config(arch)
-    if reduced:
-        cfg = reduce_cfg(cfg)
-    if gemm_policy is not None:
-        # quantized serving (eq. 8a at inference): prefill-scan and decode
-        # both honor the policy — including the absorbed-MLA decode path
-        cfg = dataclasses.replace(cfg, gemm_policy=gemm_policy)
-    if kv_cache_fmt is not None:
-        # packed low-precision KV cache: appended k/v round onto the fmt
-        # grid and are stored as code words the decode kernel unpacks on
-        # load (1 B/elt in HBM for 8-bit grids)
-        from repro.precision import policy as QP
-        base = QP.resolve_policy(cfg.gemm_policy) or QP.PRESETS["fp32"]
-        pol = dataclasses.replace(
-            base, kv_cache_fmt=QP._check_kv_fmt(kv_cache_fmt,
-                                                base.kv_cache_packed))
-        cfg = dataclasses.replace(cfg, gemm_policy=pol)
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(seed))
-
-    key = jax.random.PRNGKey(seed + 1)
-    prompts = jax.random.randint(key, (batch, prompt_len), 0,
-                                 cfg.vocab_size)
-    enc_out = None
-    batch_in = {"tokens": prompts}
-    if cfg.frontend == "vision":
-        batch_in["vision_embeds"] = jax.random.normal(
-            key, (batch, cfg.frontend_len, cfg.d_model)) * 0.02
-    if cfg.frontend == "audio":
-        batch_in["src_embeds"] = jax.random.normal(
-            key, (batch, prompt_len, cfg.d_model)) * 0.02
-
-    # prefill: build caches for the prompt, then pad to the decode budget
-    if cfg.encoder_layers:
-        enc_out = model._encode(params, batch_in, jax.random.PRNGKey(0))
+def serve_batch(model, params, prompts, gen: int, enc_out=None):
+    """Fixed-batch serving: one jitted prompt-absorption scan + AOT-compiled
+    cache-donating decode steps.  Returns (tokens (B, gen), timings) — the
+    timings measure execution only, never XLA compiles.  Shared by the CLI
+    driver below and the serving benchmark's fixed-batch comparator."""
+    batch, prompt_len = prompts.shape
     max_len = prompt_len + gen
     caches = model.init_decode_cache(batch, max_len)
     tok = prompts[:, -1:]
@@ -86,21 +55,65 @@ def run(arch: str, *, reduced: bool, batch: int, prompt_len: int, gen: int,
     caches = jax.block_until_ready(absorb(params, caches, prompts, enc_out))
     t_prefill = time.time() - t0
 
+    # decode is AOT-compiled the same way (the python loop used to pay the
+    # trace+compile on its first iteration, polluting the decode tok/s),
+    # and the caches are donated: each step's update writes in place
+    # instead of allocating a second full KV cache per token
     serve_step = jax.jit(steps_lib.make_serve_step(model),
-                         static_argnames=())
+                         donate_argnums=(1,)).lower(
+        params, caches, tok, jnp.int32(prompt_len), enc_out).compile()
     outs = []
     t1 = time.time()
     for t in range(gen):
         tok, logits, caches = serve_step(params, caches, tok,
                                          jnp.int32(prompt_len + t), enc_out)
         outs.append(tok)
-    toks = jnp.concatenate(outs, axis=1)
+    toks = jax.block_until_ready(jnp.concatenate(outs, axis=1))
     t_decode = time.time() - t1
+    return toks, {
+        "t_prefill": t_prefill, "t_decode": t_decode,
+        "prefill_tokps": batch * prompt_len / max(t_prefill, 1e-9),
+        "decode_tokps": batch * gen / max(t_decode, 1e-9)}
+
+
+def run(arch: str, *, reduced: bool, batch: int, prompt_len: int, gen: int,
+        seed: int = 0, gemm_policy: str = None, kv_cache_fmt: str = None):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = reduce_cfg(cfg)
+    if gemm_policy is not None:
+        # quantized serving (eq. 8a at inference): prefill-scan and decode
+        # both honor the policy — including the absorbed-MLA decode path
+        cfg = dataclasses.replace(cfg, gemm_policy=gemm_policy)
+    if kv_cache_fmt is not None:
+        # packed low-precision KV cache: appended k/v round onto the fmt
+        # grid and are stored as code words the decode kernel unpacks on
+        # load (1 B/elt in HBM for 8-bit grids)
+        from repro.precision import policy as QP
+        cfg = dataclasses.replace(
+            cfg, gemm_policy=QP.policy_with_kv_fmt(cfg.gemm_policy,
+                                                   kv_cache_fmt))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+
+    key = jax.random.PRNGKey(seed + 1)
+    prompts = jax.random.randint(key, (batch, prompt_len), 0,
+                                 cfg.vocab_size)
+    enc_out = None
+    batch_in = {"tokens": prompts}
+    if cfg.frontend == "vision":
+        batch_in["vision_embeds"] = jax.random.normal(
+            key, (batch, cfg.frontend_len, cfg.d_model)) * 0.02
+    if cfg.frontend == "audio":
+        batch_in["src_embeds"] = jax.random.normal(
+            key, (batch, prompt_len, cfg.d_model)) * 0.02
+    if cfg.encoder_layers:
+        enc_out = model._encode(params, batch_in, jax.random.PRNGKey(0))
+
+    toks, t = serve_batch(model, params, prompts, gen, enc_out)
     print(f"arch={cfg.name} batch={batch} prompt={prompt_len} gen={gen}")
-    print(f"prefill {t_prefill:.2f}s "
-          f"({batch * prompt_len / max(t_prefill, 1e-9):.1f} tok/s); "
-          f"decode {t_decode:.2f}s "
-          f"({batch * gen / max(t_decode, 1e-9):.1f} tok/s)")
+    print(f"prefill {t['t_prefill']:.2f}s ({t['prefill_tokps']:.1f} tok/s); "
+          f"decode {t['t_decode']:.2f}s ({t['decode_tokps']:.1f} tok/s)")
     print("sample:", toks[0].tolist())
     return toks
 

@@ -18,6 +18,7 @@ from repro.kernels import common as KC
 from repro.models import layers as L
 from repro.precision import attention as PA
 from repro.precision import policy as QP
+from repro.serving import paged_cache as PC
 
 
 class KVCache(NamedTuple):
@@ -175,7 +176,51 @@ def attn_apply(params, x, positions, cfg, *, causal=True,
     v = L.qdense(x, params["wv"], quant, QP.TAG_ATTN_V).reshape(B, S, nkv, hd)
     q, k = _rotary(q, k, positions, cfg, positions3)
 
-    if cache is not None:
+    if isinstance(cache, PC.PagedKVCache):
+        # serving: append into the shared page pool through the slot's
+        # block table, attend through the paged kernel (single-token) or
+        # the gathered logical view (chunked prefill / identity sites).
+        # All rounding is request-keyed off ``cache.words`` — never the
+        # batch slot, the physical pages, or ``quant.words`` — so a
+        # request's stream is bit-identical across batching schedules.
+        spec = PA.kv_cache_spec(pol)
+        w_kv = PA.fold_words_vec(cache.words, jnp.uint32(QP.TAG_ATTN_KV))
+        k_st = PA.round_kv_request(k, spec, w_kv, cache.lengths, stream=0)
+        v_st = PA.round_kv_request(v, spec, w_kv, cache.lengths, stream=1)
+        if kv_packed:
+            k_st = KC.pack_block(k_st, spec.fmt)
+            v_st = KC.pack_block(v_st, spec.fmt)
+        k_pages = PC.paged_append(cache.k_pages, cache.tables, cache.lengths,
+                                  cache.append, k_st)
+        v_pages = PC.paged_append(cache.v_pages, cache.tables, cache.lengths,
+                                  cache.append, v_st)
+        new_len = cache.lengths + jnp.where(cache.append, S, 0).astype(
+            jnp.int32)
+        new_cache = cache._replace(k_pages=k_pages, v_pages=v_pages,
+                                   lengths=new_len)
+        if S == 1 and pol is not None and not pol.attn_sites_identity:
+            out = PA.qattn_decode_paged(
+                q, k_pages, v_pages, new_len, cache.tables, cache.words,
+                pol, scale=scale, window=cfg.sliding_window,
+                kv_fmt=spec.fmt if kv_packed else None)
+        else:
+            k_f = PC.paged_gather(k_pages, cache.tables)
+            v_f = PC.paged_gather(v_pages, cache.tables)
+            if kv_packed:
+                k_f = KC.unpack_block(k_f, spec.fmt)
+                v_f = KC.unpack_block(v_f, spec.fmt)
+            Skv = k_f.shape[1]
+            # per-slot, per-row causality: each appended row attends to
+            # its own logical prefix (and sliding window) only
+            q_pos = cache.lengths[:, None] + jnp.arange(S)       # (B, S)
+            k_pos = jnp.arange(Skv)
+            valid = k_pos[None, None, :] <= q_pos[:, :, None]
+            if cfg.sliding_window:
+                valid = valid & (k_pos[None, None, :]
+                                 > q_pos[:, :, None] - cfg.sliding_window)
+            out = _sdpa(q, k_f.astype(dtype), v_f.astype(dtype), valid,
+                        scale)
+    elif cache is not None:
         # decode: append new k/v at cache.length, attend to the full prefix
         start = cache.length
         k_st = PA.kv_store(k, quant, pos0=start, stream=0)

@@ -195,26 +195,36 @@ class Model:
 
     def decode_step(self, params, caches, tokens, pos, enc_out=None,
                     rng=None, compute_logits: bool = True):
-        """One-token decode.  tokens: (B, 1); pos: scalar position index.
-        ``compute_logits=False`` skips the lm-head projection (prompt
-        absorption only needs the caches)."""
+        """Cached decode over ``tokens``: (B, S) new tokens (S == 1 for
+        plain decode; S > 1 is a chunked-prefill append — serving).
+        ``pos`` is the first new token's position: a scalar shared by the
+        batch, or a (B,) vector of per-slot positions (paged serving,
+        where every slot sits at its own depth).  ``compute_logits=False``
+        skips the lm-head projection (prompt absorption only needs the
+        caches)."""
         cfg = self.cfg
+        pos_arr = jnp.asarray(pos, jnp.int32)
         if rng is None:
             rng = jax.random.PRNGKey(0)
-            if cfg.gemm_policy is not None:
+            if cfg.gemm_policy is not None and pos_arr.ndim == 0:
                 # fold the position in so stochastic-rounding streams
                 # decorrelate across decode steps instead of replaying the
                 # same per-coordinate bits; gated on the policy so baseline
                 # decode (incl. MoE router noise) stays bit-identical to
-                # the pre-policy model
-                rng = jax.random.fold_in(rng, jnp.asarray(pos, jnp.int32))
+                # the pre-policy model.  (Per-slot positions can't key a
+                # shared fold — serving passes an explicit per-step rng.)
+                rng = jax.random.fold_in(rng, pos_arr)
         x = params["embed"][tokens].astype(L.COMPUTE_DTYPE)
-        B = tokens.shape[0]
-        positions = jnp.broadcast_to(
-            jnp.asarray(pos)[None, None], (B, 1)).astype(jnp.int32)
+        B, S = tokens.shape
+        steps = jnp.arange(S, dtype=jnp.int32)
+        if pos_arr.ndim == 0:
+            positions = jnp.broadcast_to(pos_arr[None, None] + steps[None],
+                                         (B, S))
+        else:
+            positions = pos_arr[:, None] + steps[None]
         positions3 = None
         if cfg.pos == "mrope":
-            positions3 = jnp.broadcast_to(positions[None], (3, B, 1))
+            positions3 = jnp.broadcast_to(positions[None], (3, B, S))
         x, _, new_caches = transformer.apply_blocks(
             params["blocks"], x, positions, cfg, self.decoder_plan(),
             caches=caches, positions3=positions3, rng=rng, enc_out=enc_out)

@@ -4,12 +4,14 @@ from repro.precision.attention import (kv_cache_spec, kv_store, qattention,
 from repro.precision.fused import qdot_act, qffn_glu
 from repro.precision.policy import (PRESETS, QuantCtx, QuantPolicy, ctx_for,
                                     fold_ctx, fold_words, get_policy,
-                                    make_ctx, make_policy, qact, qdot,
-                                    qeinsum, resolve_policy)
+                                    make_ctx, make_policy, policy_with_kv_fmt,
+                                    qact, qdot, qeinsum,
+                                    resolve_kv_cache_fmt, resolve_policy)
 
 __all__ = [
     "PRESETS", "QuantCtx", "QuantPolicy", "ctx_for", "fold_ctx",
     "fold_words", "get_policy", "kv_cache_spec", "kv_store", "make_ctx",
-    "make_policy", "qact", "qattention", "qattn_decode", "qdot",
-    "qdot_act", "qeinsum", "qffn_glu", "resolve_policy", "round_kv",
+    "make_policy", "policy_with_kv_fmt", "qact", "qattention",
+    "qattn_decode", "qdot", "qdot_act", "qeinsum", "qffn_glu",
+    "resolve_kv_cache_fmt", "resolve_policy", "round_kv",
 ]

@@ -34,10 +34,10 @@ import numpy as np
 from repro.core.rounding import RoundingSpec, parse_spec
 from repro.kernels import common
 from repro.kernels import flash_attention as FA
-from repro.precision.policy import (QuantCtx, QuantPolicy, SITE_DGRAD,
-                                    SITE_WGRAD, TAG_ATTN_AV, TAG_ATTN_KV,
-                                    TAG_ATTN_OUT, TAG_ATTN_QK, fold_words,
-                                    slice_words)
+from repro.precision.policy import (_FOLD_CONST, QuantCtx, QuantPolicy,
+                                    SITE_DGRAD, SITE_WGRAD, TAG_ATTN_AV,
+                                    TAG_ATTN_KV, TAG_ATTN_OUT, TAG_ATTN_QK,
+                                    fold_words, slice_words)
 
 
 class _Dims(NamedTuple):
@@ -201,6 +201,116 @@ def qattn_decode(q, k_cache, v_cache, length, quant: QuantCtx, *, scale,
     fn = FA.flash_decode_reference if policy.oracle else FA.flash_decode_p
     out3 = fn(q3, k3, v3, seeds, length, attn_specs(policy), scale=scale,
               window=window, kv_block=kv_block, kv_fmt=kv_fmt)
+    return out3.reshape(B, 1, H, dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Request-keyed seeds + paged decode (serving; repro.serving builds on this).
+#
+# Fold chain (each depth in its own salted namespace, so numerically equal
+# tags at different depths cannot collide):
+#   request words --(_SALT_LAYER + layer)--> layer words
+#     --(TAG_ATTN_KV)-----------------------------------> kv-store words
+#         (bits counter-keyed by (absolute position, feature))
+#     --(_SALT_POS + position)--(_SALT_HEAD + kv head)--(site tag)-->
+#         per-step [qk | av | out] kernel seeds
+# Nothing in the chain mentions the batch slot, the physical cache page,
+# or the co-scheduled requests — the determinism contract that makes a
+# request's decode stream bit-reproducible across batching schedules.
+# ---------------------------------------------------------------------------
+_SALT_LAYER = 0x5E471                         # serving layer-fold namespace
+_SALT_POS = 0x705170                          # position-fold namespace
+_SALT_HEAD = 0x4EAD0                          # kv-head-fold namespace
+
+
+def fold_words_vec(words, tags):
+    """Vectorized ``fold_words``: words (..., 2) uint32, tags uint32
+    broadcastable against ``words[..., 0]`` -> (..., 2) folded words."""
+    w0, w1 = common.threefry2x32(words[..., 0], words[..., 1],
+                                 jnp.asarray(tags, jnp.uint32),
+                                 jnp.uint32(_FOLD_CONST))
+    return jnp.stack([jnp.broadcast_to(w0, jnp.broadcast_shapes(
+        w0.shape, w1.shape)), jnp.broadcast_to(w1, jnp.broadcast_shapes(
+            w0.shape, w1.shape))], axis=-1)
+
+
+def request_layer_words(req_words, n_layers: int):
+    """Per-layer serving words: (B, 2) request words -> (L, B, 2)."""
+    req_words = jnp.asarray(req_words, jnp.uint32)
+    tags = _SALT_LAYER + jnp.arange(n_layers, dtype=jnp.uint32)
+    return fold_words_vec(req_words[None], tags[:, None])
+
+
+def request_site_seeds(layer_words, positions, n_kv: int):
+    """Per-(request, kv head) attention-site seeds for one decode step.
+
+    layer_words: (B, 2) request×layer words; positions: (B,) the decoded
+    token's absolute position.  Returns (B·KV, 6) uint32 — the
+    [qk | av | out] word pairs the decode kernels take, a pure function of
+    (request seed, layer, position, kv head, site)."""
+    layer_words = jnp.asarray(layer_words, jnp.uint32)
+    B = layer_words.shape[0]
+    pos_tags = _SALT_POS + jnp.asarray(positions, jnp.int32).reshape(
+        B).astype(jnp.uint32)
+    w_pos = fold_words_vec(layer_words, pos_tags)                  # (B, 2)
+    head_tags = _SALT_HEAD + jnp.arange(n_kv, dtype=jnp.uint32)
+    w_h = fold_words_vec(w_pos[:, None, :], head_tags[None])       # (B,KV,2)
+    cols = [fold_words_vec(w_h, jnp.uint32(t))
+            for t in (TAG_ATTN_QK, TAG_ATTN_AV, TAG_ATTN_OUT)]
+    return jnp.concatenate(cols, axis=-1).reshape(B * n_kv, 6)
+
+
+def round_kv_request(x, spec: Optional[RoundingSpec], words, pos0,
+                     stream: int = 0):
+    """Per-request variant of :func:`round_kv`: ``x`` is (B, S, ...),
+    ``words`` (B, 2) per-request kv-store words, ``pos0`` (B,) the absolute
+    position of each request's first appended row.  Bits are counter-keyed
+    by (absolute position, *within-request* flat feature index) under the
+    request's own words — unlike ``round_kv``'s batch-flattened feature
+    axis, the drawn bits for a given (request, position) cell are identical
+    whatever slot the request occupies, however the prompt is chunked, and
+    whatever else shares the batch."""
+    if spec is None or spec.is_identity:
+        return x.astype(jnp.float32)
+    if not spec.stochastic:
+        return spec(x.astype(jnp.float32))
+    B, S = x.shape[0], x.shape[1]
+    F = x.size // (B * S)
+    words = jnp.asarray(words, jnp.uint32).reshape(B, 2)
+    pos0 = jnp.asarray(pos0, jnp.int32).reshape(B)
+    bits = jax.vmap(lambda w, p0: common.counter_bits_reduced(
+        w[0], w[1], (S, F), spec.rand_bits, row0=p0, stream=stream))(
+            words, pos0)
+    return spec(x.astype(jnp.float32), bits=bits.reshape(x.shape))
+
+
+def qattn_decode_paged(q, k_pages, v_pages, lengths, tables, layer_words,
+                       policy: QuantPolicy, *, scale, window: int = 0,
+                       kv_fmt=None):
+    """Rounded paged-decode attention for one new token per request.
+
+    q: (B, 1, H, dk); k_pages/v_pages: (P, KV, page, dk/dv) page pools
+    (float values or packed ``kv_fmt`` codes); lengths: (B,) valid rows
+    *including* the new token; tables: (B, n_max) logical→physical page
+    ids; layer_words: (B, 2) request×layer words (see the fold chain
+    above) — the site seeds are derived per (request, position, kv head),
+    so the output is independent of slot order and page placement.
+    """
+    B, S1, H, dk = q.shape
+    if S1 != 1:
+        raise ValueError(f"qattn_decode_paged is single-token (got {S1})")
+    P, KV, page = k_pages.shape[:3]
+    dv = v_pages.shape[-1]
+    G = H // KV
+    q3 = q.astype(jnp.float32).reshape(B, H, dk).reshape(B * KV, G, dk)
+    k3 = k_pages.reshape(P * KV, page, dk)
+    v3 = v_pages.reshape(P * KV, page, dv)
+    seeds = request_site_seeds(
+        layer_words, jnp.asarray(lengths, jnp.int32) - 1, KV)
+    fn = FA.flash_decode_paged_reference if policy.oracle \
+        else FA.flash_decode_paged_p
+    out3 = fn(q3, k3, v3, seeds, lengths, tables, attn_specs(policy),
+              scale=scale, n_kv=KV, window=window, kv_fmt=kv_fmt)
     return out3.reshape(B, 1, H, dv).astype(q.dtype)
 
 

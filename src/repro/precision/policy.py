@@ -157,6 +157,29 @@ def _check_kv_fmt(name: Optional[str], packed: bool) -> Optional[str]:
     return name
 
 
+def resolve_kv_cache_fmt(name: Optional[str],
+                         packed: bool = True) -> Optional[str]:
+    """Validate + normalize a KV-cache storage spec name (public API).
+
+    Returns the canonical name to put in ``QuantPolicy.kv_cache_fmt``:
+    ``None`` passes through, identity specs normalize to ``None`` (an fp
+    cache), stochastic schemes that need a bias-direction operand are
+    rejected, and with ``packed`` the grid must be packable (≤16-bit code
+    words) — the checks ``_check_kv_fmt`` runs, exposed for callers
+    (launch/serve, serving/engine) that build policies from CLI strings.
+    """
+    return _check_kv_fmt(name, packed)
+
+
+def policy_with_kv_fmt(base, kv_cache_fmt: Optional[str]) -> QuantPolicy:
+    """A copy of ``base`` (policy / preset name / None) with its KV-cache
+    storage spec replaced by the validated ``kv_cache_fmt``."""
+    pol = resolve_policy(base) or PRESETS["fp32"]
+    return dataclasses.replace(
+        pol, kv_cache_fmt=resolve_kv_cache_fmt(kv_cache_fmt,
+                                               pol.kv_cache_packed))
+
+
 def make_policy(fwd=None, dgrad=None, wgrad=None, act=None, *,
                 fmt=None, mode: str = "sr", eps: float = 0.0,
                 oracle: bool = False, rand_bits: int = 32,

@@ -1,0 +1,28 @@
+"""Serving: continuous batching over a paged quantized KV cache.
+
+Lazy exports — ``engine`` imports the model stack, which itself imports
+``paged_cache``; resolving attributes on demand keeps the package
+import-cycle-free from either direction.
+"""
+_EXPORTS = {
+    "PagedKVCache": "paged_cache",
+    "BlockAllocator": "paged_cache",
+    "init_paged_cache": "paged_cache",
+    "paged_append": "paged_cache",
+    "paged_gather": "paged_cache",
+    "request_words": "paged_cache",
+    "Request": "engine",
+    "EngineConfig": "engine",
+    "ContinuousBatchingEngine": "engine",
+    "RequestResult": "engine",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        import importlib
+        mod = importlib.import_module(f"repro.serving.{_EXPORTS[name]}")
+        return getattr(mod, name)
+    raise AttributeError(f"module 'repro.serving' has no attribute {name!r}")

@@ -1,0 +1,148 @@
+"""Paged quantized KV cache: the serving-side storage layer.
+
+The decode cache is a pool of fixed-size pages shared by every request in
+flight.  Each request owns a *logical* sequence of pages named by a
+per-request block table; the pool stores the same rounded (optionally
+packed uint8/uint16) grid values the contiguous cache does, so decode
+reads go through the identical unpack-on-load kernels.
+
+Layout contract (mirrors kernels/flash_attention.flash_decode_paged_p):
+the per-layer pool is ``(P, KV, page, d)`` and the kernel views it as
+``(P·KV, page, d)`` — physical page ``p`` of kv head ``h`` lives at row
+``p·KV + h``.  Page 0 is the allocator's reserved *scratch* page: every
+unused block-table entry points at it, and appends of inactive batch
+slots are diverted into it.  Scratch reads are bit-neutral (fully masked
+blocks contribute exactly zero to the online softmax) and scratch writes
+are never read back as valid positions, so physical placement and slot
+occupancy never reach the numbers a request sees.
+
+Randomness rides the request, not the slot: the ``words`` field carries
+request×layer fold words (precision/attention.request_layer_words), and
+every KV-store / attention-site draw is keyed by (request seed, layer,
+absolute position, kv head, site) — the contract that makes a request's
+decode stream bit-identical across batching schedules.
+"""
+from __future__ import annotations
+
+from typing import List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common as KC
+
+
+class PagedKVCache(NamedTuple):
+    """Stacked-over-layers paged KV cache (every leaf leads with L so the
+    transformer's scan-over-layers slices it like the contiguous cache).
+
+    Per-layer shapes after the scan unstacks:
+      k_pages/v_pages: (P, KV, page, dk/dv) — the shared page pool;
+      tables:  (B, n_max) int32 logical→physical page ids (page 0 filler);
+      lengths: (B,) int32 tokens already cached per slot;
+      words:   (B, 2) uint32 request×layer seed words;
+      append:  (B,) bool — slots whose new tokens really append (inactive
+               slots scatter into scratch page 0 and keep their length).
+    """
+    k_pages: jax.Array   # (L, P, KV, page, dk)
+    v_pages: jax.Array   # (L, P, KV, page, dv)
+    tables: jax.Array    # (L, B, n_max) int32
+    lengths: jax.Array   # (L, B) int32
+    words: jax.Array     # (L, B, 2) uint32
+    append: jax.Array    # (L, B) bool
+
+
+def request_words(seed: int) -> jax.Array:
+    """The (2,) uint32 root words of one request's rounding streams —
+    a pure function of the request's integer seed."""
+    return KC.derive_seed(jax.random.PRNGKey(seed))
+
+
+def init_paged_cache(cfg, n_slots: int, total_pages: int, page_size: int,
+                     n_max: int, dtype=jnp.bfloat16,
+                     n_layers: Optional[int] = None) -> PagedKVCache:
+    """Zeroed page pool + empty per-slot state.  The pool dtype follows
+    ``cfg.gemm_policy``'s ``kv_cache_fmt`` exactly like the contiguous
+    cache (packed code words / float32 grid values / caller dtype)."""
+    from repro.models import attention as MA   # deferred: MA imports us
+    nl = n_layers if n_layers is not None else cfg.n_layers
+    hd = cfg.resolved_head_dim
+    kv = cfg.n_kv_heads
+    dt = MA.cache_dtype(cfg, dtype)
+    shape = (nl, total_pages, kv, page_size, hd)
+    return PagedKVCache(
+        k_pages=jnp.zeros(shape, dt),
+        v_pages=jnp.zeros(shape, dt),
+        tables=jnp.zeros((nl, n_slots, n_max), jnp.int32),
+        lengths=jnp.zeros((nl, n_slots), jnp.int32),
+        words=jnp.zeros((nl, n_slots, 2), jnp.uint32),
+        append=jnp.zeros((nl, n_slots), bool))
+
+
+def paged_append(pages, tables, lengths, append, vals):
+    """Scatter an appended chunk into the page pool (one layer).
+
+    pages: (P, KV, page, d); tables: (B, n_max); lengths/append: (B,);
+    vals: (B, S, KV, d) rounded (and possibly packed) store values.
+    Token ``s`` of slot ``b`` lands at logical position ``lengths[b]+s``
+    → page ``tables[b, pos // page]``, row ``pos % page``.  Slots with
+    ``append[b] == False`` are diverted to scratch page 0 row 0 (their
+    values are never read as valid positions).  Returns the new pool.
+    """
+    B, S = vals.shape[:2]
+    page = pages.shape[2]
+    n_max = tables.shape[1]
+    pos = lengths[:, None] + jnp.arange(S, dtype=jnp.int32)[None]   # (B, S)
+    logical = jnp.minimum(pos // page, n_max - 1)
+    phys = jnp.take_along_axis(tables, logical, axis=1)             # (B, S)
+    off = pos % page
+    on = append[:, None]
+    phys = jnp.where(on, phys, 0)
+    off = jnp.where(on, off, 0)
+    # advanced indices (B,S) on axes 0 and 2 straddle the KV slice, so the
+    # result axes are (B, S, KV, d) — exactly vals' layout
+    return pages.at[phys, :, off, :].set(vals.astype(pages.dtype))
+
+
+def paged_gather(pages, tables):
+    """Materialize each slot's logical cache view from the pool (one
+    layer): (P, KV, page, d) + (B, n_max) -> (B, n_max·page, KV, d), the
+    contiguous cache layout attention's gather path expects.  Filler
+    table entries surface scratch-page values at positions ≥ length,
+    which every consumer masks."""
+    B, n_max = tables.shape
+    page, d = pages.shape[2], pages.shape[3]
+    kv = pages.shape[1]
+    g = pages[tables]                                # (B, n_max, KV, page, d)
+    return jnp.swapaxes(g, 2, 3).reshape(B, n_max * page, kv, d)
+
+
+class BlockAllocator:
+    """Host-side free-list page allocator.  Page 0 is never handed out —
+    it is the shared scratch page filler table entries point at."""
+
+    def __init__(self, total_pages: int):
+        if total_pages < 2:
+            raise ValueError("need at least 2 pages (page 0 is scratch)")
+        self.total_pages = total_pages
+        self._free: List[int] = list(range(total_pages - 1, 0, -1))
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """n pages, or None (caller defers admission) when short."""
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            return None
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, pages) -> None:
+        for p in pages:
+            if not 0 < p < self.total_pages:
+                raise ValueError(f"free({p}) out of range")
+            if p in self._free:
+                raise ValueError(f"double free of page {p}")
+            self._free.append(p)

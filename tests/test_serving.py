@@ -1,0 +1,253 @@
+"""Serving-engine tests: paged-kernel bit-identity, schedule-invariant
+request streams, the block allocator, and the public KV-fmt API.
+
+The determinism contract under test (serving/engine.py module doc): with a
+GEMM-identity policy (attention sites + kv_cache_fmt only), a request's
+decoded token stream is a pure function of (request seed, prompt,
+model) — bit-identical whatever the arrival schedule, slot placement,
+page placement, co-tenants, or batch width.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.rounding import parse_spec
+from repro.kernels import common
+from repro.kernels import flash_attention as FA
+from repro.models.model import build_model
+from repro.precision import attention as PA
+from repro.precision import policy as QP
+from repro.serving import BlockAllocator
+from repro.serving.engine import (ContinuousBatchingEngine, EngineConfig,
+                                  Request)
+
+KEY = jax.random.PRNGKey(13)
+WORDS = common.derive_seed(KEY, 0)
+SR8 = parse_spec("binary8-sr")
+SPECS = FA.AttnSpecs(SR8, SR8, parse_spec("e4m3-sr"))
+SITE_TAGS = (QP.TAG_ATTN_QK, QP.TAG_ATTN_AV, QP.TAG_ATTN_OUT)
+
+
+# ---------------------------------------------------------------- kernel ----
+def _paged_fixture(tables):
+    """A contiguous rounded cache + the same content scattered into pages
+    at the placement given by ``tables``."""
+    B, KV, G, dk = 2, 2, 2, 16
+    page, n_max, P = 8, 3, 8
+    smax = page * n_max
+    kq = jax.random.fold_in(KEY, 7)
+    grid = parse_spec("e4m3-rn")       # lossless under e4m3 packing
+    q = jax.random.normal(kq, (B * KV, G, dk), jnp.float32)
+    kf = grid(jax.random.normal(jax.random.fold_in(kq, 1),
+                                (B * KV, smax, dk)))
+    vf = grid(jax.random.normal(jax.random.fold_in(kq, 2),
+                                (B * KV, smax, dk)))
+    k_pages = np.zeros((P * KV, page, dk), np.float32)
+    v_pages = np.zeros((P * KV, page, dk), np.float32)
+    for b in range(B):
+        for j in range(n_max):
+            for h in range(KV):
+                row = tables[b, j] * KV + h
+                k_pages[row] = np.asarray(kf)[b * KV + h,
+                                              j * page:(j + 1) * page]
+                v_pages[row] = np.asarray(vf)[b * KV + h,
+                                              j * page:(j + 1) * page]
+    seeds = PA._site_seeds(WORDS, B * KV, SITE_TAGS)
+    return (q, kf, vf, jnp.asarray(k_pages), jnp.asarray(v_pages), seeds,
+            dict(B=B, KV=KV, page=page))
+
+
+LENGTHS = np.array([13, 20], np.int32)
+TABLES_A = np.array([[3, 1, 5], [2, 6, 4]], np.int32)
+TABLES_B = np.array([[7, 2, 1], [5, 3, 6]], np.int32)
+
+
+def test_paged_decode_matches_contiguous_bitwise():
+    q, kf, vf, k_pages, v_pages, seeds, d = _paged_fixture(TABLES_A)
+    B, KV, page = d["B"], d["KV"], d["page"]
+    kw = dict(scale=0.3, window=0)
+
+    @jax.jit
+    def run():
+        lens, tbl = jnp.asarray(LENGTHS), jnp.asarray(TABLES_A)
+        o_paged = FA.flash_decode_paged_p(q, k_pages, v_pages, seeds, lens,
+                                          tbl, SPECS, n_kv=KV, **kw)
+        o_ref = FA.flash_decode_paged_reference(q, k_pages, v_pages, seeds,
+                                                lens, tbl, SPECS, n_kv=KV,
+                                                **kw)
+        outs = []
+        for b in range(B):     # contiguous kernel: one scalar length each
+            sl = slice(b * KV, (b + 1) * KV)
+            outs.append(FA.flash_decode_p(q[sl], kf[sl], vf[sl], seeds[sl],
+                                          LENGTHS[b], SPECS, kv_block=page,
+                                          **kw))
+        return o_paged, o_ref, jnp.concatenate(outs)
+
+    o_paged, o_ref, o_contig = run()
+    assert bool(jnp.all(o_paged == o_ref))
+    assert bool(jnp.all(o_paged == o_contig))
+
+
+def test_paged_decode_packed_and_placement_invariant():
+    q, kf, vf, k_pages, v_pages, seeds, d = _paged_fixture(TABLES_A)
+    B, KV, page = d["B"], d["KV"], d["page"]
+    kw = dict(scale=0.3, window=0)
+
+    @jax.jit
+    def run_packed(k_pg, v_pg, tbl):
+        kp = common.pack_block(k_pg, "e4m3")
+        vp = common.pack_block(v_pg, "e4m3")
+        o_paged = FA.flash_decode_paged_p(q, kp, vp, seeds,
+                                          jnp.asarray(LENGTHS), tbl, SPECS,
+                                          n_kv=KV, kv_fmt="e4m3", **kw)
+        outs = []
+        for b in range(B):
+            sl = slice(b * KV, (b + 1) * KV)
+            outs.append(FA.flash_decode_p(
+                q[sl], common.pack_block(kf[sl], "e4m3"),
+                common.pack_block(vf[sl], "e4m3"), seeds[sl], LENGTHS[b],
+                SPECS, kv_fmt="e4m3", kv_block=page, **kw))
+        return o_paged, jnp.concatenate(outs)
+
+    o_paged, o_contig = run_packed(k_pages, v_pages, jnp.asarray(TABLES_A))
+    assert bool(jnp.all(o_paged == o_contig))
+
+    # same logical content at a different physical placement: the output
+    # must not depend on which pages the blocks landed in
+    _, _, _, k2, v2, _, _ = _paged_fixture(TABLES_B)
+    o_paged2, _ = run_packed(k2, v2, jnp.asarray(TABLES_B))
+    assert bool(jnp.all(o_paged == o_paged2))
+
+
+# --------------------------------------------------------- rounded stores ---
+def test_round_kv_request_chunk_and_slot_invariance():
+    spec = parse_spec("e4m3-sr")
+    x = jax.random.normal(jax.random.fold_in(KEY, 3), (2, 8, 2, 16))
+    words = jnp.asarray(
+        np.array([[11, 22], [33, 44]], np.uint32))
+
+    whole = PA.round_kv_request(x, spec, words, jnp.zeros(2, jnp.int32))
+    lo = PA.round_kv_request(x[:, :4], spec, words, jnp.zeros(2, jnp.int32))
+    hi = PA.round_kv_request(x[:, 4:], spec, words,
+                             jnp.full((2,), 4, jnp.int32))
+    assert bool(jnp.all(whole == jnp.concatenate([lo, hi], axis=1)))
+
+    # slot permutation: each request's rounded values ride with its words,
+    # not with its batch row
+    perm = PA.round_kv_request(x[::-1], spec, words[::-1],
+                               jnp.zeros(2, jnp.int32))
+    assert bool(jnp.all(whole == perm[::-1]))
+
+
+# ---------------------------------------------------------------- engine ----
+@pytest.fixture(scope="module")
+def served_model():
+    pol = QP.make_policy(attn=parse_spec("binary8-sr"),
+                         kv_cache_fmt="e4m3-sr")
+    cfg = dataclasses.replace(reduced(get_config("tinyllama-1.1b")),
+                              gemm_policy=pol)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _requests(cfg, n=5):
+    rng = np.random.default_rng(1)
+    return [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size,
+                                        5 + 3 * i).tolist(),
+                    max_new_tokens=3 + i, tenant="ab"[i % 2], seed=100 + i)
+            for i in range(n)]
+
+
+def _run(model, params, reqs, n_slots, pages, arrivals):
+    eng = ContinuousBatchingEngine(model, params, EngineConfig(
+        n_slots=n_slots, page_size=8, total_pages=pages,
+        max_pages_per_request=4, prefill_chunk=4, token_budget=8))
+    res = eng.run([dataclasses.replace(r) for r in reqs], arrivals=arrivals)
+    return {rid: r.tokens for rid, r in res.items()}, eng
+
+
+def test_engine_streams_bit_identical_across_schedules(served_model):
+    model, params = served_model
+    reqs = _requests(model.cfg)
+    t1, e1 = _run(model, params, reqs, 3, 12, [0, 0, 1, 4, 6])
+    t2, e2 = _run(model, params, reqs, 2, 9, [2, 0, 5, 0, 1])
+    # different batch widths, page pools, arrival orders, co-tenants —
+    # identical per-request token streams, bit for bit
+    assert t1 == t2
+    assert all(len(t1[r.rid]) == r.max_new_tokens for r in reqs)
+    # every page returned to the allocator after completion
+    assert e1._alloc.free_pages == 11
+    assert e2._alloc.free_pages == 8
+
+
+def test_engine_single_slot_replay(served_model):
+    model, params = served_model
+    reqs = _requests(model.cfg, n=3)
+    batch, _ = _run(model, params, reqs, 3, 12, [0, 0, 0])
+    solo, _ = _run(model, params, reqs, 1, 5, [0, 1, 2])
+    assert batch == solo
+
+
+def test_engine_completes_with_page_pressure(served_model):
+    # pool smaller than the aggregate demand: admission must block at the
+    # head of the line and recycle freed pages until everyone finishes
+    model, params = served_model
+    reqs = _requests(model.cfg)
+    free_run, _ = _run(model, params, reqs, 3, 12, [0, 0, 1, 4, 6])
+    tight, eng = _run(model, params, reqs, 3, 5, [0] * 5)
+    assert tight == free_run
+    assert eng._alloc.free_pages == 4
+
+
+def test_engine_submit_validation(served_model):
+    model, params = served_model
+    eng = ContinuousBatchingEngine(model, params, EngineConfig(
+        n_slots=2, page_size=8, total_pages=8, max_pages_per_request=2))
+    eng.submit(Request(rid=1, prompt=[3, 4], max_new_tokens=2))
+    with pytest.raises(ValueError, match="duplicate"):
+        eng.submit(Request(rid=1, prompt=[3], max_new_tokens=1))
+    with pytest.raises(ValueError):
+        eng.submit(Request(rid=2, prompt=[], max_new_tokens=1))
+    with pytest.raises(ValueError, match="pages"):
+        # needs ceil((20+20)/8) = 5 pages > table width 2
+        eng.submit(Request(rid=3, prompt=list(range(1, 21)),
+                           max_new_tokens=20))
+    assert eng.cancel(1)
+    assert not eng.cancel(99)
+
+
+# ------------------------------------------------------------- allocator ----
+def test_block_allocator():
+    alloc = BlockAllocator(total_pages=6)
+    assert alloc.free_pages == 5          # page 0 is reserved scratch
+    a = alloc.alloc(2)
+    b = alloc.alloc(3)
+    assert a is not None and b is not None
+    assert 0 not in a + b
+    assert len(set(a + b)) == 5
+    assert alloc.alloc(1) is None         # exhausted: caller must wait
+    alloc.free(a)
+    with pytest.raises(ValueError):
+        alloc.free(a)                     # double free
+    with pytest.raises(ValueError):
+        alloc.free([0])                   # scratch page is never client-owned
+    c = alloc.alloc(2)
+    assert c is not None and set(c) == set(a)
+
+
+# ------------------------------------------------------------- public API ---
+def test_resolve_kv_cache_fmt():
+    assert QP.resolve_kv_cache_fmt(None) is None
+    assert QP.resolve_kv_cache_fmt("fp32") is None     # identity -> fp cache
+    assert QP.resolve_kv_cache_fmt("e4m3-sr") == "e4m3-sr"
+    with pytest.raises(Exception):
+        QP.resolve_kv_cache_fmt("not-a-spec")
+    pol = QP.policy_with_kv_fmt("binary8-paper", "e4m3-sr")
+    assert pol.kv_cache_fmt == "e4m3-sr"
+    assert QP.policy_with_kv_fmt(None, None).kv_cache_fmt is None
