@@ -50,6 +50,25 @@ TRAFFIC_FUSED = 24.0
 TRAFFIC_FUSED_PRNG = 12.0
 TRAFFIC_FP32 = 12.0
 
+# Fused-QAdam HBM traffic (B/elt, f32 params).  The pre-tentpole fp32-
+# moment path ran the two EMA carries and the Adam direction as separate
+# jnp passes around the rounded chain: r/w m (12) + r/w v (12) +
+# direction (12) + chain (12) = 48 B/elt.  The fully-fused kernel reads
+# x+g and carries the moments through one pass; packing the carries to
+# grid codes shrinks their streams to the code width:
+#   fused, fp32 moments : r x,g,m,v + w x',m',v' = 28 B/elt
+#   fused, bf16 (u16)   : 4+4+2+2   + 4+2+2      = 20
+#   fused, e4m3 (u8)    : 4+4+1+1   + 4+1+1      = 16
+# On memory-bound TPU the packed-moment step therefore moves 20/48 ~ 0.42x
+# the bytes of the fp32-moment path it replaces (the gated model row).
+# CPU interpret wall-clock instead pays the unpack/round/pack compute, so
+# the measured gate compares against the same end-to-end optimizer step,
+# not the raw kernel.
+TRAFFIC_ADAM_JNP_FP32 = 48.0
+TRAFFIC_ADAM_FUSED_FP32 = 28.0
+TRAFFIC_ADAM_FUSED_BF16 = 20.0
+TRAFFIC_ADAM_FUSED_E4M3 = 16.0
+
 # Packed-storage GEMM traffic (square M=N=K, f32 operands).  The PRNG-mode
 # rounded GEMM moves read-a + read-b + write-out; packing the rounded
 # output to uint8 code words (binary8/e4m3) cuts the write stream 4x, and
@@ -198,6 +217,70 @@ def run(n: int = 1 << 20):
          lambda: cast_sr2_r8(x),
          lambda: cast_fxp(x),
      ])
+
+    # -- fused QAdam: rounded/packed moment carries inside the kernel ------
+    # End-to-end optimizer steps (init + jit'd apply on a 1M-element leaf):
+    # the pre-tentpole jnp fp32-moment path, the fused kernel with fp32
+    # moments, and the fused kernel carrying packed bf16 moments rounded
+    # by oracle SR and by the PRF-free bit-trick.
+    from repro.optim.adam import qadam
+
+    params_t, grads_t = {"w": x}, {"w": g}
+
+    def _adam(update_path, spec_name, packed):
+        opt = qadam(lr=0.01, cfg=cfg,
+                    m_spec=rounding.parse_spec(spec_name),
+                    v_spec=rounding.parse_spec(spec_name),
+                    update_path=update_path, moments_packed=packed)
+        st = opt.init(params_t, jax.random.PRNGKey(2))
+        fn = jax.jit(lambda p_, g_, s_: opt.apply(p_, g_, s_))
+        return lambda: fn(params_t, grads_t, st)
+
+    (us_adam_jnp32, us_adam_fused32, us_adam_packed,
+     us_adam_packed_bt) = _time_many([
+         _adam("jnp", "fp32", False),
+         _adam("fused", "fp32", False),
+         _adam("fused", "bfloat16-sr", True),
+         _adam("fused", "bf16-sr-bittrick", True),
+     ])
+
+    # the bf16 store site alone: oracle-SR Threefry draw vs the int
+    # bit-trick (add 16 random mantissa bits, mask, truncate) at r=16
+    cast_bf16_threefry = lambda x_: ops.sr_cast_prng(x_, key, "bfloat16",
+                                                     "sr")
+    cast_bf16_bittrick = lambda x_: ops.sr_cast_prng(
+        x_, key, "bfloat16", "sr_bittrick", rand_bits=16)
+    us_cast_th, us_cast_bt = _time_many([
+        lambda: cast_bf16_threefry(x),
+        lambda: cast_bf16_bittrick(x),
+    ])
+
+    # -- checkpoint step-path pause ----------------------------------------
+    # What save(blocking=False) costs the caller (device snapshot +
+    # enqueue) vs the full packed write the writer thread absorbs.
+    import tempfile
+
+    import numpy as _np
+
+    from repro.checkpoint import CheckpointManager
+
+    snap_grid = rounding.parse_spec("bfloat16-rn")
+    ck_tree = {k_: snap_grid(v_) for k_, v_ in tree_p.items()}
+    ck_iters = 8
+    pauses, fulls = [], []
+    with tempfile.TemporaryDirectory() as td:
+        mgr = CheckpointManager(td, keep=2, fmt="bf16-sr", shards=4)
+        for i in range(ck_iters):
+            t0 = time.perf_counter()
+            mgr.save(2 * i, ck_tree, blocking=False)
+            pauses.append(time.perf_counter() - t0)
+            mgr.wait()
+            t0 = time.perf_counter()
+            mgr.save(2 * i + 1, ck_tree, blocking=True)
+            fulls.append(time.perf_counter() - t0)
+        mgr.wait()
+    ck_pause_ms = float(_np.median(pauses)) * 1e3
+    ck_blocking_ms = float(_np.median(fulls)) * 1e3
 
     # -- quantized-GEMM path (eq. 8a): qdot fwd / dgrad / wgrad ------------
     # Each site is one result-rounded GEMM through qmatmul_prng_p with
@@ -420,6 +503,49 @@ def run(n: int = 1 << 20):
         # measured CPU speedup of the kernel path over the per-leaf jnp path
         ("kernel/fused_prng_vs_jnp_speedup", 0.0, us_jnp / us_fused_prng,
          ITERS),
+        # fused QAdam optimizer steps (1M-elt leaf) vs the fp32 SGD update
+        # of the same size; the packed rows carry bf16 grid-coded moments
+        # inside the kernel (oracle-SR and bit-trick store sites)
+        ("kernel/adam_jnp_fp32_moments_us_per_Melt", us_adam_jnp32 / melt,
+         us_adam_jnp32 / us_fp32, ITERS),
+        ("kernel/adam_fused_fp32_moments_us_per_Melt",
+         us_adam_fused32 / melt, us_adam_fused32 / us_fp32, ITERS),
+        ("kernel/adam_fused_packed_bf16sr_us_per_Melt",
+         us_adam_packed / melt, us_adam_packed / us_fp32, ITERS),
+        ("kernel/adam_fused_packed_bittrick_us_per_Melt",
+         us_adam_packed_bt / melt, us_adam_packed_bt / us_fp32, ITERS),
+        # contract row (CI --max cap 1.0): the packed-moment fused step
+        # must beat the fp32-moment optimizer step it replaced, measured
+        # end to end in the same run
+        ("kernel/adam_packed_vs_fp32_path_ratio", 0.0,
+         us_adam_packed_bt / us_adam_jnp32, ITERS),
+        # fused-Adam HBM traffic model (see constants above); the ratio
+        # row is the acceptance bound (CI --max cap 0.6)
+        ("kernel/adam_traffic_jnp_fp32_B_per_elt", 0.0,
+         TRAFFIC_ADAM_JNP_FP32, 0),
+        ("kernel/adam_traffic_fused_fp32_B_per_elt", 0.0,
+         TRAFFIC_ADAM_FUSED_FP32, 0),
+        ("kernel/adam_traffic_fused_bf16_B_per_elt", 0.0,
+         TRAFFIC_ADAM_FUSED_BF16, 0),
+        ("kernel/adam_traffic_fused_e4m3_B_per_elt", 0.0,
+         TRAFFIC_ADAM_FUSED_E4M3, 0),
+        ("kernel/adam_moments_traffic_ratio_vs_fp32_path", 0.0,
+         TRAFFIC_ADAM_FUSED_BF16 / TRAFFIC_ADAM_JNP_FP32, 0),
+        # bf16 store site: oracle-SR Threefry draw vs the PRF-free int
+        # bit-trick; the ratio row is CI-capped < 1.0 (the trick must
+        # actually be cheaper than the draw it replaces)
+        ("kernel/sr_cast_bf16_threefry_us_per_Melt", us_cast_th / melt,
+         us_cast_th / us_memcpy, ITERS),
+        ("kernel/sr_cast_bf16_bittrick_us_per_Melt", us_cast_bt / melt,
+         us_cast_bt / us_memcpy, ITERS),
+        ("kernel/bittrick_vs_threefry_draw_ratio", 0.0,
+         us_cast_bt / us_cast_th, ITERS),
+        # checkpoint step path: what save(blocking=False) costs the caller
+        # (device snapshot + enqueue) vs the full packed write; both rows
+        # CI-capped (the pause must stay off the step path)
+        ("checkpoint/step_path_pause_ms", 0.0, ck_pause_ms, ck_iters),
+        ("checkpoint/async_pause_vs_blocking_ratio", 0.0,
+         ck_pause_ms / ck_blocking_ms, ck_iters),
         # quantized-GEMM sites (512^3 GEMM, binary8 SR result rounding,
         # autotuned blocks); derived = CPU overhead ratio vs the fp32 jnp
         # GEMM of that shape

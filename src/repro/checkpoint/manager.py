@@ -5,15 +5,27 @@ Fault-tolerance contract (designed for preemptible 1000-node fleets):
 * **Atomicity** — a checkpoint is staged into ``step_<n>.tmp`` and
   ``os.rename``d into place only when fully written; a crash mid-save can
   never corrupt the latest restorable state.
-* **Asynchrony** — arrays are snapshotted to host (``jax.device_get``)
-  synchronously (cheap), then serialized on a background thread so the
-  training step resumes immediately; ``wait()`` fences before exit, and an
-  ``atexit`` hook fences automatically so an async save in flight at
-  interpreter exit is never silently dropped.
+* **Asynchrony** — ``save(blocking=False)`` takes a cheap *device-side*
+  snapshot (one ``jnp.copy`` per leaf, guarding against later donation or
+  deletion) and returns; the device→host transfer AND serialization both
+  run on the background writer thread, so the step path only enqueues.
+  ``wait()`` fences before exit, and an ``atexit`` hook fences
+  automatically so an async save in flight at interpreter exit is never
+  silently dropped.
 * **Elasticity** — leaves are stored as *full* (unsharded) host arrays with
   the pytree structure; ``restore`` re-places them under whatever sharding
   the *current* mesh prescribes, so a job can resume on a smaller/larger
   topology after node loss (pod-loss drill in tests/test_checkpoint.py).
+* **Compactness** — with a ``fmt`` grid configured, float32 leaves whose
+  values already live on that rounding grid (rounded params, low-precision
+  moment carries) are stored as packed uint8/uint16 grid codes — the same
+  (sign | exponent | mantissa) layout as ``kernels/common.pack_block``,
+  re-derived here in pure numpy.  Packing is **self-validating**: each
+  leaf is encoded, decoded, and compared bitwise on the writer thread;
+  any leaf that does not round-trip exactly (fp32 state, off-grid values)
+  is stored raw.  Restore is therefore bit-exact *unconditionally*.
+  Leaves are distributed over several ``leaves*.npz`` shard files
+  (size-balanced) so large checkpoints stream/fsck in parallel.
 * **Completeness** — the data-pipeline step and PRNG state checkpoint with
   the model, so restart is bit-exact (stochastic rounding uses counter-based
   keys; see optim/base.py).
@@ -22,6 +34,8 @@ Fault-tolerance contract (designed for preemptible 1000-node fleets):
   *intact* checkpoint, so a garbled ``leaves.npz`` (disk bit-rot, torn
   write on a dying node) costs at most ``save_every`` steps, not the run.
   Writes retry transient I/O errors with capped exponential backoff.
+  Checkpoints written by the pre-packing format (single ``leaves.npz``,
+  no ``format`` field) remain restorable.
 """
 from __future__ import annotations
 
@@ -39,8 +53,11 @@ from typing import Any, Callable, List, Optional
 import jax
 import numpy as np
 
-# files whose checksums guard a checkpoint's integrity
+# files whose checksums guard a *legacy* checkpoint's integrity (v2
+# checkpoints list every file explicitly in meta["sha256"])
 _HASHED_FILES = ("leaves.npz", "treedef.pkl")
+
+_FORMAT_V2 = 2
 
 # transient-I/O retry schedule: attempts, initial delay, cap (seconds)
 _WRITE_ATTEMPTS = 3
@@ -56,6 +73,94 @@ def _sha256(path: str) -> str:
     return h.hexdigest()
 
 
+# ---------------------------------------------------------------------------
+# Pure-numpy packed grid codes — the same generic (sign | biased-exponent |
+# mantissa) layout as kernels/common.pack_block/unpack_block, usable on the
+# writer thread without touching jax.  ldexp is an exact power-of-two
+# scaling in float64, and every grid significand fits 24 bits, so encode
+# and decode are exact wherever the jax codec is.
+# ---------------------------------------------------------------------------
+def _grid_pack_params(grid_name: str):
+    from repro.core.grids import get_grid
+    from repro.kernels.common import pack_spec
+    fmt = get_grid(grid_name).fmt
+    ebits, mbits, width, has_nf = pack_spec(grid_name)
+    return fmt, ebits, mbits, width, has_nf
+
+
+def pack_np(x: np.ndarray, grid_name: str) -> np.ndarray:
+    """float32 values on ``grid_name``'s grid -> packed uint8/uint16 codes."""
+    fmt, ebits, mbits, width, has_nf = _grid_pack_params(grid_name)
+    x = np.asarray(x, np.float32)
+    sign = np.signbit(x).astype(np.uint32)
+    mag = np.abs(x)
+    finite = np.isfinite(x)
+    mag_f = np.where(finite, mag, np.float32(fmt.xmax))
+    is_sub = mag_f < np.float32(fmt.xmin)
+    with np.errstate(divide="ignore"):
+        bits32 = mag_f.view(np.uint32)
+        raw_exp = ((bits32 >> 23) & 0xFF).astype(np.int64)
+        e_norm = raw_exp - 127
+    e = np.where(is_sub, np.int64(fmt.emin), e_norm)
+    q = np.ldexp(mag_f.astype(np.float64), mbits - e)
+    m = q.astype(np.uint32) & np.uint32((1 << mbits) - 1)
+    field = np.where(is_sub, np.uint32(0),
+                     (e - fmt.emin + 1).astype(np.uint32))
+    code = (sign << np.uint32(ebits + mbits)) | (field << np.uint32(mbits)) | m
+    if has_nf:
+        nf_field = np.uint32((1 << ebits) - 1)
+        m_nf = np.where(np.isnan(x), np.uint32((1 << mbits) - 1),
+                        np.uint32(0))
+        code_nf = (sign << np.uint32(ebits + mbits)) \
+            | (nf_field << np.uint32(mbits)) | m_nf
+        code = np.where(finite, code, code_nf)
+    return code.astype(np.uint8 if width == 1 else np.uint16)
+
+
+def unpack_np(codes: np.ndarray, grid_name: str) -> np.ndarray:
+    """Inverse of :func:`pack_np` — exact float32 grid values."""
+    fmt, ebits, mbits, _, has_nf = _grid_pack_params(grid_name)
+    c = np.asarray(codes).astype(np.uint32)
+    sign = (c >> np.uint32(ebits + mbits)) & np.uint32(1)
+    field = (c >> np.uint32(mbits)) & np.uint32((1 << ebits) - 1)
+    m = c & np.uint32((1 << mbits) - 1)
+    is_sub = field == 0
+    e = np.where(is_sub, np.int64(fmt.emin),
+                 field.astype(np.int64) - 1 + fmt.emin)
+    sig = np.where(is_sub, m, m + np.uint32(1 << mbits)).astype(np.float64)
+    with np.errstate(over="ignore"):    # non-finite codes overwritten below
+        out = np.ldexp(sig, e - mbits).astype(np.float32)
+    out = np.where(sign == 1, -out, out)
+    # -0.0: sign applied via copysign for the zero codes
+    out = np.where((sig == 0) & (sign == 1), np.float32(-0.0), out)
+    if has_nf:
+        nf = field == (1 << ebits) - 1
+        inf = np.where(sign == 1, -np.inf, np.inf).astype(np.float32)
+        out = np.where(nf, np.where(m == 0, inf, np.float32(np.nan)), out)
+    return out
+
+
+def resolve_ckpt_grid(fmt: Optional[str]) -> Optional[str]:
+    """Validate a ``--ckpt-fmt`` value and return the canonical grid name.
+
+    Accepts any canonical spec name (``"bf16-sr"`` — the scheme part is
+    ignored, packing is a lossless re-encoding of values already on the
+    grid), a bare grid name (``"e4m3"``), or ``"fp32"``/``"none"``/None
+    for no packing.  Raises on unknown names or grids too wide to pack —
+    the import-time validation contract of the launch CLI.
+    """
+    if fmt is None:
+        return None
+    from repro.core.schemes import parse_spec_name
+    parsed = parse_spec_name(fmt if "-" in fmt else f"{fmt}-rn") \
+        if fmt not in ("fp32", "none") else None
+    if parsed is None or parsed.grid is None:
+        return None
+    from repro.kernels.common import pack_spec
+    pack_spec(parsed.grid)           # raise early on unpackable grids
+    return parsed.grid
+
+
 def _atexit_fence(ref):
     mgr = ref()
     if mgr is not None:
@@ -63,9 +168,12 @@ def _atexit_fence(ref):
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3):
+    def __init__(self, directory: str, keep: int = 3,
+                 fmt: Optional[str] = None, shards: int = 4):
         self.directory = directory
         self.keep = keep
+        self.fmt = resolve_ckpt_grid(fmt)
+        self.shards = max(1, int(shards))
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
@@ -74,38 +182,111 @@ class CheckpointManager:
         atexit.register(_atexit_fence, weakref.ref(self))
 
     # ------------------------------------------------------------------ save
-    def save(self, step: int, tree: Any, *, blocking: bool = False,
-             extra: Optional[dict] = None):
-        """Checkpoint a pytree (device arrays gathered to host first)."""
-        self.wait()
-        host_tree = jax.tree.map(
+    def _snapshot(self, tree: Any) -> Any:
+        """Device-side copy of every array leaf — O(bytes) on-device, no
+        host transfer; later donation/overwrite of the live buffers cannot
+        corrupt the pending write."""
+        import jax.numpy as jnp
+
+        def snap(x):
+            if isinstance(x, jax.Array):
+                return jnp.copy(x)
+            if isinstance(x, np.ndarray):
+                return np.array(x, copy=True)
+            return x
+
+        return jax.tree.map(snap, tree)
+
+    def _to_host(self, tree: Any) -> Any:
+        """Gather snapshot leaves to host numpy (writer-thread side)."""
+        return jax.tree.map(
             lambda x: np.asarray(jax.device_get(x))
             if isinstance(x, (jax.Array, np.ndarray)) else x, tree)
 
-        def write_once():
+    def _encode_leaf(self, arr):
+        """(stored_array, grid_name_or_None): pack a float32 leaf to grid
+        codes iff the round-trip is bitwise exact (self-validating)."""
+        if (self.fmt is None or not isinstance(arr, np.ndarray)
+                or arr.dtype != np.float32 or arr.size == 0):
+            return arr, None
+        try:
+            codes = pack_np(arr, self.fmt)
+            back = unpack_np(codes, self.fmt)
+        except Exception:
+            return arr, None
+        if np.array_equal(back.view(np.uint32), arr.view(np.uint32)):
+            return codes, self.fmt
+        return arr, None
+
+    @staticmethod
+    def _shard_name(k: int) -> str:
+        # shard 0 keeps the legacy name: external tooling (fault
+        # injection's corrupt_checkpoint) targets "leaves.npz"
+        return "leaves.npz" if k == 0 else f"leaves.{k}.npz"
+
+    def _assign_shards(self, leaves) -> List[int]:
+        """Greedy size-balanced shard index per leaf."""
+        n_shards = min(self.shards, max(1, len(leaves)))
+        loads = [0] * n_shards
+        assign = [0] * len(leaves)
+        order = sorted(range(len(leaves)),
+                       key=lambda i: -getattr(leaves[i], "nbytes", 0))
+        for i in order:
+            k = loads.index(min(loads))
+            assign[i] = k
+            loads[k] += max(getattr(leaves[i], "nbytes", 0), 1)
+        return assign
+
+    def save(self, step: int, tree: Any, *, blocking: bool = False,
+             extra: Optional[dict] = None):
+        """Checkpoint a pytree.  Non-blocking saves snapshot device-side
+        and hand off; the host transfer happens on the writer thread."""
+        self.wait()
+        snap_tree = self._snapshot(tree)
+
+        def write_once(host_tree):
             tmp = os.path.join(self.directory, f"step_{step}.tmp")
             final = os.path.join(self.directory, f"step_{step}")
             shutil.rmtree(tmp, ignore_errors=True)
             os.makedirs(tmp)
             leaves, treedef = jax.tree_util.tree_flatten(host_tree)
-            np.savez(os.path.join(tmp, "leaves.npz"),
-                     **{f"leaf_{i}": l for i, l in enumerate(leaves)})
+            stored, leaf_meta = [], []
+            for arr in leaves:
+                enc, packed = self._encode_leaf(arr)
+                stored.append(enc)
+                leaf_meta.append({"packed": packed})
+            assign = self._assign_shards(stored)
+            n_shards = (max(assign) + 1) if assign else 1
+            for i, k in enumerate(assign):
+                leaf_meta[i]["file"] = self._shard_name(k)
+            for k in range(n_shards):
+                np.savez(os.path.join(tmp, self._shard_name(k)),
+                         **{f"leaf_{i}": l for i, l in enumerate(stored)
+                            if assign[i] == k})
             with open(os.path.join(tmp, "treedef.pkl"), "wb") as f:
                 pickle.dump(treedef, f)
+            hashed = [self._shard_name(k) for k in range(n_shards)] \
+                + ["treedef.pkl"]
             digests = {name: _sha256(os.path.join(tmp, name))
-                       for name in _HASHED_FILES}
+                       for name in hashed}
             with open(os.path.join(tmp, "meta.json"), "w") as f:
                 json.dump({"step": step, "extra": extra or {},
-                           "sha256": digests}, f)
+                           "format": _FORMAT_V2, "sha256": digests,
+                           "leaves": leaf_meta}, f)
             shutil.rmtree(final, ignore_errors=True)
             os.rename(tmp, final)
             self._gc()
 
         def write():
+            try:
+                host_tree = self._to_host(snap_tree)
+            except BaseException as e:
+                self._error = e
+                return
             delay = _WRITE_DELAY
             for attempt in range(_WRITE_ATTEMPTS):
                 try:
-                    write_once()
+                    write_once(host_tree)
                     return
                 except OSError as e:       # transient I/O: retry w/ backoff
                     if attempt == _WRITE_ATTEMPTS - 1:
@@ -169,8 +350,10 @@ class CheckpointManager:
     def verify(self, step: int) -> bool:
         """True iff step's files are present and match recorded checksums.
 
-        Pre-checksum checkpoints (no "sha256" in meta) pass on existence
-        alone, so old run directories stay restorable.
+        v2 checkpoints hash every shard file; legacy checkpoints hash
+        ``leaves.npz``/``treedef.pkl``, and pre-checksum checkpoints (no
+        "sha256" in meta) pass on existence alone, so old run directories
+        stay restorable.
         """
         path = os.path.join(self.directory, f"step_{step}")
         try:
@@ -179,7 +362,8 @@ class CheckpointManager:
         except (OSError, ValueError):
             return False
         digests = meta.get("sha256")
-        for name in _HASHED_FILES:
+        names = sorted(digests) if digests else _HASHED_FILES
+        for name in names:
             fpath = os.path.join(path, name)
             if not os.path.exists(fpath):
                 return False
@@ -191,11 +375,26 @@ class CheckpointManager:
         path = os.path.join(self.directory, f"step_{step}")
         with open(os.path.join(path, "treedef.pkl"), "rb") as f:
             treedef = pickle.load(f)
-        data = np.load(os.path.join(path, "leaves.npz"), allow_pickle=True)
-        leaves = [data[f"leaf_{i}"] for i in range(len(data.files))]
-        tree = jax.tree_util.tree_unflatten(treedef, leaves)
         with open(os.path.join(path, "meta.json")) as f:
             meta = json.load(f)
+        if meta.get("format", 1) >= _FORMAT_V2:
+            leaf_meta = meta["leaves"]
+            files = {}
+            leaves = []
+            for i, entry in enumerate(leaf_meta):
+                fname = entry["file"]
+                if fname not in files:
+                    files[fname] = np.load(os.path.join(path, fname),
+                                           allow_pickle=True)
+                arr = files[fname][f"leaf_{i}"]
+                if entry.get("packed"):
+                    arr = unpack_np(arr, entry["packed"])
+                leaves.append(arr)
+        else:
+            data = np.load(os.path.join(path, "leaves.npz"),
+                           allow_pickle=True)
+            leaves = [data[f"leaf_{i}"] for i in range(len(data.files))]
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
         if shardings is not None:
             tree = jax.tree.map(
                 lambda x, s: jax.device_put(x, s) if s is not None else x,

@@ -196,7 +196,19 @@ def _uniform_from_bits(bits, rand_bits: int = 32,
     ``P(round up) = ceil(frac·2^r)/2^r``, a one-sided away-from-zero
     bias in ``[0, 2^-r)`` ulp.  For ``rand_bits=32`` this coincides with
     the uniform top-24-bit derivation (which is already uncentered).
+
+    ``randomness="bittrick"`` (the `copy_stochastic_` int-add idiom): the
+    *complemented* uncentered draw ``u = (b XOR (2^r-1))·2^-r``.  With
+    r=16 on the bfloat16 grid the event ``u < frac`` is *exactly* the
+    carry out of the low 16 mantissa bits in ``(bits32(x) + b) & mask``
+    — the oracle here and the kernels' integer fast path are
+    bit-identical given the same random words.  Same one-sided
+    ``[0, 2^-r)``-ulp bound as the comparison draw on other grids.
     """
+    if randomness == "bittrick":
+        mask = jnp.uint32((1 << rand_bits) - 1)
+        comp = ((bits & mask) ^ mask).astype(jnp.float32)
+        return comp * jnp.float32(2.0 ** -rand_bits)
     if rand_bits == 32:
         return (bits >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2.0 ** -24)
     if rand_bits not in RAND_BITS_CHOICES:

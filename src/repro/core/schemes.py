@@ -66,7 +66,7 @@ class RoundingScheme:
     """
 
     name: str
-    randomness: str                  # "none" | "uniform" | "comparison"
+    randomness: str        # "none" | "uniform" | "comparison" | "bittrick"
     p_up: Callable
     needs_v: bool = False
     default_eps: float = 0.0
@@ -79,9 +79,10 @@ class RoundingScheme:
 
     @property
     def p_up_is_frac(self) -> bool:
-        """Whether ``p_up == frac`` identically (SR / SR 2.0) — enables
-        the kernels' pure-SR fast path (the frac==0 fix-up is a no-op)."""
-        return self.name in ("sr", "sr2")
+        """Whether ``p_up == frac`` identically (SR / SR 2.0 / the bf16
+        bit-trick) — enables the kernels' pure-SR fast path (the frac==0
+        fix-up is a no-op)."""
+        return self.name in ("sr", "sr2", "sr_bittrick")
 
 
 def _p_sr(frac, fy, sign_x, eps, sign_v):
@@ -125,7 +126,11 @@ def _p_ru(frac, fy, sign_x, eps, sign_v):   # toward +inf
 
 
 _SCHEMES: Dict[str, RoundingScheme] = {}
-_ALIASES: Dict[str, str] = {"ssr": "signed_sr_eps"}
+# "sr-bittrick" lets the two-word spelling ("bf16-sr-bittrick") name the
+# scheme through the dash grammar; the canonical name keeps an underscore
+# so format_spec_name round-trips through the single-token path.
+_ALIASES: Dict[str, str] = {"ssr": "signed_sr_eps",
+                            "sr-bittrick": "sr_bittrick"}
 
 
 def register_scheme(s: RoundingScheme) -> None:
@@ -171,6 +176,16 @@ for _s in (
     # comparison, r=8 default → 1/4 of the PRF traffic of 32-bit SR.
     RoundingScheme("sr2", "comparison", _p_sr, default_rand_bits=8,
                    bias_bound="[0, 2^-r)·ulp away from zero (one-sided)"),
+    # PRF-free bf16 bit-trick SR (the `copy_stochastic_` idiom): add r
+    # random mantissa bits to the float32 word, mask to the top 16 bits.
+    # The carry out of the low bits IS the round-up event, so the oracle
+    # draw is the *complemented* uncentered uniform u = (b XOR (2^r-1))·2^-r
+    # — P(round up) = ceil(frac·2^r)/2^r, and on the bfloat16 grid (where
+    # frac is an exact multiple of 2^-16 for r=16) that equals frac
+    # exactly: unbiased SR per eq. 3 with zero PRF-to-uniform conversion.
+    RoundingScheme("sr_bittrick", "bittrick", _p_sr, default_rand_bits=16,
+                   bias_bound="0 on bfloat16 at r=16 (frac ∈ 2^-16·Z); "
+                              "[0, 2^-r)·ulp one-sided elsewhere"),
 ):
     register_scheme(_s)
 
@@ -221,10 +236,17 @@ def parse_spec_name(name: str) -> ParsedSpec:
             f"bad spec name {name!r}: expected '<grid>-<scheme>[-e<eps>]"
             f"[-r<bits>][-inf]' (or {'/'.join(IDENTITY_NAMES)})")
     grid = _grids.get_grid(tokens[0]).name
-    scheme = get_scheme(tokens[1])
+    # a scheme may be spelled with a dash ("sr-bittrick"): greedily try
+    # the two-token join first, then fall back to the single token.
+    rest = 2
+    if len(tokens) > 2 and _ALIASES.get("-".join(tokens[1:3])) in _SCHEMES:
+        scheme = get_scheme("-".join(tokens[1:3]))
+        rest = 3
+    else:
+        scheme = get_scheme(tokens[1])
     eps, rand_bits, overflow = scheme.default_eps, scheme.default_rand_bits, \
         "saturate"
-    for tok in tokens[2:]:
+    for tok in tokens[rest:]:
         m = _EPS_RE.match(tok)
         if m:
             eps = float(m.group(1))

@@ -58,6 +58,26 @@ def round_block(x, bits, fmt, mode, eps: float, v=None,
     z = grid.to_grid(x)
     z = jnp.where(jnp.abs(z) < jnp.float32(2.0 ** -126), z * 0.0, z)
 
+    if (scheme.randomness == "bittrick" and bits is not None
+            and not grid.transformed and fmt.name == "bfloat16"
+            and rand_bits == 16):
+        # PRF-free bf16-SR int fast path (`copy_stochastic_`): add 16
+        # random bits to the float32 word, truncate to the top 16.  The
+        # carry out of the low half is exactly the oracle's round-up
+        # event u < frac with the complemented draw (rounding.
+        # _uniform_from_bits "bittrick"), so this is bit-identical to
+        # the generic path below given the same words.  Finite inputs
+        # can only overflow to ±inf (the carry stops at the exponent
+        # field), never to a NaN pattern, and ±0 / −0 are preserved by
+        # the integer arithmetic itself.
+        zb = jax.lax.bitcast_convert_type(z, jnp.uint32)
+        r = (zb + (bits & jnp.uint32(0xFFFF))) & jnp.uint32(0xFFFF0000)
+        out = jax.lax.bitcast_convert_type(r, jnp.float32)
+        if overflow != "inf":
+            out = jnp.where(jnp.isfinite(out), out,
+                            jnp.sign(z) * jnp.float32(fmt.xmax))
+        return jnp.where(jnp.isfinite(x), out, x)
+
     floor_mag, quantum, frac, fy = magnitude_decompose(z, fmt)
     sign_x = jnp.sign(z)
 

@@ -32,7 +32,8 @@ import jax.numpy as jnp
 
 from repro.core.gd import GDRounding
 from repro.kernels import common
-from repro.kernels.fused_update import fused_qupdate_p, fused_qupdate_prng_p
+from repro.kernels.fused_update import (fused_qadam_prng_p, fused_qupdate_p,
+                                        fused_qupdate_prng_p)
 
 
 def tree_ravel(tree) -> Tuple[jax.Array, Any]:
@@ -93,3 +94,39 @@ def fused_tree_update(params, grads, t, cfg: GDRounding, key,
     else:
         raise ValueError(f"unknown tree-update mode {mode!r}")
     return tree_unravel(out, spec)
+
+
+def fused_tree_adam_update(params, grads, m, v, scal, cfg: GDRounding, key,
+                           step=0, *, m_spec, v_spec, b1: float, b2: float,
+                           packed: bool, cm=None, cv=None, block_rows=None,
+                           interpret: Optional[bool] = None):
+    """Fully-fused QAdam step over a whole pytree: ONE ``pallas_call``
+    carries the rounded m/v moment EMAs (optionally packed grid codes,
+    optionally Kahan-compensated), the bias-corrected direction, and the
+    eq.-8 chain.
+
+    ``m``/``v`` (and ``cm``/``cv``) are *flat* carries over the raveled
+    parameter vector — the layout the optimizer state stores between
+    steps, so moment traffic never re-ravels.  ``scal`` is the (5,)
+    float32 ``[t, c1, c2, eps, weight_decay]`` vector (traced values).
+    Returns ``(params⁺ pytree, m', v', cm', cv')`` with ``cm'``/``cv'``
+    None when uncompensated.
+    """
+    xf, spec = tree_ravel(params)
+    gf, _ = tree_ravel(grads)
+    if xf.size == 0:
+        return params, m, v, cm, cv
+    if xf.shape != gf.shape:
+        raise ValueError(f"params/grads size mismatch: {xf.shape} vs "
+                         f"{gf.shape}")
+    if m.shape != xf.shape or v.shape != xf.shape:
+        raise ValueError(f"moment carries must be flat {xf.shape}, got "
+                         f"{m.shape}/{v.shape}")
+    seed = common.derive_seed(key, step)
+    outs = fused_qadam_prng_p(xf, gf, m, v, scal, seed, cfg,
+                              m_spec=m_spec, v_spec=v_spec, b1=b1, b2=b2,
+                              packed=packed, cm=cm, cv=cv,
+                              block_rows=block_rows, interpret=interpret)
+    x_new, m_new, v_new = outs[:3]
+    cm_new, cv_new = (outs[3], outs[4]) if cm is not None else (None, None)
+    return tree_unravel(x_new, spec), m_new, v_new, cm_new, cv_new

@@ -427,21 +427,23 @@ def param_and_opt_specs(cfg: ModelConfig, optimizer, mesh=None,
         lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
         params_shape, p_sh)
 
-    def opt_leaf(path, leaf):
-        return jax.ShapeDtypeStruct(
-            leaf.shape, leaf.dtype, sharding=NamedSharding(mesh, P()))
+    # optimizer-agnostic rule (mirrors launch/train._state_shardings):
+    # fields whose pytree mirrors the params (momentum, Adam moment trees)
+    # shard like the params; scalars, keys and flat fused carries replicate
+    rep = NamedSharding(mesh, P())
+    pstruct = jax.tree_util.tree_structure(params_shape)
 
-    # momentum mirrors param shardings; scalars replicated
-    mom = opt_shape.momentum
-    if mom != ():
-        m_sh = build_param_shardings(mom, mesh, ax)
-        mom = jax.tree.map(
-            lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
-            mom, m_sh)
-    opt_spec = opt_shape._replace(
-        momentum=mom,
-        step=jax.ShapeDtypeStruct((), jnp.int32,
-                                  sharding=NamedSharding(mesh, P())),
-        key=jax.ShapeDtypeStruct(opt_shape.key.shape, opt_shape.key.dtype,
-                                 sharding=NamedSharding(mesh, P())))
+    def field_spec(val):
+        if isinstance(val, tuple) and val == ():
+            return ()
+        if jax.tree_util.tree_structure(val) == pstruct:
+            sh = build_param_shardings(val, mesh, ax)
+            return jax.tree.map(
+                lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype,
+                                                  sharding=s), val, sh)
+        return jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=rep),
+            val)
+
+    opt_spec = type(opt_shape)(*[field_spec(v) for v in opt_shape])
     return params_spec, opt_spec

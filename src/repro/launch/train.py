@@ -40,7 +40,7 @@ from repro.launch.mesh import make_local_mesh, mesh_axes_for, parse_mesh
 from repro.dist.sharding import (build_param_shardings,
                                  evenly_divisible_spec, set_mesh_axes)
 from repro.models import build_model
-from repro.optim import base as optim_base, qsgd
+from repro.optim import base as optim_base, qadam, qsgd
 from repro.train import TrainLoop, TrainLoopConfig
 
 
@@ -72,15 +72,52 @@ def rounding_config(kind: str, fmt: str, eps: float) -> gd.GDRounding:
     return gd.GDRounding(grad=rounding.spec(fmt, "rn"), mul=sp, sub=sp)
 
 
+def parse_moments_spec(name):
+    """``'bf16-sr[-kahan]'`` -> (RoundingSpec, kahan flag).
+
+    Canonical spec grammar (core/schemes.parse_spec_name) with the same
+    optional ``-kahan`` suffix as the accumulator presets; raises on
+    unknown grids/schemes, so a bad ``--moments-spec`` dies at launch,
+    not at step time."""
+    kahan = False
+    if name.endswith("-kahan"):
+        kahan, name = True, name[: -len("-kahan")]
+    return rounding.parse_spec(name), kahan
+
+
+def build_optimizer(optimizer: str, *, lr, momentum, cfg, update_path,
+                    moments_spec=None):
+    """The CLI's optimizer factory (also the watchdog-rebuild hook's)."""
+    if optimizer == "sgd":
+        return qsgd(lr=lr, momentum=momentum, cfg=cfg,
+                    update_path=update_path)
+    if optimizer != "adam":
+        raise ValueError(f"unknown optimizer {optimizer!r}")
+    spec, kahan = parse_moments_spec(moments_spec or "fp32")
+    # the fully-fused path stores non-fp32 moments as packed grid codes
+    packed = update_path == "fused" and not spec.is_identity
+    return qadam(lr=lr, cfg=cfg, m_spec=spec, v_spec=spec, kahan=kahan,
+                 update_path=update_path, moments_packed=packed)
+
+
 def _state_shardings(params, opt_state, mesh, ax):
-    """(param, opt-state) NamedSharding trees: params/momentum by the
-    declarative rules, scalars and keys replicated."""
+    """(param, opt-state) NamedSharding trees, optimizer-agnostic: any
+    opt-state field whose pytree mirrors the params (momentum, Adam m/v
+    moment trees, Kahan compensations) shards like the params; everything
+    else (step counters, keys, flat fused-path carries) is replicated —
+    the whole-tree fused kernel runs inside a replicated shard_map."""
     p_sh = build_param_shardings(params, mesh, ax)
     rep = NamedSharding(mesh, P())
-    mom = opt_state.momentum
-    m_sh = build_param_shardings(mom, mesh, ax) if mom != () else ()
-    o_sh = opt_state._replace(
-        step=rep, key=rep, momentum=m_sh)
+    pstruct = jax.tree_util.tree_structure(params)
+
+    def field_sh(val):
+        if isinstance(val, tuple) and val == ():
+            return ()
+        if jax.tree_util.tree_structure(val) == pstruct:
+            return build_param_shardings(val, mesh, ax)
+        return jax.tree.map(lambda _: rep, val)
+
+    o_sh = type(opt_state)(*[field_sh(v) for v in opt_state])
     return p_sh, o_sh
 
 
@@ -93,7 +130,9 @@ def run(arch: str, *, reduced: bool, steps: int, batch: int, seq: int,
         wire_topology: str = "reduce_scatter",
         loss_scale: float = 0.0, watchdog: bool = False,
         health_fmt: str = None, fault_schedule: str = None,
-        fault_seed: int = 0, restart_window: int = 1000):
+        fault_seed: int = 0, restart_window: int = 1000,
+        optimizer: str = "sgd", moments_spec: str = None,
+        ckpt_fmt: str = None):
     # partition-invariant jax.random streams: the rounded update/wire/
     # accumulator draws must not change with the mesh placement, or the
     # sharded run would silently diverge from the single-device one and
@@ -108,9 +147,17 @@ def run(arch: str, *, reduced: bool, steps: int, batch: int, seq: int,
         gemm_policy=gemm_policy if gemm_policy is not None
         else cfg.gemm_policy)
     model = build_model(cfg)
-    opt = qsgd(lr=lr, momentum=momentum,
-               cfg=rounding_config(rounding_kind, fmt, eps),
-               update_path=update_path)
+    # fail fast on malformed CLI spec names (same contract as the
+    # watchdog ladder's import-time validation)
+    if moments_spec is not None:
+        parse_moments_spec(moments_spec)
+    from repro.checkpoint.manager import resolve_ckpt_grid
+    if ckpt_fmt is not None:
+        resolve_ckpt_grid(ckpt_fmt)
+    opt = build_optimizer(optimizer, lr=lr, momentum=momentum,
+                          cfg=rounding_config(rounding_kind, fmt, eps),
+                          update_path=update_path,
+                          moments_spec=moments_spec)
 
     mesh = parse_mesh(mesh_spec) if mesh_spec else make_local_mesh()
     ax = mesh_axes_for(mesh, batch_size=batch)
@@ -154,9 +201,10 @@ def run(arch: str, *, reduced: bool, steps: int, batch: int, seq: int,
         else:
             from repro.health import watchdog as wd_lib
             lvl = wd_lib.get_level(level_name)
-            opt_l = qsgd(lr=lr, momentum=momentum,
-                         cfg=wd_lib.rounding_for_level(level_name),
-                         update_path=update_path)
+            opt_l = build_optimizer(
+                optimizer, lr=lr, momentum=momentum,
+                cfg=wd_lib.rounding_for_level(level_name),
+                update_path=update_path, moments_spec=moments_spec)
             # only escalate the GEMM policy if the run quantized GEMMs
             g_pol = lvl.gemm_policy if cfg.gemm_policy is not None else None
         train_step = steps_lib.make_train_step(
@@ -164,10 +212,14 @@ def run(arch: str, *, reduced: bool, steps: int, batch: int, seq: int,
             wire_spec=wire_spec, mesh=mesh, ax=ax,
             wire_topology=wire_topology, gemm_policy=g_pol,
             loss_scale=ls, health=health_cfg)
+        # out_shardings pinned to the input layout: GSPMD is otherwise free
+        # to re-shard a replicated state leaf on output, and the re-sharded
+        # array then mismatches in_shardings on the *next* call
         with set_mesh_axes(ax), mesh:
             if extras:
                 jitted = jax.jit(train_step, in_shardings=(
-                    p_sh, o_sh, c_sh, batch_sh))
+                    p_sh, o_sh, c_sh, batch_sh),
+                    out_shardings=(p_sh, o_sh, c_sh, None))
 
                 def step_fn(state, batch_):
                     params_, opt_, carry_ = state
@@ -177,7 +229,8 @@ def run(arch: str, *, reduced: bool, steps: int, batch: int, seq: int,
                     return (params_, opt_, carry_), metrics
             else:
                 jitted = jax.jit(train_step, in_shardings=(
-                    p_sh, o_sh, batch_sh))
+                    p_sh, o_sh, batch_sh),
+                    out_shardings=(p_sh, o_sh, None))
 
                 def step_fn(state, batch_):
                     params_, opt_ = state
@@ -206,7 +259,8 @@ def run(arch: str, *, reduced: bool, steps: int, batch: int, seq: int,
                                      checkpoint_every=max(10, steps // 5),
                                      checkpoint_dir=ckpt_dir,
                                      log_every=log_every,
-                                     restart_window=restart_window),
+                                     restart_window=restart_window,
+                                     checkpoint_fmt=ckpt_fmt),
                      fault_hook=fault_hook,
                      state_sharding=state_sharding, watchdog=wd)
     t0 = time.time()
@@ -246,6 +300,24 @@ def main():
                     help="parameter-update engine: per-leaf jnp chain, "
                          "whole-tree fused kernel (in-kernel PRNG), or "
                          "whole-tree kernel with explicit bits")
+    ap.add_argument("--optimizer", default="sgd", choices=["sgd", "adam"],
+                    help="qsgd (momentum) or qadam; adam honours "
+                         "--moments-spec and, with --update-path fused, "
+                         "carries packed low-precision moments inside the "
+                         "fully-fused kernel")
+    ap.add_argument("--moments-spec", default=None,
+                    help="Adam moment-carry grid: any canonical spec name "
+                         "with an optional -kahan suffix, e.g. 'bf16-sr', "
+                         "'e4m3-sr-kahan', 'bf16-sr-bittrick' (PRF-free "
+                         "bit-trick SR); default fp32.  Validated at "
+                         "launch like the watchdog ladder")
+    ap.add_argument("--ckpt-fmt", default=None,
+                    help="packed-checkpoint grid: float32 state leaves "
+                         "already on this grid (rounded params, moment "
+                         "carries) are stored as uint8/uint16 codes — "
+                         "self-validating per leaf, restore stays "
+                         "bit-exact.  A grid or canonical spec name, "
+                         "e.g. 'bf16-sr' or 'e4m3'; default raw fp32")
     from repro.precision import PRESETS
     ap.add_argument("--gemm-policy", default=None,
                     help="quantized-GEMM precision policy (eq. 8a): round "
@@ -315,7 +387,9 @@ def main():
         loss_scale=args.loss_scale, watchdog=args.watchdog,
         health_fmt=args.health_fmt, fault_schedule=args.fault_schedule,
         fault_seed=args.fault_seed,
-        restart_window=args.restart_window or None)
+        restart_window=args.restart_window or None,
+        optimizer=args.optimizer, moments_spec=args.moments_spec,
+        ckpt_fmt=args.ckpt_fmt)
 
 
 if __name__ == "__main__":

@@ -5,6 +5,21 @@ keeps the small-update signal alive in the second moment exactly as it does
 for the parameters); the final parameter update goes through the eq.-8
 three-step rounding path, so signed-SRε biases the Adam step in a descent
 direction just as for plain GD.
+
+Moment storage comes in two layouts, selected by ``update_path``:
+
+* ``"jnp"`` / ``"fused_bits"`` — per-leaf pytrees mirroring the params
+  (the historical layout; ``fused_bits`` still runs the eq.-8 chain
+  through the explicit-bits whole-tree kernel).
+* ``"fused"`` — ONE flat carry over the raveled parameter vector, updated
+  *inside* the fully-fused Adam kernel (kernels/fused_update.py): rounded
+  EMAs, bias-corrected direction and the eq.-8 chain in a single HBM
+  pass.  With ``moments_packed`` the flat carries live as uint8/uint16
+  grid codes (``kernels/common.pack_block``) — 20 B/elt for bf16 moments
+  vs 28 fp32 in-kernel and ~48 for the legacy jnp-moment step.
+
+``kahan`` adds float32 compensation carries (optim/accumulate.py algebra)
+to both layouts, tracking the fp32 EMA to ulps even on bf16-rn grids.
 """
 from __future__ import annotations
 
@@ -21,9 +36,11 @@ from repro.optim import base
 
 class QAdamState(NamedTuple):
     step: jax.Array
-    m: Any
+    m: Any                 # pytree like params, or a flat carry ("fused")
     v: Any
     key: jax.Array
+    cm: Any = ()           # Kahan compensation carries (() when disabled)
+    cv: Any = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,28 +54,110 @@ class QAdam:
     v_spec: RoundingSpec = IDENTITY
     weight_decay: float = 0.0
     update_path: str = "jnp"   # "jnp" | "fused" | "fused_bits" (optim/base)
+    moments_packed: bool = False   # store flat moments as packed grid codes
+    kahan: bool = False            # Kahan-compensated moment EMAs
+
+    def __post_init__(self):
+        if self.moments_packed:
+            if self.update_path != "fused":
+                raise ValueError("moments_packed requires the fully-fused "
+                                 "update_path='fused'")
+            if self.m_spec.is_identity or self.v_spec.is_identity:
+                raise ValueError("moments_packed requires non-identity "
+                                 "m_spec/v_spec (fp32 carries cannot pack)")
+
+    def _flat_size(self, params) -> int:
+        return sum(l.size for l in jax.tree_util.tree_leaves(params))
 
     def init(self, params, key: Optional[jax.Array] = None) -> QAdamState:
         key = jax.random.PRNGKey(0) if key is None else key
+        step = jnp.zeros((), jnp.int32)
+        if self.update_path == "fused":
+            n = self._flat_size(params)
+
+            def carry(spec):
+                if self.moments_packed:
+                    from repro.kernels.common import pack_dtype
+                    # code 0 decodes to +0.0 on every packable grid
+                    return jnp.zeros((n,), pack_dtype(spec.fmt))
+                return jnp.zeros((n,), jnp.float32)
+
+            comp = (jnp.zeros((n,), jnp.float32) if self.kahan else ())
+            comp2 = (jnp.zeros((n,), jnp.float32) if self.kahan else ())
+            return QAdamState(step=step, m=carry(self.m_spec),
+                              v=carry(self.v_spec), key=key,
+                              cm=comp, cv=comp2)
         zeros = lambda: jax.tree.map(jnp.zeros_like, params)
-        return QAdamState(step=jnp.zeros((), jnp.int32), m=zeros(), v=zeros(),
-                          key=key)
+        comp = zeros() if self.kahan else ()
+        comp2 = zeros() if self.kahan else ()
+        return QAdamState(step=step, m=zeros(), v=zeros(), key=key,
+                          cm=comp, cv=comp2)
+
+    # ------------------------------------------------------------- fused --
+    def _apply_fused(self, params, grads, state: QAdamState, t):
+        step = state.step + 1
+        sf = step.astype(jnp.float32)
+        c1 = 1.0 - self.b1 ** sf
+        c2 = 1.0 - self.b2 ** sf
+        scal = jnp.stack([jnp.asarray(t, jnp.float32), c1, c2,
+                          jnp.float32(self.eps),
+                          jnp.float32(self.weight_decay)])
+        cm = state.cm if self.kahan else None
+        cv = state.cv if self.kahan else None
+        new_params, m, v, cm, cv = base.tree_rounded_adam_update(
+            params, grads, state.m, state.v, scal, self.cfg, state.key,
+            state.step, m_spec=self.m_spec, v_spec=self.v_spec,
+            b1=self.b1, b2=self.b2, packed=self.moments_packed,
+            cm=cm, cv=cv)
+        return new_params, QAdamState(
+            step=step, m=m, v=v, key=state.key,
+            cm=cm if self.kahan else (), cv=cv if self.kahan else ())
+
+    # --------------------------------------------------------------- jnp --
+    def _moment_trees(self, state, grads):
+        km = base.leaf_keys(jax.random.fold_in(state.key, 0x6D),
+                            state.step, grads)
+        kv = base.leaf_keys(jax.random.fold_in(state.key, 0x76),
+                            state.step, grads)
+        if not self.kahan:
+            def upd_m(m, g, k):
+                return base.round_state(
+                    self.m_spec, self.b1 * m + (1 - self.b1) * g, k)
+
+            def upd_v(v, g, k):
+                return base.round_state(
+                    self.v_spec, self.b2 * v + (1 - self.b2) * g * g, k)
+
+            return (jax.tree.map(upd_m, state.m, grads, km),
+                    jax.tree.map(upd_v, state.v, grads, kv), (), ())
+
+        def upd(spec, beta, m, a, c, k):
+            y = (1.0 - beta) * (a - m) - c
+            s = base.round_state(spec, m + y, k)
+            return s, (s - m) - y
+
+        g_leaves, tdef = jax.tree_util.tree_flatten(grads)
+        m_leaves = jax.tree_util.tree_leaves(state.m)
+        v_leaves = jax.tree_util.tree_leaves(state.v)
+        cm_leaves = jax.tree_util.tree_leaves(state.cm)
+        cv_leaves = jax.tree_util.tree_leaves(state.cv)
+        km_leaves = jax.tree_util.tree_leaves(km)
+        kv_leaves = jax.tree_util.tree_leaves(kv)
+        ms = [upd(self.m_spec, self.b1, m, g, c, k)
+              for m, g, c, k in zip(m_leaves, g_leaves, cm_leaves, km_leaves)]
+        vs = [upd(self.v_spec, self.b2, v, g * g, c, k)
+              for v, g, c, k in zip(v_leaves, g_leaves, cv_leaves, kv_leaves)]
+        unf = lambda xs: jax.tree_util.tree_unflatten(tdef, xs)
+        return (unf([p[0] for p in ms]), unf([p[0] for p in vs]),
+                unf([p[1] for p in ms]), unf([p[1] for p in vs]))
 
     def apply(self, params, grads, state: QAdamState,
               lr: Optional[Any] = None):
         t = self.lr if lr is None else lr
+        if self.update_path == "fused":
+            return self._apply_fused(params, grads, state, t)
         step = state.step + 1
-        km = base.leaf_keys(jax.random.fold_in(state.key, 0x6D), state.step, params)
-        kv = base.leaf_keys(jax.random.fold_in(state.key, 0x76), state.step, params)
-
-        def upd_m(m, g, k):
-            return base.round_state(self.m_spec, self.b1 * m + (1 - self.b1) * g, k)
-
-        def upd_v(v, g, k):
-            return base.round_state(self.v_spec, self.b2 * v + (1 - self.b2) * g * g, k)
-
-        new_m = jax.tree.map(upd_m, state.m, grads, km)
-        new_v = jax.tree.map(upd_v, state.v, grads, kv)
+        new_m, new_v, new_cm, new_cv = self._moment_trees(state, grads)
         c1 = 1.0 - self.b1 ** step.astype(jnp.float32)
         c2 = 1.0 - self.b2 ** step.astype(jnp.float32)
 
@@ -74,12 +173,14 @@ class QAdam:
             params, directions, t, self.cfg, state.key, state.step,
             update_path=self.update_path)
         return new_params, QAdamState(step=step, m=new_m, v=new_v,
-                                      key=state.key)
+                                      key=state.key, cm=new_cm, cv=new_cv)
 
 
 def qadam(lr, b1=0.9, b2=0.999, eps=1e-8, cfg: GDRounding = GDRounding(),
           m_spec: RoundingSpec = IDENTITY, v_spec: RoundingSpec = IDENTITY,
-          weight_decay=0.0, update_path: str = "jnp") -> QAdam:
+          weight_decay=0.0, update_path: str = "jnp",
+          moments_packed: bool = False, kahan: bool = False) -> QAdam:
     return QAdam(lr=lr, b1=b1, b2=b2, eps=eps, cfg=cfg, m_spec=m_spec,
                  v_spec=v_spec, weight_decay=weight_decay,
-                 update_path=update_path)
+                 update_path=update_path, moments_packed=moments_packed,
+                 kahan=kahan)

@@ -103,3 +103,43 @@ def tree_rounded_update(params, grads, t, cfg: GDRounding, key, step,
             in_specs=(pspec, pspec, P(), P()), out_specs=pspec,
             check_vma=False)(params, grads, key, step)
     return run(params, grads, key, step)
+
+
+def tree_rounded_adam_update(params, grads, m, v, scal, cfg: GDRounding,
+                             key, step, *, m_spec, v_spec, b1: float,
+                             b2: float, packed: bool, cm=None, cv=None,
+                             interpret: Optional[bool] = None):
+    """Fully-fused QAdam step over a pytree (kernels/tree_update.py),
+    with the same replicated-shard_map treatment as tree_rounded_update
+    under an ambient mesh.  ``m``/``v`` (and ``cm``/``cv``) are flat
+    carries; ``scal`` the (5,) [t, c1, c2, eps, wd] vector.  Returns
+    ``(params⁺, m', v', cm', cv')`` (``cm'``/``cv'`` None when
+    uncompensated)."""
+    from repro.kernels.tree_update import fused_tree_adam_update
+    kahan = cm is not None
+
+    def run(p, g, m_, v_, s_, k, st, *comp):
+        cm_, cv_ = comp if comp else (None, None)
+        p2, m2, v2, cm2, cv2 = fused_tree_adam_update(
+            p, g, m_, v_, s_, cfg, k, st, m_spec=m_spec, v_spec=v_spec,
+            b1=b1, b2=b2, packed=packed, cm=cm_, cv=cv_,
+            interpret=interpret)
+        return (p2, m2, v2, cm2, cv2) if kahan else (p2, m2, v2)
+
+    args = (params, grads, m, v, scal, key, step) \
+        + ((cm, cv) if kahan else ())
+    from repro.dist.sharding import _axes
+    ax = _axes()
+    if ax.active:
+        from jax.sharding import PartitionSpec as P
+        from repro.dist import compat
+        pspec = jax.tree.map(lambda _: P(), params)
+        in_specs = (pspec, pspec, P(), P(), P(), P(), P()) \
+            + ((P(), P()) if kahan else ())
+        out_specs = (pspec, P(), P()) + ((P(), P()) if kahan else ())
+        res = compat.shard_map(run, mesh=ax.mesh, in_specs=in_specs,
+                               out_specs=out_specs,
+                               check_vma=False)(*args)
+    else:
+        res = run(*args)
+    return res if kahan else res + (None, None)

@@ -54,6 +54,11 @@ class TrainLoopConfig:
     # sliding step window the restart budget is counted over; None = the
     # legacy behaviour (max_restarts over the whole run's lifetime)
     restart_window: Optional[int] = None
+    # grid name / canonical spec name for packed low-precision checkpoint
+    # leaves (checkpoint/manager.py pack_np); None = raw float32
+    checkpoint_fmt: Optional[str] = None
+    # number of leaves.npz shard files per checkpoint
+    checkpoint_shards: int = 4
 
 
 class TrainLoop:
@@ -89,7 +94,9 @@ class TrainLoop:
             fault_hook.attach(self)
         self.metrics_hook = metrics_hook
         self.ckpt = CheckpointManager(config.checkpoint_dir,
-                                      keep=config.keep_checkpoints)
+                                      keep=config.keep_checkpoints,
+                                      fmt=config.checkpoint_fmt,
+                                      shards=config.checkpoint_shards)
         self.history: list = []
 
     # ------------------------------------------------------------------ io

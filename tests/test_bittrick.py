@@ -1,0 +1,144 @@
+"""The PRF-free bf16-SR bit-trick (``sr_bittrick``).
+
+``r = (bitcast(z, u32) + (b & 0xFFFF)) & 0xFFFF0000`` rounds a float32 to
+bfloat16 stochastically: the round-up event is the carry out of the low 16
+bits, i.e. the oracle event ``u < frac`` with the complemented uncentered
+draw ``u = ((b & m) ^ m) · 2^-16``.  At r=16 on bfloat16 the fractional
+position ``frac`` lies on the 2^-16 lattice, so the trick is *exactly*
+unbiased (paper eq. 3), and the eq. 4–5 CLT machinery applies with the
+same per-element variance bound as oracle SR.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rounding
+from repro.core.rounding import parse_spec, round_to_format
+from repro.core.schemes import format_spec_name, parse_spec_name
+from repro.kernels import common, ops
+from repro.kernels.sr_cast import sr_cast_p
+
+
+# ------------------------------------------------------------- grammar ----
+def test_spec_grammar_dash_and_underscore_spellings():
+    for name in ("bf16-sr-bittrick", "bfloat16-sr_bittrick"):
+        p = parse_spec_name(name)
+        assert p.grid == "bfloat16" and p.scheme == "sr_bittrick"
+        assert p.rand_bits == 16          # registry default
+    # canonical emission round-trips through the parser
+    p = parse_spec_name("bf16-sr-bittrick-r8")
+    assert p.rand_bits == 8
+    assert parse_spec_name(format_spec_name(*p)) == p
+    s = parse_spec("e4m3-sr-bittrick")
+    assert str(s) and parse_spec(str(s)) == s
+
+
+# ----------------------------------------------- int-trick reference ------
+def _copy_stochastic_np(target32, bits):
+    """The published int-trick, verbatim in numpy: add 16 random mantissa
+    bits, truncate to the bf16 boundary."""
+    z = np.asarray(target32, np.float32).view(np.uint32)
+    r = (z + (bits & np.uint32(0xFFFF))) & np.uint32(0xFFFF0000)
+    return r.view(np.float32)
+
+
+def test_bittrick_matches_int_reference_bit_for_bit():
+    rng = np.random.default_rng(0)
+    x = np.concatenate([
+        rng.standard_normal(5000).astype(np.float32) * 10,
+        rng.standard_normal(5000).astype(np.float32) * 1e-3,
+        np.float32([0.0, -0.0, 1.0, -1.0, 3.0 + 2**-10, np.pi]),
+    ])
+    bits = rng.integers(0, 2**32, x.size, dtype=np.uint32)
+    want = _copy_stochastic_np(x, bits)
+    got = np.asarray(round_to_format(jnp.asarray(x), "bfloat16",
+                                     "sr_bittrick", bits=jnp.asarray(bits),
+                                     rand_bits=16))
+    np.testing.assert_array_equal(got.view(np.uint32), want.view(np.uint32))
+
+
+def test_bittrick_kernel_fast_path_matches_oracle():
+    # the in-kernel int fast path (kernels/common.round_block) against the
+    # jnp oracle, same explicit bits
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal(4096).astype(np.float32) * 3)
+    bits = jnp.asarray(rng.integers(0, 2**32, 4096, dtype=np.uint32))
+    got = sr_cast_p(x, bits, "bfloat16", "sr_bittrick", rand_bits=16)
+    want = round_to_format(x, "bfloat16", "sr_bittrick", bits=bits,
+                           rand_bits=16)
+    np.testing.assert_array_equal(
+        np.asarray(got).view(np.uint32), np.asarray(want).view(np.uint32))
+
+
+def test_bittrick_preserves_grid_values_and_signed_zero():
+    spec = parse_spec("bf16-sr-bittrick")
+    on_grid = jnp.float32([0.0, -0.0, 1.0, -1.5, 2.0 ** -100, 340.0])
+    on_grid = parse_spec("bfloat16-rn")(on_grid)   # snap to the grid
+    out = spec(on_grid, key=jax.random.PRNGKey(3))
+    np.testing.assert_array_equal(
+        np.asarray(out).view(np.uint32), np.asarray(on_grid).view(np.uint32))
+
+
+def test_bittrick_saturates_instead_of_nan():
+    # adding mantissa bits can carry into the exponent: values near xmax
+    # must saturate (default overflow) or go to exactly +/-inf, never NaN
+    xmax = 3.3895314e38                      # bf16 xmax
+    x = jnp.float32([xmax, -xmax, xmax * 0.999, np.inf, -np.inf])
+    for _ in range(4):
+        out = np.asarray(round_to_format(
+            x, "bfloat16", "sr_bittrick",
+            key=jax.random.PRNGKey(_), rand_bits=16))
+        assert not np.isnan(out).any()
+        assert (np.abs(out[:3]) <= xmax).all()
+        assert out[3] == np.inf and out[4] == -np.inf
+
+
+# ------------------------------------------------- eq. 3-5 statistics -----
+def test_bittrick_unbiased_within_clt_bound():
+    """Paper eqs. 3-5: SR roundoff is mean-zero with Var <= (ulp*frac*(1-
+    frac)); the empirical mean over n draws must land inside the 4-sigma
+    CLT band.  At r=16 on bfloat16 the draw lattice resolves frac exactly,
+    so the bound is the oracle-SR one (no one-sided truncation bias)."""
+    n = 200_000
+    # one bf16 gap in the [1, 2) binade (7 mantissa bits -> ulp = 2^-7)
+    lo, hi = np.float32(1.0), np.float32(1.0 + 2 ** -7)
+    frac = 0.37
+    x = jnp.full((n,), lo + frac * (hi - lo), jnp.float32)
+    out = np.asarray(round_to_format(x, "bfloat16", "sr_bittrick",
+                                     key=jax.random.PRNGKey(7),
+                                     rand_bits=16))
+    assert set(np.unique(out)) <= {lo, hi}
+    p_up = (out == hi).mean()
+    sigma = np.sqrt(frac * (1 - frac) / n)
+    assert abs(p_up - frac) < 4 * sigma, (p_up, frac, sigma)
+    mean_err = (out - np.asarray(x)).mean()
+    assert abs(mean_err) < 4 * sigma * float(hi - lo)
+
+
+def test_bittrick_low_rand_bits_one_sided_bias_bound():
+    # with r < 16 the complemented draw truncates: bias is one-sided,
+    # bounded by 2^-r ulp (the registry's documented bound)
+    n = 100_000
+    lo, hi = np.float32(1.0), np.float32(1.0 + 2 ** -7)
+    frac = 0.37
+    x = jnp.full((n,), lo + frac * (hi - lo), jnp.float32)
+    out = np.asarray(round_to_format(x, "bfloat16", "sr_bittrick",
+                                     key=jax.random.PRNGKey(9),
+                                     rand_bits=8))
+    p_up = (out == hi).mean()
+    sigma = np.sqrt(frac * (1 - frac) / n)
+    # round-up probability quantized to the 2^-8 lattice, never above frac
+    assert frac - 2 ** -8 - 4 * sigma <= p_up <= frac + 4 * sigma
+
+
+def test_bittrick_prng_kernel_runs_and_is_deterministic():
+    x = jnp.asarray(np.random.default_rng(4)
+                    .standard_normal(2048).astype(np.float32))
+    key = jax.random.PRNGKey(11)
+    a = ops.sr_cast_prng(x, key, "bfloat16", "sr_bittrick", rand_bits=16)
+    b = ops.sr_cast_prng(x, key, "bfloat16", "sr_bittrick", rand_bits=16)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # outputs are on the bf16 grid
+    np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(parse_spec("bfloat16-rn")(a)))

@@ -1,0 +1,261 @@
+"""Packed low-precision checkpoints (checkpoint/manager.py format 2).
+
+Grid-coded leaves: float32 leaves whose values sit on a rounding grid are
+re-encoded as uint8/uint16 exponent/mantissa codes (lossless — the writer
+round-trips every leaf and falls back to raw on any mismatch), sharded
+across several ``leaves*.npz`` files, written fully off the step path
+(device snapshot on the caller thread, ``device_get`` + encode + fsync on
+the writer thread), and restored bit-exactly — unsharded, onto an SPMD
+mesh, and across process boundaries."""
+import os
+import subprocess
+import sys
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.checkpoint import CheckpointManager
+from repro.checkpoint.manager import pack_np, resolve_ckpt_grid, unpack_np
+from repro.core.rounding import parse_spec
+from repro.data import ShardedPipeline, make_token_pipeline
+from repro.train import TrainLoop, TrainLoopConfig
+
+_SRC = os.path.dirname(os.path.dirname(os.path.abspath(repro.__file__)))
+
+GRIDS = ["bfloat16", "e4m3", "binary8", "binary16", "fxp8.4"]
+
+
+# ------------------------------------------------------- numpy codecs -----
+@pytest.mark.parametrize("grid", GRIDS)
+def test_pack_np_roundtrip_is_bit_exact_on_grid(grid):
+    snap = parse_spec(f"{grid}-rn")
+    rng = np.random.default_rng(3)
+    vals = np.concatenate([
+        rng.standard_normal(4000).astype(np.float32) * 4,
+        rng.standard_normal(2000).astype(np.float32) * 1e-3,  # subnormals
+        np.float32([0.0, -0.0, 1.0, -1.0, 1e30, -1e30]),      # saturation
+    ])
+    on_grid = np.asarray(snap(jnp.asarray(vals)))
+    codes = pack_np(on_grid, grid)
+    assert codes.dtype in (np.uint8, np.uint16)
+    back = unpack_np(codes, grid)
+    np.testing.assert_array_equal(back.view(np.uint32),
+                                  on_grid.view(np.uint32))
+
+
+def test_resolve_ckpt_grid_grammar():
+    assert resolve_ckpt_grid("bf16-sr") == "bfloat16"
+    assert resolve_ckpt_grid("e4m3") == "e4m3"
+    assert resolve_ckpt_grid("fp32") is None
+    assert resolve_ckpt_grid(None) is None
+    with pytest.raises(Exception):
+        resolve_ckpt_grid("not-a-grid")
+
+
+# --------------------------------------------------- manager round-trip ---
+@pytest.mark.parametrize("grid", ["bfloat16", "e4m3"])
+def test_packed_save_restore_bit_exact_mixed_tree(tmp_path, grid):
+    snap = parse_spec(f"{grid}-rn")
+    rng = np.random.default_rng(5)
+    tree = {
+        "on_grid": snap(jnp.asarray(
+            rng.standard_normal(3000).astype(np.float32))),
+        "off_grid": jnp.asarray(                 # stays raw float32
+            rng.standard_normal(100).astype(np.float32) + 1e-5),
+        "codes16": jnp.asarray(rng.integers(0, 2 ** 16, 64), jnp.uint16),
+        "codes8": jnp.asarray(rng.integers(0, 2 ** 8, 64), jnp.uint8),
+        "step": jnp.int32(9),
+    }
+    mgr = CheckpointManager(str(tmp_path), fmt=f"{grid}-sr", shards=3)
+    mgr.save(9, tree, blocking=True)
+    assert mgr.verify(9)
+
+    import json
+    with open(tmp_path / "step_9" / "meta.json") as f:
+        meta = json.load(f)
+    assert meta["format"] == 2
+    packed = [e["packed"] for e in meta["leaves"] if e.get("packed")]
+    assert packed == [grid]                      # exactly the on-grid leaf
+    # the packed leaf really shrank on disk: grid codes are 1-2 bytes/elt
+    sizes = {e["file"] for e in meta["leaves"]}
+    assert len(sizes) > 1                        # actually sharded
+
+    step, back, _ = CheckpointManager(str(tmp_path)).restore()
+    assert step == 9
+    for k in tree:
+        a, b = np.asarray(tree[k]), np.asarray(back[k])
+        assert a.dtype == b.dtype, k
+        np.testing.assert_array_equal(
+            np.atleast_1d(a).view(np.uint8), np.atleast_1d(b).view(np.uint8))
+
+
+def test_off_grid_float_leaves_never_lose_bits(tmp_path):
+    # a leaf with values off the bf16 grid must be stored raw, even when a
+    # packing fmt is configured: packing is opt-in per leaf by losslessness
+    x = jnp.asarray(np.float32([1.0 + 2 ** -20, np.pi, 1e-40]))
+    mgr = CheckpointManager(str(tmp_path), fmt="bf16-sr")
+    mgr.save(1, {"x": x}, blocking=True)
+    _, back, _ = mgr.restore()
+    np.testing.assert_array_equal(np.asarray(back["x"]).view(np.uint32),
+                                  np.asarray(x).view(np.uint32))
+
+
+# ------------------------------------- satellite: async off the step path -
+def test_device_get_runs_on_writer_thread_not_caller(tmp_path, monkeypatch):
+    """The satellite-1 regression: ``save(blocking=False)`` used to call
+    ``jax.device_get`` on the caller (step) thread; it must now happen on
+    the background writer after a cheap device-side snapshot."""
+    import repro.checkpoint.manager as mgr_mod
+    seen = {}
+    real = mgr_mod.CheckpointManager._to_host
+
+    def spy(self, tree):
+        seen["thread"] = threading.current_thread()
+        return real(self, tree)
+
+    monkeypatch.setattr(mgr_mod.CheckpointManager, "_to_host", spy)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(2, {"x": jnp.zeros(100_000)}, blocking=False)
+    mgr.wait()
+    assert seen["thread"] is not threading.main_thread()
+    assert mgr.verify(2)
+
+
+def test_async_save_snapshots_before_caller_mutates(tmp_path):
+    # the device/host snapshot is taken synchronously in save(): in-place
+    # mutation of a host leaf right after save() must not leak into the
+    # checkpoint (the old device_get-in-caller code got this by accident;
+    # the snapshot code must keep it)
+    x = np.ones(50_000, np.float32)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"x": x}, blocking=False)
+    x[:] = -1.0
+    mgr.wait()
+    _, back, _ = mgr.restore()
+    np.testing.assert_array_equal(np.asarray(back["x"]),
+                                  np.ones(50_000, np.float32))
+
+
+# ------------------------------------------- TrainLoop bit-exact resume ---
+def _packed_setup(ckpt_dir, total):
+    src = make_token_pipeline(vocab_size=50, seq_len=4, global_batch=2)
+    pipe = ShardedPipeline(src)
+    snap = parse_spec("bfloat16-rn")
+    w0 = snap(jnp.ones((4,), jnp.float32))
+
+    @jax.jit
+    def step_fn(state, batch):
+        w, n = state
+        tgt = batch["tokens"][0, :4].astype(jnp.float32) / 50.0
+        g = w - tgt
+        # keep w on the bf16 grid so the checkpoint leaves actually pack
+        return (snap(w - 0.1 * g), n + 1), {"loss": jnp.sum(g * g)}
+
+    cfg = TrainLoopConfig(total_steps=total, checkpoint_every=5,
+                          checkpoint_dir=str(ckpt_dir), log_every=5,
+                          checkpoint_fmt="bf16-sr", checkpoint_shards=2)
+    return step_fn, pipe, (w0, jnp.zeros((), jnp.int32)), cfg
+
+
+def test_trainloop_packed_resume_bit_exact(tmp_path):
+    # clean 20-step run
+    step_fn, pipe, state, cfg = _packed_setup(tmp_path / "clean", 20)
+    clean = TrainLoop(step_fn, pipe, state, cfg)
+    clean.run()
+
+    # interrupted at step 10, resumed by a fresh loop over the same dir
+    step_fn, pipe, state, cfg = _packed_setup(tmp_path / "ck", 10)
+    TrainLoop(step_fn, pipe, state, cfg).run()
+    import json
+    with open(tmp_path / "ck" / "step_10" / "meta.json") as f:
+        meta = json.load(f)
+    assert any(e.get("packed") == "bfloat16" for e in meta["leaves"])
+
+    step_fn, pipe, state, cfg = _packed_setup(tmp_path / "ck", 20)
+    resumed = TrainLoop(step_fn, pipe, state, cfg)
+    out = resumed.run()
+    assert out["final_step"] == 20
+    np.testing.assert_array_equal(np.asarray(resumed.state[0]),
+                                  np.asarray(clean.state[0]))
+
+
+# ---------------------------------------------------- sharded (mesh) ------
+_MESH_CODE = """
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=4 "
+                           + os.environ.get("XLA_FLAGS", ""))
+import sys
+import numpy as np
+import jax, jax.numpy as jnp
+jax.config.update('jax_default_prng_impl', 'threefry2x32')
+jax.config.update('jax_threefry_partitionable', True)
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.checkpoint import CheckpointManager
+from repro.core.rounding import parse_spec
+
+d, phase = sys.argv[1], sys.argv[2]
+mesh = Mesh(np.array(jax.devices()[:4]).reshape(2, 2), ("data", "model"))
+sh = NamedSharding(mesh, P(None, "model"))
+rep = NamedSharding(mesh, P())
+x = parse_spec("bfloat16-rn")(
+    jnp.arange(512., dtype=jnp.float32).reshape(4, 128) / 7.0)
+x = jax.device_put(x, sh)
+if phase == "save":
+    mgr = CheckpointManager(d, fmt="bf16-sr", shards=3)
+    mgr.save(4, {"x": x, "n": jnp.int32(7)}, blocking=True)
+    assert mgr.verify(4)
+else:
+    step, tree, _ = CheckpointManager(d).restore(
+        shardings={"x": sh, "n": rep})
+    assert step == 4
+    r = tree["x"]
+    assert r.sharding.is_equivalent_to(sh, r.ndim), r.sharding
+    np.testing.assert_array_equal(np.asarray(r).view(np.uint32),
+                                  np.asarray(x).view(np.uint32))
+    assert int(tree["n"]) == 7
+print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_packed_checkpoint_sharded_resume_across_processes(tmp_path):
+    """Save a mesh-sharded, grid-packed checkpoint in one process; restore
+    it in another directly onto the mesh layout, bit-exactly."""
+    env = dict(os.environ, PYTHONPATH=_SRC + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    for phase in ("save", "restore"):
+        r = subprocess.run(
+            [sys.executable, "-c", _MESH_CODE, str(tmp_path), phase],
+            env=env, capture_output=True, text=True, timeout=300)
+        assert r.returncode == 0, (phase, r.stderr)
+        assert "OK" in r.stdout
+
+
+# ------------------------------------------- packed optimizer state -------
+def test_qadam_packed_state_checkpoints_bit_exact(tmp_path):
+    """The uint8/uint16 moment-code leaves of a packed QAdam state ride
+    through the checkpoint raw and resume bit-exactly."""
+    from repro.core import gd
+    from repro.optim.adam import qadam
+    opt = qadam(lr=0.01, cfg=gd.make_config("bfloat16", "rn", "sr", "sr"),
+                m_spec=parse_spec("bfloat16-sr"),
+                v_spec=parse_spec("e4m3-sr"),
+                update_path="fused", moments_packed=True)
+    params = {"w": jnp.asarray(np.random.default_rng(0)
+                               .standard_normal(300).astype(np.float32))}
+    grads = {"w": jnp.full((300,), 0.2, jnp.float32)}
+    state = opt.init(params, jax.random.PRNGKey(1))
+    params, state = opt.apply(params, grads, state)
+
+    mgr = CheckpointManager(str(tmp_path), fmt="bf16-sr")
+    mgr.save(1, {"params": params, "opt": state}, blocking=True)
+    _, back, _ = CheckpointManager(str(tmp_path)).restore()
+
+    p2a, s2a = opt.apply(params, grads, state)
+    p2b, s2b = opt.apply(back["params"], grads, back["opt"])
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), (p2a, s2a), (p2b, s2b))

@@ -269,6 +269,25 @@ _CHILD = (
 )
 
 
+# same toy run, but carrying w on the bf16 grid with packed low-precision
+# checkpoints (format 2, grid-coded shards) — the SIGKILL race must leave
+# either a complete packed checkpoint or none, never a half-written one
+_CHILD_PACKED = _CHILD.replace(
+    "w0 = jnp.ones((4,), jnp.float32)\n",
+    "from repro.core.rounding import parse_spec\n"
+    "snap = parse_spec('bfloat16-rn')\n"
+    "w0 = snap(jnp.ones((4,), jnp.float32))\n",
+).replace(
+    "    return (w - 0.1 * g, n + 1), {'loss': jnp.sum(g * g)}\n",
+    "    return (snap(w - 0.1 * g), n + 1), {'loss': jnp.sum(g * g)}\n",
+).replace(
+    "                      checkpoint_dir=ckpt_dir, log_every=5)\n",
+    "                      checkpoint_dir=ckpt_dir, log_every=5,\n"
+    "                      checkpoint_fmt='bf16-sr', checkpoint_shards=2)\n",
+)
+assert _CHILD_PACKED != _CHILD          # the replacements actually landed
+
+
 @pytest.mark.slow
 def test_sigkill_mid_async_save_then_bit_exact_resume(tmp_path):
     """Hard preemption: SIGKILL lands right after the step-10 async save
@@ -289,3 +308,38 @@ def test_sigkill_mid_async_save_then_bit_exact_resume(tmp_path):
                        env=env, capture_output=True, text=True, timeout=300)
     assert r.returncode == 0, r.stderr
     np.testing.assert_array_equal(np.load(out), _clean_final_w(tmp_path))
+
+
+@pytest.mark.slow
+def test_sigkill_mid_async_packed_save_then_bit_exact_resume(tmp_path):
+    """Same hard-preemption race against the format-2 packed checkpoint
+    writer: the sharded grid-coded files + checksums must be atomic under
+    SIGKILL, and the resumed run bit-exact."""
+    import json
+    env = dict(os.environ, PYTHONPATH=_SRC + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    ckpt = str(tmp_path / "ck")
+    out = str(tmp_path / "w.npy")
+    r = subprocess.run(
+        [sys.executable, "-c", _CHILD_PACKED, ckpt, out, "sigkill@10"],
+        env=env, capture_output=True, text=True, timeout=300)
+    assert r.returncode == -signal.SIGKILL, (r.returncode, r.stderr)
+    r = subprocess.run([sys.executable, "-c", _CHILD_PACKED, ckpt, out, ""],
+                       env=env, capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, r.stderr
+
+    # the clean reference with the same grid-snapped step function
+    clean_dir = str(tmp_path / "ck_clean")
+    clean_out = str(tmp_path / "w_clean.npy")
+    r = subprocess.run(
+        [sys.executable, "-c", _CHILD_PACKED, clean_dir, clean_out, ""],
+        env=env, capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, r.stderr
+    np.testing.assert_array_equal(np.load(out), np.load(clean_out))
+
+    # and the surviving checkpoints really are packed format 2
+    steps = [d for d in os.listdir(ckpt) if d.startswith("step_")]
+    with open(os.path.join(ckpt, sorted(steps)[-1], "meta.json")) as f:
+        meta = json.load(f)
+    assert meta["format"] == 2
+    assert any(e.get("packed") == "bfloat16" for e in meta["leaves"])
